@@ -1,0 +1,33 @@
+"""Shared benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, *args, warmup=2, iters=5, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.2f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+class Capture:
+    """Collects benchmark rows for bench_output.txt."""
+
+    def __init__(self):
+        self.rows: list[str] = []
+
+    def add(self, name, us, derived=""):
+        self.rows.append(row(name, us, derived))

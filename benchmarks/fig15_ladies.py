@@ -1,0 +1,38 @@
+"""Fig. 15 — feature-aggregation time with layer-wise (LADIES) vs
+neighborhood sampling, mmap-DGL vs BaM vs GIDS.
+
+Paper: GIDS 412x over DGL, 1.92x over BaM with LADIES."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import GIDSDataLoader, LoaderConfig, SAMSUNG_980PRO
+from repro.graph.datasets import IGB_FULL
+
+
+def agg_time(mode, sampler, iters=8):
+    g = IGB_FULL.materialize()
+    feats = np.zeros((g.num_nodes, 1), np.float32)
+    cfg = LoaderConfig(batch_size=256, fanouts=(10, 5),
+                       sampler=sampler, ladies_layer_sizes=(2048, 2048),
+                       mode=mode, cache_lines=1 << 13, window_depth=8,
+                       cbuf_fraction=0.1 if mode == "gids" else 0.0)
+    dl = GIDSDataLoader(g, feats, cfg, ssd=SAMSUNG_980PRO)
+    dl.store.feature_dim = IGB_FULL.feature_dim
+    ts = [dl.next_batch().prep_time_s for _ in range(iters)]
+    return float(np.mean(ts[2:]))
+
+
+def main():
+    for sampler in ("neighbor", "ladies"):
+        times = {m: agg_time(m, sampler) for m in ("mmap", "bam", "gids")}
+        row(f"fig15_{sampler}", times["gids"] * 1e6,
+            f"mmap_s={times['mmap']:.3f}_bam_s={times['bam']:.4f}"
+            f"_gids_s={times['gids']:.4f}"
+            f"_speedup_vs_mmap={times['mmap']/times['gids']:.0f}x"
+            f"_vs_bam={times['bam']/times['gids']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

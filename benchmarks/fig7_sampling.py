@@ -1,0 +1,34 @@
+"""Fig. 7 — graph sampling time, host vs device path, across graph scales
+(IGB tiny/small/medium stand-ins)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.graph.datasets import IGB_MEDIUM, IGB_SMALL, IGB_TINY
+from repro.sampling.neighbor import device_sample_blocks, host_sample_blocks
+
+
+def main(batch=512, fanouts=(10, 5)):
+    for spec in (IGB_TINY, IGB_SMALL, IGB_MEDIUM):
+        g = spec.materialize()
+        rng = np.random.default_rng(0)
+        seeds = rng.integers(0, g.num_nodes, batch)
+        t_host = timeit(lambda: host_sample_blocks(g, seeds, fanouts, rng),
+                        iters=3)
+        csr = g.to_device()
+        dseeds = jnp.asarray(seeds, jnp.int32)
+        samp = jax.jit(
+            lambda s, k: device_sample_blocks(csr, s, fanouts, k)[1])
+        key = jax.random.PRNGKey(0)
+        t_dev = timeit(lambda: samp(dseeds, key).block_until_ready(),
+                       iters=3)
+        row(f"fig7_sampling_{spec.name}", t_host * 1e6,
+            f"host_ms={t_host*1e3:.2f}_device_ms={t_dev*1e3:.2f}"
+            f"_speedup={t_host/t_dev:.2f}x_nodes={g.num_nodes}")
+
+
+if __name__ == "__main__":
+    main()

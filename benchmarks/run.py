@@ -1,0 +1,57 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows; `python -m benchmarks.run [--quick]`.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow E2E figures")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_request_rates, fig7_sampling,
+                            fig8_bandwidth_model, fig9_accumulator,
+                            fig10_constant_buffer, fig11_window_buffering,
+                            fig12_cache_size, fig13_e2e, fig15_ladies,
+                            roofline, tables)
+    suites = [
+        ("tables", tables.main),
+        ("fig3", fig3_request_rates.main),
+        ("fig7", fig7_sampling.main),
+        ("fig8", fig8_bandwidth_model.main),
+        ("fig9", fig9_accumulator.main),
+        ("fig10", fig10_constant_buffer.main),
+        ("fig11", fig11_window_buffering.main),
+        ("fig12", fig12_cache_size.main),
+        ("fig13_14", fig13_e2e.main),
+        ("fig15", fig15_ladies.main),
+        ("roofline", roofline.main),
+    ]
+    if args.quick:
+        suites = [s for s in suites if s[0] not in ("fig13_14", "fig3")]
+    if args.only:
+        suites = [s for s in suites if s[0] == args.only]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# suite {name} done in {time.time()-t0:.1f}s",
+                  flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# suite {name} FAILED", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,47 @@
+"""Tables 1/2/3/4 — system + dataset registries echoed for the record, and
+the kernel microbenchmarks (tiered gather / segment mean vs oracles)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.graph import datasets as D
+
+
+def main():
+    for spec in (D.OGBN_PAPERS100M, D.IGB_FULL, D.MAG240M, D.IGBH_FULL):
+        row(f"table2_{spec.name}", 0.0,
+            f"nodes={spec.num_nodes}_edges={spec.num_edges}"
+            f"_dim={spec.feature_dim}_hetero={spec.heterogeneous}"
+            f"_feature_TB={spec.feature_bytes/1e12:.2f}")
+    for spec in (D.IGB_TINY, D.IGB_SMALL, D.IGB_MEDIUM, D.IGB_LARGE):
+        row(f"table3_{spec.name}", 0.0,
+            f"nodes={spec.num_nodes}_edges={spec.num_edges}"
+            f"_exec_nodes={spec.exec_nodes}")
+
+    # kernel micro-bench (interpret mode on CPU: correctness-speed only)
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    slots = jnp.asarray(rng.integers(-1, 4096, 1024), jnp.int32)
+    cache = jnp.asarray(rng.standard_normal((4096, 1024)), jnp.float32)
+    staged = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.float32)
+    t_k = timeit(lambda: ops.tiered_gather(slots, cache, staged)
+                 .block_until_ready(), iters=3)
+    t_r = timeit(lambda: ops.tiered_gather(slots, cache, staged,
+                                           use_pallas=False)
+                 .block_until_ready(), iters=3)
+    row("kernel_tiered_gather", t_k * 1e6,
+        f"interpret_vs_oracle={t_k/t_r:.1f}x_rows=1024_dim=1024")
+
+    idx = jnp.asarray(rng.integers(0, 4096, (512, 10)), jnp.int32)
+    t_k = timeit(lambda: ops.segment_mean(idx, cache).block_until_ready(),
+                 iters=3)
+    t_r = timeit(lambda: ops.segment_mean(idx, cache, use_pallas=False)
+                 .block_until_ready(), iters=3)
+    row("kernel_segment_mean", t_k * 1e6,
+        f"interpret_vs_oracle={t_k/t_r:.1f}x_dst=512_fanout=10")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: the GIDS dataloader in 40 lines.
+
+Builds a synthetic power-law graph, turns on all three GIDS techniques
+(dynamic access accumulator, constant CPU buffer, window-buffered cache),
+and streams mini-batches, printing the tier split and modelled data-prep
+time vs the mmap baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import GIDSDataLoader, LoaderConfig, SAMSUNG_980PRO
+from repro.graph.synthetic import rmat_graph
+
+graph = rmat_graph(num_nodes=100_000, avg_degree=12, feature_dim=256,
+                   seed=0)
+features = np.random.default_rng(0).standard_normal(
+    (graph.num_nodes, 256)).astype(np.float32)
+
+print(f"graph: {graph.num_nodes:,} nodes, {graph.num_edges:,} edges, "
+      f"features {features.nbytes/2**20:.0f} MiB\n")
+
+for mode in ("mmap", "bam", "gids"):
+    loader = GIDSDataLoader(
+        graph, features,
+        LoaderConfig(batch_size=1024, fanouts=(10, 5), mode=mode,
+                     cache_lines=8192, window_depth=8, cbuf_fraction=0.1),
+        ssd=SAMSUNG_980PRO)
+    prep = []
+    for _ in range(10):
+        batch = loader.next_batch()
+        prep.append(batch.prep_time_s)
+    r = batch.report
+    hit = loader.store.cache.stats.hit_ratio if loader.store.cache else 0.0
+    print(f"[{mode:4s}] prep {np.mean(prep)*1e3:8.2f} ms/iter | "
+          f"tier split hbm={r.n_hbm_hits} host={r.n_host_hits} "
+          f"ssd={r.n_storage} | cache hit {hit:.2f} | "
+          f"lookahead depth {batch.merge_depth}")
+
+print("\nfeatures gathered for the last batch:", batch.features.shape)

@@ -1,0 +1,89 @@
+"""End-to-end driver: train a ~100M-parameter GraphSAGE on an IGB-style
+synthetic graph through the GIDS dataloader for a few hundred steps.
+
+The parameter count comes from the paper's regime (1024-d features, wide
+hidden layers): 1024x4096 + 4096x4096 x2 + ... ≈ 100M with --hidden 4096.
+
+    PYTHONPATH=src python examples/train_gnn_igb.py --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GIDSDataLoader, LoaderConfig, INTEL_OPTANE
+from repro.graph.synthetic import rmat_graph
+from repro.models.gnn import GNN, GNNConfig, hop_indices
+from repro.train import checkpoint as ckpt_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--nodes", type=int, default=100_000)
+    ap.add_argument("--feature-dim", type=int, default=1024)
+    ap.add_argument("--hidden", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    graph = rmat_graph(args.nodes, 12, args.feature_dim, seed=0,
+                       name="igb-synthetic")
+    n_classes = 47                     # IGB label space
+    labels_all = rng.integers(0, n_classes, graph.num_nodes)
+    feats = (np.eye(n_classes, args.feature_dim)[labels_all] * 2.0
+             + 0.5 * rng.standard_normal(
+                 (graph.num_nodes, args.feature_dim))).astype(np.float32)
+
+    cfg = GNNConfig(model="sage", in_dim=args.feature_dim,
+                    hidden_dim=args.hidden, num_classes=n_classes,
+                    fanouts=(10, 5))
+    gnn = GNN(cfg)
+    params = gnn.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"GraphSAGE params: {n_params/1e6:.1f}M "
+          f"(hidden {args.hidden}, features {args.feature_dim})")
+
+    loader = GIDSDataLoader(
+        graph, feats,
+        LoaderConfig(batch_size=args.batch, fanouts=cfg.fanouts,
+                     mode="gids", cache_lines=1 << 14, window_depth=8,
+                     cbuf_fraction=0.1),
+        ssd=INTEL_OPTANE)
+
+    @jax.jit
+    def step(p, f, h0, h1, h2, y, lr):
+        loss, grads = jax.value_and_grad(gnn.loss)(p, f, [h0, h1, h2], y)
+        p = jax.tree.map(lambda a, g: a - lr * g, p, grads)
+        return p, loss
+
+    t0 = time.time()
+    losses, prep_times = [], []
+    for it in range(args.steps):
+        b = loader.next_batch()
+        hi = [jnp.asarray(i) for i in hop_indices(b.blocks)]
+        y = jnp.asarray(labels_all[b.blocks.seeds])
+        params, loss = step(params, jnp.asarray(b.features),
+                            hi[0], hi[1], hi[2], y,
+                            jnp.float32(args.lr))
+        losses.append(float(loss))
+        prep_times.append(b.prep_time_s)
+        if it % 25 == 0 or it == args.steps - 1:
+            print(f"iter {it:4d} loss {losses[-1]:.4f} "
+                  f"prep {np.mean(prep_times[-25:])*1e3:.2f} ms "
+                  f"cache_hit {loader.store.cache.stats.hit_ratio:.2f} "
+                  f"redirect {loader.accumulator.redirect_rate:.2f}")
+        if args.ckpt_dir and it and it % 100 == 0:
+            ckpt_lib.save(args.ckpt_dir, it, params,
+                          {"loader": loader.state_dict()})
+
+    print(f"\n{args.steps} steps in {time.time()-t0:.1f}s | "
+          f"loss {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Train any of the 10 assigned LM architectures (reduced config) with the
+GIDS-fed token pipeline, checkpoint/restart and WSD or cosine schedule:
+
+    PYTHONPATH=src python examples/train_lm.py --arch minicpm_2b \
+        --steps 200 --schedule wsd
+
+This is a thin veneer over the production driver (repro.launch.train);
+kill it mid-run and rerun with the same --ckpt-dir to watch it resume.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--arch", "minicpm_2b", "--steps", "200",
+                            "--schedule", "wsd", "--batch", "8",
+                            "--seq", "128", "--ckpt-dir", "/tmp/lm_ckpt"]
+    cmd = [sys.executable, "-m", "repro.launch.train", "--reduced"] + args
+    sys.exit(subprocess.call(cmd, env={
+        **__import__("os").environ,
+        "PYTHONPATH": str(ROOT / "src"),
+    }))

@@ -1,0 +1,20 @@
+"""qwen2-1.5b [dense] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936; QKV bias. [arXiv:2407.10671; hf]
+"""
+import dataclasses
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-1.5b", family="dense",
+        num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2,
+        d_ff=8960, vocab_size=151936,
+        qkv_bias=True, tie_embeddings=True,
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), num_layers=3, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=512, vocab_pad_to=64, remat=False)

@@ -1,0 +1,19 @@
+# The paper's primary contribution: the GIDS dataloader — storage-direct
+# feature aggregation with dynamic access accumulation (§3.2), constant
+# host buffer (§3.3), and window-buffered device software cache (§3.4).
+from .accumulator import AccumulatorConfig, DynamicAccessAccumulator
+from .constant_buffer import ConstantBuffer
+from .feature_store import FeatureStore, GatherReport
+from .pipeline import Batch, GIDSDataLoader, LoaderConfig
+from .software_cache import CacheStats, WindowBufferedCache, run_trace
+from .storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO, SSDSpec,
+                          StorageTimeline, model_burst, required_accesses,
+                          simulate_burst)
+
+__all__ = [
+    "AccumulatorConfig", "DynamicAccessAccumulator", "ConstantBuffer",
+    "FeatureStore", "GatherReport", "Batch", "GIDSDataLoader", "LoaderConfig",
+    "CacheStats", "WindowBufferedCache", "run_trace", "INTEL_OPTANE",
+    "SAMSUNG_980PRO", "SSDSpec", "StorageTimeline", "model_burst",
+    "required_accesses", "simulate_burst",
+]

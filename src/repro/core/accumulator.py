@@ -1,0 +1,76 @@
+"""Dynamic storage access accumulator (paper §3.2).
+
+The accumulator exploits the logical independence of (sampling, aggregation)
+from the training stage: it runs sampling *ahead* of training and merges the
+storage requests of consecutive mini-batch data preparations until the number
+of outstanding storage accesses crosses the analytic threshold (Eq. 2-3)
+needed to hit the target fraction of peak SSD throughput.
+
+Redirected accesses (GPU-cache hits, constant-buffer hits) do not occupy SSD
+queue slots, so the controller tracks the measured redirection rate and
+re-inflates the merge depth accordingly — this is the "dynamic" part.
+
+TPU adaptation: "outstanding storage accesses" become outstanding prefetch
+requests in the host->device staging pipeline; the same Little's-law model
+applies with the staging link's latency/throughput constants, and the merge
+depth doubles as the dispatch-ahead depth of the async pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .storage_sim import SSDSpec, required_accesses
+
+
+@dataclasses.dataclass
+class AccumulatorConfig:
+    target_efficiency: float = 0.95
+    n_ssd: int = 1
+    max_merge_iters: int = 16       # buffer-memory guard (paper: "excessive
+                                    # buffer memory usage" bound)
+    ema: float = 0.9                # smoothing for the redirection estimate
+
+
+class DynamicAccessAccumulator:
+    """Decides how many future iterations' sampling to merge.
+
+    update(n_sampled, n_redirected) feeds per-iteration telemetry;
+    merge_depth(requests_per_iter) returns the number of iterations whose
+    data preparation should be in flight simultaneously.
+    """
+
+    def __init__(self, spec: SSDSpec, config: AccumulatorConfig | None = None):
+        self.spec = spec
+        self.config = config or AccumulatorConfig()
+        self.threshold = required_accesses(
+            spec, self.config.target_efficiency, self.config.n_ssd)
+        self._redirect_rate = 0.0
+
+    # -- telemetry ----------------------------------------------------------
+    def update(self, n_sampled: int, n_redirected: int) -> None:
+        if n_sampled <= 0:
+            return
+        r = n_redirected / n_sampled
+        a = self.config.ema
+        self._redirect_rate = a * self._redirect_rate + (1 - a) * r
+
+    @property
+    def redirect_rate(self) -> float:
+        return self._redirect_rate
+
+    # -- policy --------------------------------------------------------------
+    def storage_fraction(self) -> float:
+        return max(1.0 - self._redirect_rate, 1e-3)
+
+    def merge_depth(self, requests_per_iter: int) -> int:
+        """Iterations to merge so that outstanding *storage-bound* requests
+        >= threshold: depth * requests * (1 - redirect_rate) >= N_access."""
+        if requests_per_iter <= 0:
+            return 1
+        eff_per_iter = requests_per_iter * self.storage_fraction()
+        depth = int(-(-self.threshold // max(eff_per_iter, 1.0)))  # ceil
+        return max(1, min(depth, self.config.max_merge_iters))
+
+    def outstanding(self, requests_per_iter: int) -> int:
+        d = self.merge_depth(requests_per_iter)
+        return int(d * requests_per_iter * self.storage_fraction())

@@ -1,0 +1,141 @@
+"""Jittable (device-resident) twin of the window-buffered software cache.
+
+TPU adaptation: on the GPU, BaM cache metadata lives in device memory and is
+mutated by thousands of threads; on TPU the idiomatic equivalent is cache
+metadata as jit-carried state (tags / reuse / slot arrays in HBM) updated by
+a compiled step function, so cache maintenance fuses into the input pipeline
+step and never round-trips to the host.
+
+Semantics match `software_cache.WindowBufferedCache(evict="first")` exactly
+(property-tested).  Padding node id = -1 (ignored).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_HASH_MULT = 0x9E3779B9  # 32-bit Fibonacci hash, matches the numpy twin
+
+
+class CacheState(NamedTuple):
+    tags: jnp.ndarray    # (num_sets, ways) int32 node id, -1 = empty
+    reuse: jnp.ndarray   # (num_sets, ways) int32 future-reuse counter
+    slots: jnp.ndarray   # (num_sets, ways) int32 backing-row index in the
+                         # HBM feature cache (constant layout: set*ways+way)
+    hits: jnp.ndarray    # () int64 running counters
+    misses: jnp.ndarray  # ()
+    bypasses: jnp.ndarray  # ()
+
+
+def init_cache(num_lines: int, ways: int = 8) -> CacheState:
+    assert num_lines % ways == 0
+    num_sets = num_lines // ways
+    return CacheState(
+        tags=jnp.full((num_sets, ways), -1, jnp.int32),
+        reuse=jnp.zeros((num_sets, ways), jnp.int32),
+        slots=jnp.arange(num_lines, dtype=jnp.int32).reshape(num_sets, ways),
+        hits=jnp.zeros((), jnp.int64),
+        misses=jnp.zeros((), jnp.int64),
+        bypasses=jnp.zeros((), jnp.int64),
+    )
+
+
+def _set_of(ids: jnp.ndarray, num_sets: int) -> jnp.ndarray:
+    h = (ids.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)) >> jnp.uint32(8)
+    return (h % jnp.uint32(num_sets)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=())
+def push_window(state: CacheState, nodes: jnp.ndarray) -> CacheState:
+    """Bump reuse counters for cached lines appearing in a future batch.
+    `nodes` is deduplicated, padded with -1."""
+    num_sets = state.tags.shape[0]
+    sets = _set_of(nodes, num_sets)
+
+    def body(i, st):
+        tags, reuse = st
+        n, s = nodes[i], sets[i]
+        match = (tags[s] == n) & (n >= 0)
+        inc = match.astype(reuse.dtype)
+        return tags, reuse.at[s].add(inc)
+
+    tags, reuse = jax.lax.fori_loop(0, nodes.shape[0], body,
+                                    (state.tags, state.reuse))
+    return state._replace(tags=tags, reuse=reuse)
+
+
+def access(state: CacheState, nodes: jnp.ndarray,
+           future_counts: jnp.ndarray) -> tuple[CacheState, jnp.ndarray,
+                                                jnp.ndarray]:
+    """Lookup + fill for the current batch (already popped off the window).
+
+    future_counts[i] = occurrences of nodes[i] in the remaining window
+    (computed by the host pipeline or by `count_in_window`).  Returns
+    (new_state, hit_mask, slot_or_minus1) where slot is the backing row in
+    the HBM feature cache (for hits and successful fills).
+    """
+    num_sets, ways = state.tags.shape
+    sets = _set_of(nodes, num_sets)
+    B = nodes.shape[0]
+
+    def body(i, carry):
+        tags, reuse, hits, misses, bypasses, hit_mask, slot_out = carry
+        n, s, fc = nodes[i], sets[i], future_counts[i]
+        valid = n >= 0
+        row_tags = tags[s]
+        row_reuse = reuse[s]
+        match = row_tags == n
+        is_hit = valid & jnp.any(match)
+        way_hit = jnp.argmax(match)
+        # decrement consumed reservation on hit
+        new_reuse_hit = row_reuse.at[way_hit].set(
+            jnp.maximum(row_reuse[way_hit] - 1, 0))
+        # fill path: first empty way, else first safe (reuse==0) way
+        empty = row_tags == -1
+        safe = row_reuse == 0
+        has_empty = jnp.any(empty)
+        has_safe = jnp.any(safe)
+        way_fill = jnp.where(has_empty, jnp.argmax(empty), jnp.argmax(safe))
+        can_fill = valid & ~is_hit & (has_empty | has_safe)
+        new_tags_fill = row_tags.at[way_fill].set(n)
+        new_reuse_fill = row_reuse.at[way_fill].set(fc)
+
+        row_tags2 = jnp.where(can_fill, new_tags_fill, row_tags)
+        row_reuse2 = jnp.where(is_hit, new_reuse_hit,
+                               jnp.where(can_fill, new_reuse_fill, row_reuse))
+        tags = tags.at[s].set(jnp.where(valid, row_tags2, row_tags))
+        reuse = reuse.at[s].set(jnp.where(valid, row_reuse2, row_reuse))
+
+        hits += is_hit.astype(jnp.int64)
+        misses += (valid & ~is_hit).astype(jnp.int64)
+        bypasses += (valid & ~is_hit & ~(has_empty | has_safe)).astype(jnp.int64)
+        hit_mask = hit_mask.at[i].set(is_hit)
+        way = jnp.where(is_hit, way_hit, way_fill)
+        slot = jnp.where(valid & (is_hit | can_fill),
+                         state.slots[s, way], -1)
+        slot_out = slot_out.at[i].set(slot)
+        return tags, reuse, hits, misses, bypasses, hit_mask, slot_out
+
+    init = (state.tags, state.reuse, state.hits, state.misses, state.bypasses,
+            jnp.zeros(B, bool), jnp.full(B, -1, jnp.int32))
+    tags, reuse, hits, misses, bypasses, hit_mask, slots = \
+        jax.lax.fori_loop(0, B, body, init)
+    new_state = state._replace(tags=tags, reuse=reuse, hits=hits,
+                               misses=misses, bypasses=bypasses)
+    return new_state, hit_mask, slots
+
+
+access = jax.jit(access)
+
+
+@jax.jit
+def count_in_window(nodes: jnp.ndarray, window: jnp.ndarray) -> jnp.ndarray:
+    """future_counts[i] = #occurrences of nodes[i] in `window` (W, B) of
+    future batches (padded with -1)."""
+    flat = window.reshape(-1)
+    eq = nodes[:, None] == flat[None, :]
+    eq &= (nodes >= 0)[:, None]
+    return eq.sum(axis=1).astype(jnp.int32)

@@ -1,0 +1,58 @@
+"""Device-resident GIDS feature tier: the fully-jittable composition of
+
+    cache_jax (window-buffered cache metadata, HBM)      §3.4
+  + an HBM row store (the BaM software cache's data)
+  + the tiered_gather Pallas kernel (slot-indirect row DMA)
+
+One `device_gather` call = lookup/fill metadata -> write missed rows from
+the host-staged buffer into their assigned lines -> gather every requested
+row from (cache | staged).  This is the TPU rendering of the paper's
+GPU-thread gather loop: it fuses into the surrounding step, so cache
+maintenance costs no host round-trip.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache_jax
+from repro.kernels import ops
+
+
+class DeviceStore(NamedTuple):
+    cache: cache_jax.CacheState
+    rows: jnp.ndarray               # (num_lines, D) HBM row storage
+
+
+def init_store(num_lines: int, dim: int, ways: int = 8,
+               dtype=jnp.float32) -> DeviceStore:
+    return DeviceStore(cache=cache_jax.init_cache(num_lines, ways),
+                       rows=jnp.zeros((num_lines, dim), dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def device_gather(store: DeviceStore, ids: jnp.ndarray,
+                  staged: jnp.ndarray, future_counts: jnp.ndarray,
+                  use_pallas: bool = True):
+    """ids: (B,) node ids (-1 pad); staged: (B, D) host-fetched rows for
+    potential misses; future_counts: window-buffer reuse counts.
+
+    Returns (new_store, rows (B, D), hit_mask)."""
+    state, hits, slots = cache_jax.access(store.cache, ids, future_counts)
+    # fill: missed rows with an assigned line land in the row store
+    fill_slots = jnp.where(~hits & (slots >= 0) & (ids >= 0),
+                           slots, store.rows.shape[0])      # OOB -> dropped
+    rows_store = store.rows.at[fill_slots].set(
+        staged.astype(store.rows.dtype), mode="drop")
+    # serve: hits from the row store, misses straight from staging
+    gather_slots = jnp.where(hits, slots, -1)
+    out = ops.tiered_gather(gather_slots, rows_store, staged,
+                            use_pallas=use_pallas)
+    return DeviceStore(cache=state, rows=rows_store), out, hits
+
+
+push_window = cache_jax.push_window       # re-export: same metadata
+count_in_window = cache_jax.count_in_window

@@ -1,0 +1,97 @@
+"""Two-tier feature store — the data plane of the GIDS dataloader.
+
+Tier 0: device software cache (HBM)      — window-buffered, §3.4
+Tier 1: constant host buffer (pinned)    — hot nodes, §3.3
+Tier 2: storage (memmap file or array)   — everything, §3.1
+
+`gather()` is a *real* data path: it returns the actual feature rows (from a
+numpy memmap standing in for the SSD namespace) and a `GatherReport` with the
+tier split, which the storage simulator prices for benchmarks and the
+accumulator consumes as telemetry.  The device-side gather of cached rows is
+performed by the `tiered_gather` Pallas kernel when running jitted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+
+from .constant_buffer import ConstantBuffer
+from .software_cache import WindowBufferedCache
+
+
+@dataclasses.dataclass
+class GatherReport:
+    n_requests: int
+    n_hbm_hits: int
+    n_host_hits: int
+    n_storage: int
+    feat_bytes: int
+
+    @property
+    def redirected(self) -> int:
+        return self.n_hbm_hits + self.n_host_hits
+
+
+class FeatureStore:
+    def __init__(self, features: np.ndarray,
+                 cache: WindowBufferedCache | None = None,
+                 constant_buffer: ConstantBuffer | None = None):
+        self.features = features
+        self.cache = cache
+        self.cbuf = constant_buffer
+        self.feature_dim = features.shape[1]
+        self.itemsize = features.dtype.itemsize
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def memmap(cls, path: str, num_nodes: int, dim: int,
+               dtype=np.float32, create: bool = False, seed: int = 0,
+               **kw) -> "FeatureStore":
+        """Features in a file accessed via memmap — the storage namespace.
+        (The mmap *baseline dataloader* also reads through this; GIDS differs
+        in the orchestration around it, not the bytes.)"""
+        mode = "w+" if create else "r+"
+        arr = np.memmap(path, dtype=dtype, mode=mode, shape=(num_nodes, dim))
+        if create:
+            rng = np.random.default_rng(seed)
+            step = max(1, num_nodes // 64)
+            for i in range(0, num_nodes, step):
+                j = min(num_nodes, i + step)
+                arr[i:j] = rng.standard_normal((j - i, dim), dtype=np.float32)
+            arr.flush()
+        return cls(arr, **kw)
+
+    @classmethod
+    def synthetic(cls, num_nodes: int, dim: int, dtype=np.float32,
+                  seed: int = 0, **kw) -> "FeatureStore":
+        rng = np.random.default_rng(seed)
+        feats = rng.standard_normal((num_nodes, dim)).astype(dtype)
+        return cls(feats, **kw)
+
+    # -- data plane -----------------------------------------------------------
+    def gather(self, node_ids: np.ndarray) -> tuple[np.ndarray, GatherReport]:
+        """Fetch feature rows for (deduplicated) node_ids through the tiers."""
+        n = len(node_ids)
+        hbm_hits = np.zeros(n, dtype=bool)
+        if self.cache is not None:
+            hbm_hits = self.cache.access(node_ids)
+        host_hits = np.zeros(n, dtype=bool)
+        if self.cbuf is not None:
+            host_hits = ~hbm_hits & self.cbuf.redirect_mask(node_ids)
+        n_storage = int(n - hbm_hits.sum() - host_hits.sum())
+        rows = np.asarray(self.features[node_ids])
+        report = GatherReport(
+            n_requests=n,
+            n_hbm_hits=int(hbm_hits.sum()),
+            n_host_hits=int(host_hits.sum()),
+            n_storage=n_storage,
+            feat_bytes=self.feature_dim * self.itemsize,
+        )
+        return rows, report
+
+    def push_window(self, future_nodes: np.ndarray) -> None:
+        if self.cache is not None:
+            self.cache.push_window(future_nodes)

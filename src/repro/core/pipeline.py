@@ -1,0 +1,183 @@
+"""GIDSDataLoader — the end-to-end data-preparation pipeline (paper Fig. 1).
+
+Per training iteration the loader must deliver (sampled blocks, gathered
+features).  Orchestration:
+
+  * sampling runs `merge_depth` iterations AHEAD of training (decoupled —
+    §3.2): a deque of pre-sampled batches doubles as the cache's window
+    buffer and as the accumulator's outstanding-request pool;
+  * the accumulator recomputes the merge depth from live telemetry
+    (requests/iter, redirection rate);
+  * feature gathers flow through the two-tier store (HBM cache + constant
+    host buffer + storage);
+  * the storage timeline simulator prices each batch (benchmarks); the
+    actual bytes are returned for real training.
+
+The same class drives the mmap/BaM baselines (Fig. 13/14) via `mode`:
+  mode="mmap": CPU sampling, no cache, no cbuf, page-fault-priced storage
+  mode="bam" : GPU-style sampling + plain cache (window=0), no cbuf
+  mode="gids": everything on
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.sampling.neighbor import host_sample_blocks, SampledBlocks
+from repro.sampling.ladies import ladies_sample_blocks
+from .accumulator import DynamicAccessAccumulator, AccumulatorConfig
+from .constant_buffer import ConstantBuffer
+from .feature_store import FeatureStore, GatherReport
+from .software_cache import WindowBufferedCache
+from .storage_sim import SSDSpec, StorageTimeline, INTEL_OPTANE
+
+
+@dataclasses.dataclass
+class LoaderConfig:
+    batch_size: int = 4096
+    fanouts: Sequence[int] = (10, 5, 5)       # 3 sampling layers (paper §4.1)
+    sampler: str = "neighbor"                  # or "ladies"
+    ladies_layer_sizes: Sequence[int] = (512, 512, 512)
+    mode: str = "gids"                         # gids | bam | mmap
+    window_depth: int = 8                      # paper default
+    cache_lines: int = 1 << 15                 # 8GB @4KB in paper; scaled here
+    cache_ways: int = 8
+    cbuf_fraction: float = 0.1                 # 10% of dataset (paper default)
+    cbuf_selection: str = "pagerank"
+    target_efficiency: float = 0.95
+    n_ssd: int = 1
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Batch:
+    blocks: SampledBlocks
+    features: np.ndarray          # rows for blocks.all_nodes
+    report: GatherReport
+    prep_time_s: float            # modelled data-preparation time
+    merge_depth: int
+
+
+class GIDSDataLoader:
+    def __init__(self, graph: CSRGraph, features: np.ndarray,
+                 config: LoaderConfig | None = None,
+                 ssd: SSDSpec = INTEL_OPTANE,
+                 train_ids: np.ndarray | None = None):
+        self.graph = graph
+        self.config = cfg = config or LoaderConfig()
+        self.rng = np.random.default_rng(cfg.seed)
+        self.train_ids = (train_ids if train_ids is not None
+                          else np.arange(graph.num_nodes))
+        cache = None
+        cbuf = None
+        if cfg.mode in ("gids", "bam"):
+            window = cfg.window_depth if cfg.mode == "gids" else 0
+            cache = WindowBufferedCache(cfg.cache_lines, cfg.cache_ways,
+                                        window_depth=window, seed=cfg.seed)
+        if cfg.mode == "gids" and cfg.cbuf_fraction > 0:
+            cbuf = ConstantBuffer.from_graph(graph, cfg.cbuf_fraction,
+                                             selection=cfg.cbuf_selection,
+                                             seed=cfg.seed)
+        self.store = FeatureStore(features, cache=cache, constant_buffer=cbuf)
+        self.accumulator = DynamicAccessAccumulator(
+            ssd, AccumulatorConfig(target_efficiency=cfg.target_efficiency,
+                                   n_ssd=cfg.n_ssd,
+                                   max_merge_iters=max(cfg.window_depth, 8)))
+        self.timeline = StorageTimeline(ssd, cfg.n_ssd)
+        self._lookahead: deque[SampledBlocks] = deque()
+        self._win_idx = 0   # lookahead entries already pushed to cache window
+        self._requests_per_iter = 0
+
+    # -- sampling -------------------------------------------------------------
+    def _sample_one(self) -> SampledBlocks:
+        cfg = self.config
+        seeds = self.rng.choice(self.train_ids, size=cfg.batch_size,
+                                replace=len(self.train_ids) < cfg.batch_size)
+        if cfg.sampler == "neighbor":
+            return host_sample_blocks(self.graph, seeds, cfg.fanouts, self.rng)
+        elif cfg.sampler == "ladies":
+            return ladies_sample_blocks(self.graph, seeds,
+                                        cfg.ladies_layer_sizes, self.rng)
+        raise ValueError(cfg.sampler)
+
+    def _refill_lookahead(self) -> int:
+        """Run sampling ahead until the accumulator's merge depth is covered
+        (GIDS/BaM modes; mmap samples synchronously, depth 1)."""
+        if self.config.mode == "mmap":
+            depth = 1
+        else:
+            depth = self.accumulator.merge_depth(
+                max(self._requests_per_iter, 1))
+            depth = max(depth, self.config.window_depth
+                        if self.config.mode == "gids" else 1)
+        while len(self._lookahead) < depth:
+            # snapshot the sampler PRNG before sampling so a checkpoint
+            # resumes at the logical consumption point, not the sampling
+            # frontier (the lookahead queue is rebuilt deterministically)
+            snap = {"rng": self.rng.bit_generator.state,
+                    "requests_per_iter": self._requests_per_iter}
+            self._lookahead.append((snap, self._sample_one()))
+        self._sync_window()
+        return depth
+
+    def _sync_window(self) -> None:
+        """Keep the cache's window buffer = first `window_depth` lookahead
+        entries.  The lookahead may run deeper than the window (accumulator
+        merge depth > window depth); extra batches are sampled-ahead only."""
+        cache = self.store.cache
+        if cache is None or cache.window_depth == 0:
+            return
+        while (len(cache.window) < cache.window_depth
+               and self._win_idx < len(self._lookahead)):
+            self.store.push_window(
+                self._lookahead[self._win_idx][1].all_nodes)
+            self._win_idx += 1
+
+    # -- iteration -------------------------------------------------------------
+    def __iter__(self) -> Iterator[Batch]:
+        while True:
+            yield self.next_batch()
+
+    def next_batch(self) -> Batch:
+        depth = self._refill_lookahead()
+        _, blocks = self._lookahead.popleft()
+        self._win_idx = max(0, self._win_idx - 1)
+        self._requests_per_iter = blocks.num_requests
+        rows, report = self.store.gather(blocks.all_nodes)
+        self.accumulator.update(report.n_requests, report.redirected)
+
+        outstanding = self.accumulator.outstanding(blocks.num_requests)
+        if self.config.mode == "mmap":
+            # page-cache hit means the row was touched recently: approximate
+            # with the cbuf-free, cache-free split — everything is storage on
+            # first touch; the timeline prices fault overheads.
+            t = self.timeline.mmap_batch_time(
+                n_storage=report.n_storage + report.n_host_hits
+                + report.n_hbm_hits,
+                n_page_cache=0, feat_bytes=report.feat_bytes)
+        else:
+            t = self.timeline.gids_batch_time(
+                n_storage=report.n_storage, n_host=report.n_host_hits,
+                n_hbm=report.n_hbm_hits, feat_bytes=report.feat_bytes,
+                outstanding=outstanding)
+        return Batch(blocks=blocks, features=rows, report=report,
+                     prep_time_s=t, merge_depth=depth)
+
+    # -- state for checkpoint/restart (fault tolerance) -----------------------
+    def state_dict(self) -> dict:
+        if self._lookahead:
+            return dict(self._lookahead[0][0])
+        return {"rng": self.rng.bit_generator.state,
+                "requests_per_iter": self._requests_per_iter}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.rng.bit_generator.state = state["rng"]
+        self._requests_per_iter = state["requests_per_iter"]
+        self._lookahead.clear()
+        self._win_idx = 0
+        if self.store.cache is not None:
+            self.store.cache.window.clear()

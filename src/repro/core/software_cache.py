@@ -1,0 +1,169 @@
+"""Window-buffered software-defined cache (paper §3.4, Fig. 6).
+
+BaM's application-defined GPU cache uses random eviction; GIDS's window
+buffering looks *ahead* at the node IDs already sampled for the next W
+mini-batches (sampling runs ahead of training — see accumulator) and pins
+cache lines that will be reused:
+
+  1. window buffer holds sampled node IDs of the next W iterations
+  2. the incoming batch is compared against the window
+  3. per-node future-reuse counts are derived
+  4. cache metadata stores the counter; counter > 0 == "USE" (un-evictable)
+  5. each reuse decrements; at 0 the line returns to "safe to evict"
+
+This module is the *reference* implementation (numpy, set-associative).  A
+jittable JAX twin lives in `cache_jax.py`; property tests assert agreement.
+
+Geometry: `num_sets x ways` direct-indexed by `node_id % num_sets` (node ids
+are uniform-hashed upstream by the RMAT generator's id scrambling; a cheap
+multiplicative hash decorrelates pathological strides).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+# 32-bit Fibonacci hash (shared bit-exactly with the JAX twin, which runs
+# with x64 disabled)
+_HASH_MULT = np.uint32(0x9E3779B9)
+
+
+def _hash_ids(ids: np.ndarray, num_sets: int) -> np.ndarray:
+    with np.errstate(over="ignore"):
+        h = (ids.astype(np.uint32) * _HASH_MULT) >> np.uint32(8)
+    return (h % np.uint32(num_sets)).astype(np.int64)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    fills: int = 0
+    bypasses: int = 0   # miss with no evictable way (contention)
+    evictions: int = 0
+
+    @property
+    def accesses(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.hits / self.accesses if self.accesses else 0.0
+
+
+class WindowBufferedCache:
+    """Set-associative software cache with future-reuse pinning.
+
+    window_depth = 0 degenerates to the BaM baseline (random eviction,
+    no pinning) — exactly the paper's Fig. 11 baseline.
+    """
+
+    def __init__(self, num_lines: int, ways: int = 8, window_depth: int = 0,
+                 seed: int = 0, evict: str = "random"):
+        assert num_lines % ways == 0
+        assert evict in ("random", "first")
+        self.num_sets = num_lines // ways
+        self.ways = ways
+        self.window_depth = window_depth
+        self.evict = evict
+        self.tags = np.full((self.num_sets, ways), -1, dtype=np.int64)
+        self.reuse = np.zeros((self.num_sets, ways), dtype=np.int64)
+        self.window: deque[np.ndarray] = deque()
+        self.stats = CacheStats()
+        self._rng = np.random.default_rng(seed)
+
+    # -- window management ---------------------------------------------------
+    def push_window(self, future_nodes: np.ndarray) -> None:
+        """Insert the (deduplicated) sampled node list of a *future*
+        iteration (Fig. 6 step 1).  Reuse counters of already-cached lines
+        are incremented (steps 2-5): counter > 0 == "USE" state."""
+        if self.window_depth == 0:
+            return
+        self.window.append(future_nodes)
+        assert len(self.window) <= self.window_depth, "window overfull"
+        self._bump_counters(future_nodes, +1)
+
+    def _bump_counters(self, nodes: np.ndarray, delta: int) -> None:
+        sets = _hash_ids(nodes, self.num_sets)
+        for s, n in zip(sets, nodes):
+            w = np.nonzero(self.tags[s] == n)[0]
+            if len(w):
+                self.reuse[s, w[0]] = max(0, self.reuse[s, w[0]] + delta)
+
+    def _future_count(self, node: int) -> int:
+        return sum(int((w == node).sum()) for w in self.window)
+
+    # -- access path -----------------------------------------------------------
+    def access(self, nodes: np.ndarray) -> np.ndarray:
+        """Process one mini-batch's (deduplicated) feature requests.
+
+        Invariant: on entry the window's front is this very batch (it was
+        pushed while still in the future).  It leaves the window now; its
+        counter contributions are consumed by the per-node decrements below
+        ("the counter value is decreased each time the node is reused during
+        the feature aggregation stage"), so the pop does not bulk-decrement.
+        Returns the hit mask."""
+        if self.window_depth > 0 and self.window:
+            self.window.popleft()
+        sets = _hash_ids(nodes, self.num_sets)
+        hits = np.zeros(len(nodes), dtype=bool)
+        for i, (s, n) in enumerate(zip(sets, nodes)):
+            ways = self.tags[s]
+            w = np.nonzero(ways == n)[0]
+            if len(w):
+                hits[i] = True
+                self.stats.hits += 1
+                j = int(w[0])
+                self.reuse[s, j] = max(0, int(self.reuse[s, j]) - 1)
+                continue
+            self.stats.misses += 1
+            self._fill(s, int(n))
+        return hits
+
+    def _fill(self, s: int, node: int) -> None:
+        ways = self.tags[s]
+        empty = np.nonzero(ways == -1)[0]
+        if len(empty):
+            w = int(empty[0])
+        else:
+            safe = np.nonzero(self.reuse[s] == 0)[0]
+            if len(safe) == 0:
+                self.stats.bypasses += 1   # all ways pinned: serve uncached
+                return
+            # random among safe ways (paper: BaM random eviction within the
+            # safe-to-evict set); "first" is the deterministic twin used to
+            # cross-validate against the jittable JAX implementation.
+            w = int(self._rng.choice(safe)) if self.evict == "random" \
+                else int(safe[0])
+            self.stats.evictions += 1
+        self.tags[s, w] = node
+        self.stats.fills += 1
+        if self.window_depth > 0:
+            self.reuse[s, w] = self._future_count(node)
+        else:
+            self.reuse[s, w] = 0
+
+    # -- introspection ---------------------------------------------------------
+    def pinned_lines(self) -> int:
+        return int((self.reuse > 0).sum())
+
+    def occupancy(self) -> float:
+        return float((self.tags >= 0).mean())
+
+
+def run_trace(cache: WindowBufferedCache, batches: list[np.ndarray]
+              ) -> CacheStats:
+    """Feed a trace of per-iteration (deduplicated) node lists through the
+    cache with look-ahead: prime the window with the first W batches (the
+    sampler runs W iterations ahead — accumulator §3.2 makes this free),
+    then each access pops itself off the front and pushes batch i+W."""
+    W = cache.window_depth
+    for b in batches[:W]:
+        cache.push_window(b)
+    for i, b in enumerate(batches):
+        cache.access(b)
+        if W > 0 and i + W < len(batches):
+            cache.push_window(batches[i + W])
+    return cache.stats

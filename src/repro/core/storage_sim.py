@@ -1,0 +1,140 @@
+"""Storage device models (paper §4.2, Table 1 constants).
+
+No NVMe devices exist in this container, so benchmarks run against a
+discrete-event simulator parameterised with the paper's measured constants.
+The *algorithms* under test (accumulator, cache, constant buffer) are real;
+only the device timing is modelled.
+
+Units: seconds, bytes. IO granularity is the 4 KB cache-line the paper uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDSpec:
+    name: str
+    peak_iops: float          # 4KB reads / s / SSD
+    latency_s: float          # device read latency
+    latency_cv: float = 0.15  # coefficient of variation for the event sim
+
+    @property
+    def peak_bw(self) -> float:
+        return self.peak_iops * IO_BYTES
+
+
+IO_BYTES = 4096
+# Paper §4.2: Optane 1.5M IOPs / 11us; 980Pro 700K IOPs / 324us.
+# +25us kernel-launch/init overhead (T_i add-on), 5us termination.
+INTEL_OPTANE = SSDSpec("intel-optane", peak_iops=1.5e6, latency_s=11e-6)
+SAMSUNG_980PRO = SSDSpec("samsung-980pro", peak_iops=0.7e6, latency_s=324e-6)
+T_INIT_SW = 25e-6
+T_TERM = 5e-6
+
+PCIE_GEN4_BW = 32e9          # GPU ingress (paper: ~32 GB/s)
+HOST_DRAM_BW = 100e9         # constant-buffer service bandwidth
+HBM_BW = 1555e9              # A100 HBM2 (Table 1); v5e would be 819e9
+# OS page-fault cost dominating the mmap baseline (~few us of kernel time per
+# fault plus readahead pollution); calibrated so the mmap baseline reproduces
+# the paper's Fig. 5 stage breakdown shape.
+MMAP_FAULT_OVERHEAD_S = 4e-6
+
+
+@dataclasses.dataclass
+class BurstResult:
+    n_requests: int
+    elapsed_s: float
+    achieved_iops_per_ssd: float
+    efficiency: float  # achieved / peak
+
+
+def model_burst(spec: SSDSpec, n_requests: int, n_ssd: int = 1) -> BurstResult:
+    """Paper Eq. 2-3 analytic model: a burst of `n_requests` concurrent
+    accesses spends T_i (latency+sw init) + T_s (steady drain at peak IOPs)
+    + T_t; efficiency = T_s / total."""
+    t_i = spec.latency_s + T_INIT_SW
+    t_s = n_requests / (spec.peak_iops * n_ssd)
+    total = t_i + t_s + T_TERM
+    achieved = n_requests / (total * n_ssd)
+    return BurstResult(n_requests, total, achieved, achieved / spec.peak_iops)
+
+
+def required_accesses(spec: SSDSpec, target_efficiency: float,
+                      n_ssd: int = 1) -> int:
+    """Invert Eq. 2-3: N = rho * peak * (T_i + T_t) * n_ssd / (1 - rho)."""
+    rho = min(target_efficiency, 0.999)
+    t_fixed = spec.latency_s + T_INIT_SW + T_TERM
+    return int(np.ceil(rho * spec.peak_iops * n_ssd * t_fixed / (1.0 - rho)))
+
+
+def simulate_burst(spec: SSDSpec, n_requests: int, n_ssd: int = 1,
+                   queue_depth: int | None = None, seed: int = 0
+                   ) -> BurstResult:
+    """Discrete-event validation of the analytic model ("measured" curve of
+    Fig. 8): per-request latency ~ N(lat, cv*lat); each SSD drains its queue
+    at peak_iops once requests arrive; queue_depth limits in-flight requests
+    (defaults to all — BaM-style massive concurrency)."""
+    rng = np.random.default_rng(seed)
+    qd = queue_depth or n_requests
+    per_ssd = np.array_split(np.arange(n_requests), n_ssd)
+    worst = 0.0
+    for reqs in per_ssd:
+        n = len(reqs)
+        if n == 0:
+            continue
+        service = 1.0 / spec.peak_iops
+        lat = np.maximum(rng.normal(spec.latency_s,
+                                    spec.latency_cv * spec.latency_s, n), 0)
+        # in-flight window of qd: request i issues when completion i-qd done
+        complete = np.zeros(n)
+        next_free = 0.0  # device channel availability
+        for i in range(n):
+            issue = T_INIT_SW if i < qd else complete[i - qd]
+            start_service = max(issue + lat[i], next_free)
+            next_free = start_service + service
+            complete[i] = start_service + service
+        worst = max(worst, complete[-1] + T_TERM)
+    achieved = n_requests / (worst * n_ssd)
+    return BurstResult(n_requests, worst, achieved, achieved / spec.peak_iops)
+
+
+class StorageTimeline:
+    """Accumulates modelled time for a training run (Fig. 13/14 E2E bench).
+
+    Serves batches of requests split across tiers; returns elapsed time for
+    the storage portion assuming perfect overlap within a batch (GIDS) or
+    serial page-fault handling (mmap baseline).
+    """
+
+    def __init__(self, spec: SSDSpec, n_ssd: int = 1):
+        self.spec, self.n_ssd = spec, n_ssd
+
+    def gids_batch_time(self, n_storage: int, n_host: int, n_hbm: int,
+                        feat_bytes: int, outstanding: int) -> float:
+        """GIDS: storage requests overlapped (efficiency from the accumulator's
+        maintained outstanding count), host/HBM redirections run concurrently
+        on their own links; PCIe caps combined host+storage ingress."""
+        eff = model_burst(self.spec, max(outstanding, 1), self.n_ssd).efficiency
+        ssd_bw = self.spec.peak_bw * self.n_ssd * eff
+        t_ssd = n_storage * feat_bytes / ssd_bw if n_storage else 0.0
+        t_host = n_host * feat_bytes / HOST_DRAM_BW if n_host else 0.0
+        t_hbm = n_hbm * feat_bytes / HBM_BW if n_hbm else 0.0
+        pcie_bytes = (n_storage + n_host) * feat_bytes
+        t_pcie = pcie_bytes / PCIE_GEN4_BW
+        return max(t_ssd, t_host, t_hbm, t_pcie)
+
+    def mmap_batch_time(self, n_storage: int, n_page_cache: int,
+                        feat_bytes: int, cpu_threads: int = 16) -> float:
+        """mmap baseline: page faults served with limited overlap (readahead
+        gives ~cpu_threads-deep concurrency), plus per-fault kernel overhead."""
+        lines = max(1, feat_bytes // IO_BYTES)
+        faults = n_storage * lines
+        t_fault = faults * (MMAP_FAULT_OVERHEAD_S / cpu_threads)
+        t_dev = faults * self.spec.latency_s / cpu_threads \
+            + faults / (self.spec.peak_iops * self.n_ssd)
+        t_hit = n_page_cache * feat_bytes / HOST_DRAM_BW
+        return t_fault + t_dev + t_hit

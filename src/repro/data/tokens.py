@@ -1,0 +1,114 @@
+"""LM token pipeline fed by the GIDS prefetch machinery.
+
+The paper's dataloader problem — keep accelerators fed from storage that is
+slower than the compute — recurs in LM pretraining.  The same three pieces
+apply and are reused directly:
+
+  * storage tier: token shards live in memmapped files (the SSD namespace);
+  * accumulator: Little's-law dispatch-ahead depth controls how many batch
+    fetches are in flight (`DynamicAccessAccumulator`);
+  * prefetch queue: sequences for future steps are staged ahead of the
+    train loop exactly like sampled sub-graphs.
+
+For the VLM/audio archs the per-example modality embeddings (patch/frame
+tables) are fetched through the tiered `FeatureStore` — an embedding table
+indexed by example id IS a node-feature table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.accumulator import AccumulatorConfig, DynamicAccessAccumulator
+from repro.core.feature_store import FeatureStore
+from repro.core.storage_sim import INTEL_OPTANE, SSDSpec
+
+
+@dataclasses.dataclass
+class TokenPipelineConfig:
+    batch_size: int = 8
+    seq_len: int = 1024
+    vocab_size: int = 32000
+    prefetch_depth: int = 4
+    seed: int = 0
+    # modality sidecar (vlm/audio): rows fetched per example from the store
+    modality_dim: int = 0
+    modality_tokens: int = 0
+
+
+class TokenPipeline:
+    """Iterates (tokens, labels[, modality]) batches from a memmap shard."""
+
+    def __init__(self, shard_path: str | Path | None,
+                 cfg: TokenPipelineConfig,
+                 ssd: SSDSpec = INTEL_OPTANE,
+                 modality_store: FeatureStore | None = None,
+                 num_tokens: int = 1 << 22):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        if shard_path is None:                        # synthetic shard
+            self.tokens = self.rng.integers(
+                0, cfg.vocab_size, num_tokens).astype(np.int32)
+        else:
+            self.tokens = np.memmap(shard_path, dtype=np.int32, mode="r")
+        self.modality_store = modality_store
+        self.accumulator = DynamicAccessAccumulator(
+            ssd, AccumulatorConfig(max_merge_iters=cfg.prefetch_depth))
+        self._queue: deque = deque()
+        self._cursor = 0
+
+    def _snapshot(self) -> dict:
+        return {"cursor": self._cursor,
+                "rng": self.rng.bit_generator.state}
+
+    def _fetch_one(self) -> dict:
+        cfg = self.cfg
+        n = cfg.batch_size * (cfg.seq_len + 1)
+        if self._cursor + n > len(self.tokens):
+            self._cursor = 0
+        window = np.asarray(self.tokens[self._cursor:self._cursor + n])
+        self._cursor += n
+        window = window.reshape(cfg.batch_size, cfg.seq_len + 1)
+        batch = {"tokens": window[:, :-1].copy(),
+                 "labels": window[:, 1:].copy()}
+        if self.modality_store is not None and cfg.modality_tokens:
+            ids = self.rng.integers(0, self.modality_store.features.shape[0],
+                                    cfg.batch_size * cfg.modality_tokens)
+            rows, report = self.modality_store.gather(np.unique(ids))
+            # re-expand to per-example layout
+            lut = {u: i for i, u in enumerate(np.unique(ids))}
+            take = np.array([lut[i] for i in ids])
+            batch["patches"] = rows[take].reshape(
+                cfg.batch_size, cfg.modality_tokens, -1)
+            self.accumulator.update(report.n_requests, report.redirected)
+        return batch
+
+    def _refill(self) -> None:
+        bytes_per = self.cfg.batch_size * self.cfg.seq_len * 4
+        depth = max(self.cfg.prefetch_depth,
+                    self.accumulator.merge_depth(max(bytes_per // 4096, 1)))
+        depth = min(depth, 4 * self.cfg.prefetch_depth)
+        while len(self._queue) < depth:
+            # snapshot BEFORE fetching: checkpoints must record the logical
+            # consumption position, not the prefetch frontier — otherwise a
+            # restart silently skips every batch that was in flight.
+            self._queue.append((self._snapshot(), self._fetch_one()))
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        self._refill()
+        return self._queue.popleft()[1]
+
+    # checkpointable logical position (fault tolerance)
+    def state_dict(self) -> dict:
+        return self._queue[0][0] if self._queue else self._snapshot()
+
+    def load_state_dict(self, st: dict) -> None:
+        self._cursor = st["cursor"]
+        self.rng.bit_generator.state = st["rng"]
+        self._queue.clear()

@@ -1,0 +1,88 @@
+"""Gradient compression for the slow cross-pod (DCN) axis.
+
+Within a pod, gradient all-reduce rides 50 GB/s ICI links; across pods it
+crosses data-center network an order of magnitude slower.  The standard
+mitigation is to compress only the cross-pod hop:
+
+    g_local  = all_reduce(g, axis="data")        # fast ICI, full precision
+    q, scale = int8_quantize(g_local + error)    # error-feedback residual
+    g_global = all_reduce_int8(q) * scale        # slow DCN, 4x fewer bytes
+    error    = g_local - dequant(q)              # carried to next step
+
+`psum_compressed` implements this with jax.shard_map over the pod axis only
+(other mesh axes stay under automatic partitioning).  Error feedback makes
+the quantization noise telescoping: the *sum* of applied updates converges
+to the sum of true gradients (Karimireddy et al., 2019).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def int8_quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Any, error: Any) -> tuple[Any, Any]:
+    """Quantize grads+error to int8; returns (dequantized, new_error).
+    Pure function — composes with any collective placement."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = int8_quantize(g32)
+        deq = int8_dequantize(q, s)
+        return deq, g32 - deq
+
+    out = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def psum_compressed(grads: Any, error: Any, mesh: Mesh,
+                    axis: str = "pod") -> tuple[Any, Any]:
+    """Cross-axis all-reduce with int8 payload + error feedback.
+
+    grads enter already reduced over the fast axes (XLA inserts those);
+    here each leaf is quantized, summed over `axis` with an int32
+    accumulator (no overflow for <= 2^23 pods), and dequantized.
+    """
+    if axis not in mesh.shape or mesh.shape[axis] == 1:
+        return grads, error
+
+    def body(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = int8_quantize(g32)
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis)
+        ssum = jax.lax.pmax(s, axis)  # shared conservative scale
+        total = qsum.astype(jnp.float32) * ssum
+        return total, g32 - int8_dequantize(q, s)
+
+    fn = jax.shard_map(
+        lambda g, e: jax.tree.map(body, g, e),
+        mesh=mesh,
+        in_specs=(P(), P()), out_specs=(P(), P()),
+        check_vma=False,
+    )
+    out = fn(grads, error)
+    summed = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return summed, new_err

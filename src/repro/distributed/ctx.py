@@ -1,0 +1,34 @@
+"""Activation-sharding context.
+
+Models are mesh-agnostic; launchers install a spec table here and model code
+calls `constrain(x, name)` at propagation anchor points (post-embed, MoE
+dispatch, cache layouts).  Outside any context this is the identity, so the
+same forward runs on 1 CPU device (tests) and 512 chips (dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_SPECS: dict | None = None
+
+
+@contextlib.contextmanager
+def activation_sharding(specs: dict):
+    global _SPECS
+    prev, _SPECS = _SPECS, specs
+    try:
+        yield
+    finally:
+        _SPECS = prev
+
+
+def constrain(x, name: str):
+    if _SPECS and name in _SPECS and _SPECS[name] is not None:
+        return jax.lax.with_sharding_constraint(x, _SPECS[name])
+    return x
+
+
+def current_specs() -> dict | None:
+    return _SPECS

@@ -1,0 +1,50 @@
+"""Weighted reverse PageRank — the paper's hot-node metric (§3.3, after
+Data Tiering [25]).
+
+Reverse PageRank on G equals PageRank on G^T: a node that many sampled
+walks *reach backwards* (i.e. that appears often as a sampled in-neighbor)
+scores high, predicting feature-fetch frequency during neighborhood sampling.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import CSRGraph
+
+
+def reverse_pagerank(graph: CSRGraph, *, damping: float = 0.85,
+                     iters: int = 20, weights: np.ndarray | None = None
+                     ) -> np.ndarray:
+    """Power-iteration PageRank on the reversed graph.
+
+    weights: optional per-node teleport weights (the "weighted" part —
+    the paper seeds with training-node density; we default to uniform).
+    """
+    rev = graph.reverse()
+    n = graph.num_nodes
+    if weights is None:
+        tele = np.full(n, 1.0 / n)
+    else:
+        tele = weights / weights.sum()
+    deg = rev.degrees().astype(np.float64)
+    # edges of rev: u -> v where original had v -> u
+    rank = tele.copy()
+    src = np.repeat(np.arange(n), deg.astype(np.int64))
+    dst = rev.indices
+    inv_deg = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0)
+    for _ in range(iters):
+        contrib = rank * inv_deg
+        new = np.zeros(n)
+        np.add.at(new, dst, contrib[src])
+        dangling = rank[deg == 0].sum()
+        rank = (1 - damping) * tele + damping * (new + dangling * tele)
+    return rank
+
+
+def hot_nodes(graph: CSRGraph, fraction: float, *, iters: int = 20,
+              metric: np.ndarray | None = None) -> np.ndarray:
+    """Top-`fraction` node ids by reverse PageRank (or a user metric),
+    i.e. the set pinned into the constant CPU buffer."""
+    score = metric if metric is not None else reverse_pagerank(graph, iters=iters)
+    k = max(1, int(graph.num_nodes * fraction))
+    return np.argsort(-score, kind="stable")[:k].astype(np.int64)

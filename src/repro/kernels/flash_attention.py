@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: blocked attention with online softmax.
+
+Substrate hot-spot for the LM backbones (not a paper contribution, but the
+dominant compute of every assigned architecture).  Supports:
+  * causal masking
+  * sliding-window attention (h2o-danube SWA, recurrentgemma local attn)
+  * GQA (q head h reads kv head h * KV // H) via BlockSpec index maps
+
+Layout: q (B, H, S, dh), k/v (B, KV, S, dh).  Grid (B*H, Sq/bq, Sk/bk) with
+the kv dim innermost; running max / sum / accumulator live in VMEM scratch
+and are rescaled online (Flash-Attention-2 schedule).  Softmax statistics in
+f32 regardless of input dtype; MXU matmuls take bf16/f32 inputs directly.
+
+Causal + window blocks that are fully masked are skipped by clamping the kv
+grid extent per q block (block-sparse iteration, the TPU analogue of
+persistent-CTA early-exit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int | None,
+            bq: int, bk: int, seq_k: int):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)            # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)            # (bk, dh)
+    s = jnp.einsum("qd,kd->qk", q, k) * scale   # (bq, bk) f32
+
+    q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    mask &= k_pos < seq_k                       # kv padding
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (all NEG_INF): keep exp at 0
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jnp.einsum("qk,kd->qd", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    B, H, Sq, dh = q.shape
+    _, KV, Sk, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    group = H // KV
+    scale = scale if scale is not None else dh ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    # pad seq lengths to block multiples
+    Sq_p = -(-Sq // bq) * bq
+    Sk_p = -(-Sk // bk) * bk
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sq_p - Sq), (0, 0)))
+    if Sk_p != Sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Sk_p - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Sk_p - Sk), (0, 0)))
+
+    qf = q.reshape(B * H, Sq_p, dh)
+    kf = k.reshape(B * KV, Sk_p, dh)
+    vf = v.reshape(B * KV, Sk_p, dh)
+
+    def q_index(h, i, j):
+        del j
+        return (h, i, 0)
+
+    def kv_index(h, i, j):
+        del i
+        return (h // group, j, 0)
+
+    grid = (B * H, Sq_p // bq, Sk_p // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, seq_k=Sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), q_index),
+            pl.BlockSpec((1, bk, dh), kv_index),
+            pl.BlockSpec((1, bk, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((bq, dh), jnp.float32),   # output accumulator
+        ],
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq_p, dh), q.dtype),
+        interpret=interpret,
+        name="flash_attention",
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq_p, dh)[:, :, :Sq, :]

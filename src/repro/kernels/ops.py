@@ -1,0 +1,45 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On a CPU host (this container / unit tests) kernels execute in interpret
+mode; on TPU they lower to Mosaic.  `use_pallas=False` falls back to the
+pure-jnp oracle — the dry-run path uses the oracle so the compiled HLO's
+cost analysis reflects the mathematically identical dense computation (XLA
+cannot cost-model custom calls), while run-time paths use the kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .segment_mean import segment_mean as _segmean
+from .tiered_gather import tiered_gather as _tgather
+
+_ON_TPU = jax.default_backend() == "tpu"
+_INTERPRET = not _ON_TPU
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def tiered_gather(slots, cache, staged, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.tiered_gather_ref(slots, cache, staged)
+    return _tgather(slots, cache, staged, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def segment_mean(idx, feats, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.segment_mean_ref(idx, feats)
+    return _segmean(idx, feats, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "use_pallas"))
+def flash_attention(q, k, v, causal: bool = True, window=None,
+                    use_pallas: bool = True):
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=_INTERPRET)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tiered_gather_ref(slots: jax.Array, cache: jax.Array,
+                      staged: jax.Array) -> jax.Array:
+    from_cache = cache[jnp.maximum(slots, 0)]
+    return jnp.where((slots >= 0)[:, None], from_cache, staged)
+
+
+def segment_mean_ref(idx: jax.Array, feats: jax.Array) -> jax.Array:
+    rows = feats[idx]                      # (B, F, D)
+    return rows.astype(jnp.float32).mean(axis=1).astype(feats.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None) -> jax.Array:
+    B, H, Sq, dh = q.shape
+    _, KV, Sk, _ = k.shape
+    group = H // KV
+    scale = scale if scale is not None else dh ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)    # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: fixed-fanout neighbor aggregation (GraphSAGE mean).
+
+After fixed-fanout sampling each destination node has exactly F (padded)
+sampled neighbors, so the paper's segment aggregation becomes a gather +
+mean over a (B, F) index matrix into an (N, D) feature table.
+
+Grid: (B, D // bd, F) with the reduction dim F innermost: the output block
+(1, bd) for destination b is revisited on *consecutive* steps and accumulated
+in place (TPU grids execute sequentially; consecutive revisits keep the block
+resident in VMEM — the idiomatic Pallas reduction pattern).  Neighbor rows
+are DMA'd one at a time via scalar-prefetched indices — the same indirection
+trick as `tiered_gather`.
+
+Inputs
+  idx:   (B, F) int32 neighbor ids (rows of `feats`)
+  feats: (N, D)
+Output
+  out:   (B, D) = mean_f feats[idx[b, f]]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_pf, nbr_blk, out_ref, *, fanout: int):
+    f = pl.program_id(2)  # innermost: consecutive revisits of the out block
+
+    @pl.when(f == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += nbr_blk[...].astype(out_ref.dtype) / fanout
+
+
+def segment_mean(idx: jax.Array, feats: jax.Array, *, block_d: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    B, F = idx.shape
+    _, D = feats.shape
+    bd = min(block_d, D)
+    assert D % bd == 0, (D, bd)
+
+    def nbr_index(b, j, f, idx_pf):
+        return (idx_pf[b * F + f], j)
+
+    def out_index(b, j, f, idx_pf):
+        del f, idx_pf
+        return (b, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, D // bd, F),
+        in_specs=[pl.BlockSpec((1, bd), nbr_index)],
+        out_specs=pl.BlockSpec((1, bd), out_index),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, fanout=F),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+        name="segment_mean",
+    )
+    return fn(idx.reshape(-1), feats).astype(feats.dtype)
+
+
+segment_mean_cpu = functools.partial(segment_mean, interpret=True)

@@ -1,0 +1,347 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production mesh, prove memory fit, and extract roofline terms.
+
+MUST be run as its own process (the XLA flag above is read at first jax
+init): ``PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b
+--shape train_4k [--multi-pod]``, or ``--all`` to sweep every cell in
+subprocesses (isolation: one compilation arena per cell).
+
+Outputs one JSON per cell under experiments/dryrun/.
+"""
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import subprocess        # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+from pathlib import Path # noqa: E402
+
+import numpy as np       # noqa: E402
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def active_param_count(model) -> int:
+    """Per-token active parameters (routed experts count topk/E)."""
+    from repro.models.common import ParamDef
+    import jax
+    cfg = model.cfg
+    total = 0
+    leaves = jax.tree.leaves(model.param_defs(),
+                             is_leaf=lambda x: isinstance(x, ParamDef))
+    for d in leaves:
+        n = int(np.prod(d.shape))
+        if "expert" in d.axes and cfg.moe_experts:
+            n = n * cfg.moe_top_k // cfg.moe_experts
+        total += n
+    return total
+
+
+def _donate_for(kind: str) -> tuple:
+    # params+opt for train; cache for serving (in-place KV update)
+    return (0, 1) if kind == "train" else (2,)
+
+
+def analytic_attn_flops(cfg, kind: str, batch: int, seq: int,
+                        chips: int) -> float:
+    """Per-device FLOPs of the flash-attention kernel (re-added when the
+    dry-run lowers the IO stub — XLA cannot cost Pallas custom calls).
+
+    fwd = 4*B*Sq*Skv*H*hd (scores + AV), halved for causal; train multiplies
+    by 3.5 (flash-2 backward ~2.5x fwd incl. recompute).
+    """
+    if cfg.family == "ssm":
+        return 0.0
+    n_attn, n_local = 0, 0
+    for i in range(cfg.num_layers):
+        if cfg.family == "hybrid":
+            n_local += cfg.is_attn_layer(i)
+        else:
+            n_attn += 1
+    H, hd = cfg.num_heads, cfg.hd
+    if kind == "train":
+        sq = skv = seq
+        mult, causal = 3.5, True
+    elif kind == "prefill":
+        sq = skv = seq
+        mult, causal = 1.0, True
+    else:  # decode
+        sq, skv = 1, seq
+        mult, causal = 1.0, False
+    per_layer = 4.0 * batch * sq * skv * H * hd
+    if causal:
+        per_layer *= 0.5
+    total = per_layer * n_attn
+    # hybrid local attention: window-limited keys
+    if n_local:
+        w = min(cfg.local_window, skv)
+        total += 4.0 * batch * sq * w * H * hd * (0.5 if causal else 1.0) \
+            * n_local
+    if cfg.attn_window is not None and kind != "decode":
+        # SWA caps the key range for the dense layers too
+        w = min(cfg.attn_window, skv)
+        total = 4.0 * batch * sq * w * H * hd * 0.5 * n_attn
+    if cfg.family == "encdec":
+        # encoder self-attn (bidirectional) + decoder cross-attn
+        total += 4.0 * batch * cfg.encoder_seq ** 2 * H * hd \
+            * cfg.encoder_layers
+        total += 4.0 * batch * sq * cfg.encoder_seq * H * hd \
+            * cfg.num_layers
+    return total * mult / chips
+
+
+def scan_ladder(cfg) -> tuple[dict, list[tuple[dict, int]]]:
+    """Scan-trip-count extrapolation plan.
+
+    XLA cost_analysis counts each lax.scan body ONCE (not x trip count), so
+    per-step cost is reconstructed from reduced-depth lowers:
+        full = cost(A) + sum_i (G_i - 1) * (cost(B_i) - cost(A))
+    where A has 1 group per scanned stack, B_i has 2 groups in stack i, and
+    G_i is the full model's group count (exact: scan cost is linear in trip
+    count).  Memory/compile validity still comes from the full-depth build.
+    """
+    U = {"scan_unroll": True}   # python-loop layers: exact HLO accounting
+    if cfg.family == "encdec":
+        A = {"num_layers": 1, "encoder_layers": 1, **U}
+        return A, [({"num_layers": 2, "encoder_layers": 1, **U},
+                    cfg.num_layers - 1),
+                   ({"num_layers": 1, "encoder_layers": 2, **U},
+                    cfg.encoder_layers - 1)]
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        rem = cfg.num_layers % k
+        groups = cfg.num_layers // k
+        A = {"num_layers": k + rem, **U}
+        return A, [({"num_layers": 2 * k + rem, **U}, groups - 1)]
+    il = cfg.moe_interleave if cfg.moe_experts else 1
+    groups = cfg.num_layers // il
+    return {"num_layers": il, **U}, [({"num_layers": 2 * il, **U},
+                                      groups - 1)]
+
+
+def _measure(cell, mesh, multi_pod, donate):
+    import jax
+    from repro.distributed.ctx import activation_sharding
+    from repro.launch import roofline as rl
+    from repro.launch.specs import activation_specs
+    from repro.launch.specs import SHAPES as _SHAPES
+    batch = _SHAPES[cell.shape]["batch"]
+    with mesh, activation_sharding(activation_specs(cell.cfg, mesh,
+                                                    multi_pod, batch=batch,
+                                                    kind=cell.kind,
+                                                    expert_axis=cell.rules.get("expert") or "model")):
+        lowered = jax.jit(cell.step_fn,
+                          donate_argnums=donate).lower(*cell.abstract_args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    h = rl.analyze_hlo(compiled.as_text())
+    assert h["while_ops"] == 0, "cost ladder must be while-free (unrolled)"
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_raw": float(ca.get("bytes accessed", 0.0)),
+        "hbm": float(h["hbm_traffic"]),
+        "coll": float(h["collective_total"]),
+    }, compiled
+
+
+def extrapolated_cost(arch, shape, mesh, multi_pod, strategy, overrides,
+                      base_cfg) -> dict:
+    from repro.launch.specs import build_cell
+    A_ov, Bs = scan_ladder(base_cfg)
+    merged = dict(overrides or {})
+    # cost ladder runs at microbatches=1 (the grad-accum scan is a while
+    # op; per-token costs are identical, grad-accum adds only m tiny adds)
+    merged.pop("microbatches", None)
+    cell_a = build_cell(arch, shape, mesh, multi_pod=multi_pod,
+                        strategy=strategy, overrides={**merged, **A_ov})
+    donate = _donate_for(cell_a.kind)
+    cost_a, _ = _measure(cell_a, mesh, multi_pod, donate)
+    total = dict(cost_a)
+    for B_ov, mult in Bs:
+        cell_b = build_cell(arch, shape, mesh, multi_pod=multi_pod,
+                            strategy=strategy, overrides={**merged, **B_ov})
+        cost_b, _ = _measure(cell_b, mesh, multi_pod, donate)
+        for key in total:
+            total[key] += mult * (cost_b[key] - cost_a[key])
+    return total
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             strategy: str | None = None, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    import jax
+    from repro.distributed.ctx import activation_sharding
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import (SHAPES, activation_specs, build_cell,
+                                    cell_supported)
+
+    import repro.configs as configs
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = dataclasses.replace(
+            cfg, **{k: v for k, v in overrides.items()
+                    if k != "microbatches"})
+    ok, reason = cell_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "strategy": strategy, "tag": tag}
+    if not ok:
+        rec["status"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    cell = build_cell(arch, shape, mesh, multi_pod=multi_pod,
+                      strategy=strategy, overrides=overrides)
+    rec["strategy"] = strategy or ("fsdp_tp" if cfg.moe_experts else "tp")
+    donate = _donate_for(cell.kind)
+
+    t0 = time.time()
+    from repro.launch.specs import SHAPES as _SHAPES
+    batch = _SHAPES[cell.shape]["batch"]
+    with mesh, activation_sharding(activation_specs(cell.cfg, mesh,
+                                                    multi_pod, batch=batch,
+                                                    kind=cell.kind,
+                                                    expert_axis=cell.rules.get("expert") or "model")):
+        lowered = jax.jit(cell.step_fn,
+                          donate_argnums=donate).lower(*cell.abstract_args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    print(ma)                                   # proves the cell fits
+    ca = compiled.cost_analysis() or {}
+    print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+    hlo = compiled.as_text()
+
+    spec = SHAPES[shape]
+    tokens = spec["batch"] * (spec["seq"] if cell.kind != "decode" else 1)
+    n_active = active_param_count(cell.model)
+    mult = 6 if cell.kind == "train" else 2
+    model_flops = mult * n_active * tokens
+
+    # scan-depth-corrected per-device costs (see scan_ladder docstring)
+    cost_x = extrapolated_cost(arch, shape, mesh, multi_pod, strategy,
+                               overrides, cfg)
+    if cfg.attn_impl == "flash_stub":
+        cost_x["flops"] += analytic_attn_flops(
+            cfg, cell.kind, spec["batch"], spec["seq"], chips)
+    roof = rl.analyze(cost_x["flops"], cost_x["hbm"], cost_x["coll"],
+                      model_flops=model_flops, chips=chips)
+    coll = rl.collective_bytes(hlo)
+    rec.update({
+        "status": "OK",
+        "kind": cell.kind,
+        "chips": chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_per_device_gib": round(
+                (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                 + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+                / 2**30, 3),
+        },
+        "cost_raw_scan_body_once": {k: ca.get(k)
+                                    for k in ("flops", "bytes accessed")},
+        "cost_extrapolated": cost_x,
+        "collectives": coll,
+        "active_params": n_active,
+        "tokens_per_step": tokens,
+        "roofline": roof.to_dict(),
+    })
+    return rec
+
+
+def cell_filename(arch, shape, multi_pod, tag="") -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    suffix = f"_{tag}" if tag else ""
+    return f"{arch}_{shape}_{mesh}{suffix}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (python literal)")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every cell in subprocesses")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        import repro.configs as configs
+        from repro.launch.specs import SHAPES
+        failures = []
+        for multi_pod in (False, True):
+            for arch in configs.ARCH_IDS:
+                for shape in SHAPES:
+                    fn = OUT_DIR / cell_filename(arch, shape, multi_pod)
+                    if args.skip_existing and fn.exists():
+                        ok = json.loads(fn.read_text()).get("status", "")
+                        if ok == "OK" or ok.startswith("SKIP"):
+                            continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape]
+                    if multi_pod:
+                        cmd.append("--multi-pod")
+                    print("::", " ".join(cmd), flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures.append((arch, shape, multi_pod))
+        print(f"sweep done; {len(failures)} failures: {failures}")
+        return 1 if failures else 0
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        import ast
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod,
+                       strategy=args.strategy,
+                       overrides=overrides or None, tag=args.tag)
+    except Exception as e:  # noqa: BLE001 — record the failure
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": "2x16x16" if args.multi_pod else "16x16",
+               "status": f"FAIL: {type(e).__name__}: {e}"}
+        print(rec["status"], file=sys.stderr)
+        fn = OUT_DIR / cell_filename(args.arch, args.shape, args.multi_pod,
+                                     args.tag)
+        fn.write_text(json.dumps(rec, indent=2))
+        return 1
+
+    fn = OUT_DIR / cell_filename(args.arch, args.shape, args.multi_pod,
+                                 args.tag)
+    fn.write_text(json.dumps(rec, indent=2))
+    print(f"wrote {fn}")
+    if rec.get("roofline"):
+        r = rec["roofline"]
+        print(f"{args.arch} x {args.shape}: bottleneck={r['bottleneck']} "
+              f"compute={r['compute_term']:.4f}s memory={r['memory_term']:.4f}s "
+              f"collective={r['collective_term']:.4f}s "
+              f"useful={r['useful_ratio']:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

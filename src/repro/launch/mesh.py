@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+Single pod: 16 x 16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model); the pod axis
+composes with data for batch sharding (DP across pods over DCN).
+
+Functions, not module constants — importing this module never touches jax
+device state (device count is locked on first jax init, and smoke tests must
+see 1 CPU device while the dry-run sees 512 placeholders).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def batch_axes(multi_pod: bool = False):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh over whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,269 @@
+"""Input ShapeDtypeStruct builders per (architecture x input-shape) cell.
+
+Every stand-in is weak-type-correct and carries a NamedSharding, so
+`jax.jit(step).lower(**specs)` infers all in_shardings without allocating a
+byte.  The shape table is the assignment's:
+
+    train_4k     seq 4096,    global_batch 256   -> train_step
+    prefill_32k  seq 32768,   global_batch 32    -> prefill_step
+    decode_32k   cache 32768, global_batch 128   -> decode_step (1 token)
+    long_500k    cache 524288, global_batch 1    -> decode_step (1 token)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+from repro.models.common import (ModelConfig, abstract_params,
+                                 sharding_rules)
+from repro.models.transformer import LM
+from repro.train import optimizer as opt_lib
+from repro.train.optimizer import OptimizerConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# archs whose attention is quadratic-full: long_500k is skipped
+FULL_ATTENTION = {
+    "llama4-maverick-400b-a17b", "arctic-480b", "minicpm-2b", "qwen3-14b",
+    "qwen2-1.5b", "internvl2-1b", "whisper-small",
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and cfg.name in FULL_ATTENTION:
+        return False, "SKIP(full-attention)"
+    return True, ""
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _divshard(dim: int, mesh: Mesh, axis: str):
+    return axis if dim % mesh.shape[axis] == 0 else None
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
+                multi_pod: bool) -> dict:
+    """Training/prefill batch stand-ins."""
+    ba = batch_axes(multi_pod)
+    bsharded = ba if batch % int(np.prod([mesh.shape[a] for a in ba])) == 0 \
+        else (ba[:-1] if batch % mesh.shape[ba[0]] == 0 else ())
+    bspec = P(bsharded if bsharded else None)
+    tok_seq = seq
+    if cfg.frontend == "vision_stub":
+        # patches occupy the first frontend_tokens positions of the
+        # seq_len-long sequence (and of the serving cache)
+        tok_seq = seq - cfg.frontend_tokens
+    out = {
+        "tokens": _sds((batch, tok_seq), jnp.int32, mesh, P(*bspec, None)),
+        "labels": _sds((batch, tok_seq), jnp.int32, mesh, P(*bspec, None)),
+    }
+    if cfg.family == "encdec":
+        out["frames"] = _sds((batch, cfg.encoder_seq, cfg.d_model),
+                             jnp.float32, mesh, P(*bspec, None, None))
+    if cfg.frontend == "vision_stub":
+        out["patches"] = _sds((batch, cfg.frontend_tokens, cfg.d_model),
+                              jnp.float32, mesh, P(*bspec, None, None))
+    return out
+
+
+def cache_pspec_tree(model: LM, mesh: Mesh, batch: int, seq: int,
+                     multi_pod: bool, kind: str = "decode"):
+    """PartitionSpecs for the serving cache.
+
+    prefill: sequence dim over the model axis (the prompt write covers the
+    full range, so the dynamic-update-slice is a plain copy).
+    decode:  the per-token write is a dynamic-update-slice at a runtime
+    index — along a sharded dim XLA must all-gather the WHOLE cache per
+    token (measured 4 GiB/token/layer-pair on llama4).  Decode caches
+    therefore shard kv-heads when divisible, else head_dim (always
+    16-divisible in the zoo: 128/80/256/64); the score contraction then
+    lowers to a tiny partial-sum all-reduce.
+    """
+    cfg = model.cfg
+    ba = batch_axes(multi_pod)
+    bsz = int(np.prod([mesh.shape[a] for a in ba]))
+    bspec: Any = ba if batch % bsz == 0 else (
+        ba[0] if batch % mesh.shape[ba[0]] == 0 else None)
+    # both phases sequence-shard the cache over the model axis: prefill's
+    # full-range write is a plain copy; decode writes via a one-hot mask
+    # (elementwise over the sharded dim) and computes distributed softmax
+    # (shard-local max/sum + tiny all-reduce).  See layers.attention.
+    dims = (_divshard(seq, mesh, "model"), None, None)
+
+    specs = []
+    for si, (kinds, n) in enumerate(model.plan):
+        group = {}
+        for i, kind_i in enumerate(kinds):
+            if kind_i in ("attn_dense", "attn_moe", "attn_local"):
+                group[f"b{i}"] = {"k": P(None, bspec, *dims),
+                                  "v": P(None, bspec, *dims)}
+            elif kind_i == "dec":
+                group[f"b{i}"] = {"k": P(None, bspec, *dims),
+                                  "v": P(None, bspec, *dims),
+                                  "xk": P(None, bspec, None, None, None),
+                                  "xv": P(None, bspec, None, None, None)}
+            elif kind_i == "rec":
+                W = cfg.lru_width or cfg.d_model
+                w = _divshard(W, mesh, "model")
+                group[f"b{i}"] = {"conv": P(None, bspec, None, w),
+                                  "h": P(None, bspec, w)}
+            elif kind_i == "ssm":
+                hshard = _divshard(cfg.ssm_heads, mesh, "model")
+                group[f"b{i}"] = {"conv": P(None, bspec, None, None),
+                                  "h": P(None, bspec, hshard, None, None)}
+        specs.append(group)
+    return specs
+
+
+def abstract_cache(model: LM, mesh: Mesh, batch: int, seq: int,
+                   multi_pod: bool, kind: str = "decode"):
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    pspecs = cache_pspec_tree(model, mesh, batch, seq, multi_pod, kind)
+
+    def attach(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(attach, shapes, pspecs)
+
+
+def activation_specs(cfg: ModelConfig, mesh: Mesh, multi_pod: bool,
+                     batch: int | None = None, kind: str = "train",
+                     expert_axis: str = "model") -> dict:
+    ba = batch_axes(multi_pod)
+    e_ax = _divshard(cfg.moe_experts or 1, mesh, expert_axis)
+    e_ax = expert_axis if e_ax else None
+    if cfg.moe_2d_dispatch and kind in ("decode", "prefill"):
+        # serving: keep expert weights stationary (2D-sharded E x D); the
+        # dispatch activations shard their d_model dim over the data axis
+        # so the expert matmul produces partial sums + a tiny activation
+        # all-reduce instead of re-gathering 100s of GB of weights per
+        # token (measured 35 GB/device/token on llama4 decode).
+        especs = P(e_ax, None, _divshard(cfg.d_model, mesh, "data"))
+    else:
+        especs = P(e_ax, None, None)
+    # attention core: batch-parallel on the data axes (head-agnostic TP —
+    # see layers.attention).  Splitting batch over the model axis too was
+    # tried and REFUTED: XLA cannot reshard the 5-D score tensors between
+    # the 256-way and (16,8,..,2) layouts and falls back to involuntary
+    # full rematerialisation (~2 TiB/layer of collectives); see
+    # EXPERIMENTS.md §Perf iteration 2.
+    attn_axes = list(ba)
+    if batch is not None:
+        size = int(np.prod([mesh.shape[a] for a in ba]))
+        if batch % size:
+            attn_axes = [a for a in ba if batch % mesh.shape[a] == 0][:1]
+    aspec = P(tuple(attn_axes) if attn_axes else None, None, None, None)
+    if kind == "decode":
+        # decode: five constraint/layout hypotheses measured WORSE than
+        # XLA's own propagation (0.70 -> 2.1-5.1 s/token on llama4; see
+        # EXPERIMENTS.md §Perf cell 3) — leave the partitioner alone.
+        return {"activations": NamedSharding(mesh, P(ba, None, None))}
+    return {
+        "activations": NamedSharding(mesh, P(ba, None, None)),
+        "moe_dispatch": NamedSharding(mesh, especs),
+        "attn_act": NamedSharding(mesh, aspec),
+        "attn_scores": NamedSharding(
+            mesh, P(tuple(attn_axes) if attn_axes else None,
+                    None, None, None, None)),
+        # decode: key dim stays sequence-sharded on the model axis
+        "attn_scores_decode": NamedSharding(
+            mesh, P(tuple(attn_axes) if attn_axes else None,
+                    None, None, None, "model")),
+        # out feeds the row-parallel wo: batch on data axes, fused dim on
+        # model (the model axis moves from batch back to the hidden dim)
+        "attn_out": NamedSharding(mesh, P(ba, None, "model")),
+    }
+
+
+def optimizer_for(cfg: ModelConfig) -> OptimizerConfig:
+    # Adafactor for the behemoth MoEs (§DESIGN: 4 B/param state vs 12),
+    # AdamW elsewhere.
+    if cfg.moe_experts:
+        return OptimizerConfig(name="adafactor")
+    return OptimizerConfig(name="adamw")
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    model: LM
+    kind: str
+    abstract_args: tuple            # positional args for the step fn
+    step_fn: Any
+    rules: dict
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh, *, multi_pod: bool,
+               strategy: str | None = None,
+               overrides: dict | None = None) -> Cell:
+    import repro.configs as configs
+    from repro.train.steps import (TrainConfig, make_decode_step,
+                                   make_prefill_step, make_train_step)
+
+    cfg = configs.get(arch)
+    microbatches = 1
+    if overrides:
+        overrides = dict(overrides)
+        microbatches = overrides.pop("microbatches", 1)
+        cfg = dataclasses.replace(cfg, **overrides)
+    spec = SHAPES[shape]
+    kind, seq, batch = spec["kind"], spec["seq"], spec["batch"]
+    model = LM(cfg)
+    if strategy is None:
+        # the 400B-class models cannot fit TP-only; everything else TP
+        strategy = "fsdp_tp" if cfg.moe_experts else "tp"
+    rules = sharding_rules(strategy, multi_pod)
+    params = abstract_params(model.param_defs(), rules, mesh)
+
+    if kind == "train":
+        ocfg = optimizer_for(cfg)
+        opt_state = opt_lib.abstract_state(ocfg.name, params, ocfg)
+        # attach shardings to optimizer state
+        pspecs = jax.tree.map(lambda a: a.sharding.spec, params)
+        shapes_tree = jax.tree.map(lambda a: a.shape, params)
+        ospecs = opt_lib.opt_state_pspecs(ocfg.name, shapes_tree, pspecs,
+                                          mesh, zero1=True)
+        opt_state = jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+            opt_state, ospecs)
+        batch_abs = batch_specs(cfg, mesh, batch, seq, multi_pod)
+        step = make_train_step(model, TrainConfig(optimizer=ocfg,
+                                                  microbatches=microbatches))
+        args = (params, opt_state, batch_abs)
+    elif kind == "prefill":
+        batch_abs = batch_specs(cfg, mesh, batch, seq, multi_pod)
+        batch_abs.pop("labels")
+        cache = abstract_cache(model, mesh, batch, seq, multi_pod,
+                               kind="prefill")
+        step = make_prefill_step(model)
+        args = (params, batch_abs, cache)
+    else:  # decode
+        ba = batch_axes(multi_pod)
+        bsz = int(np.prod([mesh.shape[a] for a in ba]))
+        bspec = P(ba if batch % bsz == 0 else None)
+        token = _sds((batch, 1), jnp.int32, mesh, P(*bspec, None))
+        cache = abstract_cache(model, mesh, batch, seq, multi_pod)
+        index = jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=NamedSharding(mesh, P()))
+        step = make_decode_step(model)
+        args = (params, token, cache, index)
+    return Cell(arch=arch, shape=shape, cfg=cfg, model=model, kind=kind,
+                abstract_args=args, step_fn=step, rules=rules)

@@ -1,0 +1,237 @@
+"""Model configuration + parameter-spec machinery.
+
+Every architecture declares its parameters once as `ParamDef`s (shape +
+logical axes + init); from that single source we derive
+  * materialised params (`init_params`),
+  * abstract params with shardings for the dry-run (`abstract_params`),
+  * PartitionSpecs under a given sharding strategy (`param_pspecs`).
+
+Logical axis names are resolved to mesh axes by a rules table; any dim not
+divisible by its mesh-axis size falls back to replication (this is what makes
+the zoo's awkward head counts — 40, 56, 36, 14, 10 — compile on a fixed
+16-way model axis without padding heads; see DESIGN.md "head-agnostic TP").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# configuration
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    vocab_pad_to: int = 2048
+    norm_type: str = "rms"           # rms | layernorm
+    norm_eps: float = 1e-6
+    act: str = "silu_gated"          # silu_gated | gelu
+    pos_embed: str = "rope"          # rope | learned | none
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False            # qwen3
+    qkv_bias: bool = False           # qwen2 / internvl2 backbone
+    attn_window: int | None = None   # sliding-window attention (h2o-danube)
+    max_position: int = 32768        # learned-pos table size (whisper)
+    tie_embeddings: bool = False
+    residual_scale: float = 1.0      # minicpm depth-scaled residuals
+    embed_scale: float = 1.0         # minicpm mup-style embedding scale
+    # --- MoE ---------------------------------------------------------------
+    moe_experts: int = 0
+    moe_top_k: int = 1
+    moe_interleave: int = 1          # layer i is MoE iff i % interleave ==
+                                     # interleave-1 (llama4: every 2nd)
+    moe_shared_expert: bool = False  # llama4
+    moe_dense_residual: bool = False # arctic: dense FFN parallel to MoE
+    moe_capacity_factor: float = 1.25
+    # --- SSM / hybrid --------------------------------------------------------
+    ssm_state: int = 0               # mamba2 N
+    ssm_headdim: int = 64            # mamba2 P
+    ssm_expand: int = 2              # d_inner = expand * d_model
+    ssm_chunk: int = 128             # SSD chunk length
+    hybrid_attn_every: int = 0       # recurrentgemma: attn layer every 3rd
+    lru_width: int = 0               # RG-LRU width (0 -> d_model)
+    local_window: int = 2048         # recurrentgemma local attention window
+    # --- encoder-decoder / frontends -----------------------------------------
+    encoder_layers: int = 0
+    encoder_seq: int = 1500          # whisper: 30 s of 20 ms frames
+    frontend: str | None = None      # audio_stub | vision_stub
+    frontend_tokens: int = 256       # vlm: patch embeddings per image
+    # --- numerics -------------------------------------------------------------
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_impl: str = "einsum"        # einsum (dry-run/XLA-costable) | flash
+    scan_unroll: bool = False        # python-loop layers (exact HLO cost
+                                     # accounting in the dry-run ladder)
+    moe_2d_dispatch: bool = False    # serving: shard dispatch d_model over
+                                     # data (weight-stationary experts) —
+                                     # see launch/specs.activation_specs
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def is_moe_layer(self, i: int) -> bool:
+        if not self.moe_experts:
+            return False
+        return (i % self.moe_interleave) == (self.moe_interleave - 1)
+
+    def is_attn_layer(self, i: int) -> bool:
+        """hybrid archs: which layers are (local) attention."""
+        if self.family != "hybrid":
+            return True
+        k = self.hybrid_attn_every
+        return k > 0 and (i % k) == (k - 1)
+
+
+# --------------------------------------------------------------------------
+# parameter definitions
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                  # normal | zeros | ones | lecun
+    scale: float = 1.0
+
+    def initializer(self, key: jax.Array) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "lecun":
+            fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+            std = math.sqrt(1.0 / fan_in)
+        else:
+            std = 0.02 * self.scale
+        return (jax.random.normal(key, self.shape, jnp.float32) * std
+                ).astype(self.dtype)
+
+
+ParamTree = Any  # nested dict[str, ParamDef | ParamTree]
+
+
+# --------------------------------------------------------------------------
+# sharding rules
+# --------------------------------------------------------------------------
+# logical axis -> mesh axis (or None). Tuple values shard over multiple axes.
+def sharding_rules(strategy: str, multi_pod: bool = False) -> dict:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    base = {
+        "batch": batch,
+        "seq": None,
+        "layers": None,            # scan dim, never sharded
+        "vocab": "model",
+        "embed": None,             # d_model
+        "qkv": "model",            # fused head*hd projection dim
+        "heads": "model",          # falls back to None if not divisible
+        "kv_heads": "model",
+        "head_dim": None,
+        "ffn": "model",
+        "expert": "model",         # EP
+        "expert_ffn": None,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "lru": "model",
+        "conv": None,
+    }
+    if strategy == "tp":
+        pass
+    elif strategy == "fsdp_tp":
+        # ZeRO-3 style: additionally shard the d_model dim of weights over
+        # the data axis; XLA all-gathers per scanned layer.
+        base["embed"] = "data"
+        base["expert_ffn"] = "data"
+    elif strategy == "ep_tp":
+        # serving layout: weight-stationary experts — expert dim over DATA
+        # (128/16 = 8 per row), ffn dims over model; no per-token weight
+        # gathers and no partial-sum ARs at the expert matmuls.
+        base["expert"] = "data"
+        base["expert_ffn"] = None
+    elif strategy == "dp":
+        for k in ("vocab", "qkv", "heads", "kv_heads", "ffn", "expert",
+                  "ssm_inner", "ssm_heads", "lru"):
+            base[k] = None
+    else:
+        raise ValueError(strategy)
+    return base
+
+
+def resolve_pspec(pdef: ParamDef, rules: dict, mesh: Mesh) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback."""
+    used: set = set()
+    out = []
+    for dim, ax in zip(pdef.shape, pdef.axes):
+        mesh_ax = rules.get(ax) if ax else None
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        axes_tuple = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+        size = int(np.prod([mesh.shape[a] for a in axes_tuple]))
+        if dim % size != 0 or any(a in used for a in axes_tuple):
+            out.append(None)
+            continue
+        used.update(axes_tuple)
+        out.append(mesh_ax)
+    return P(*out)
+
+
+def tree_map_defs(fn: Callable[[ParamDef], Any], defs: ParamTree) -> Any:
+    return jax.tree.map(fn, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_params(defs: ParamTree, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.initializer(k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs: ParamTree, rules: dict, mesh: Mesh) -> Any:
+    def mk(d: ParamDef):
+        spec = resolve_pspec(d, rules, mesh)
+        return jax.ShapeDtypeStruct(d.shape, d.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return tree_map_defs(mk, defs)
+
+
+def param_pspecs(defs: ParamTree, rules: dict, mesh: Mesh) -> Any:
+    return tree_map_defs(lambda d: resolve_pspec(d, rules, mesh), defs)
+
+
+def param_count(defs: ParamTree) -> int:
+    leaves = jax.tree.leaves(defs,
+                             is_leaf=lambda x: isinstance(x, ParamDef))
+    return sum(int(np.prod(d.shape)) for d in leaves)

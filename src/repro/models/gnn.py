@@ -1,0 +1,153 @@
+"""GNN models (the paper's training domain): GraphSAGE, GCN, GAT.
+
+Models operate on fixed-fanout sampled blocks (repro.sampling.neighbor):
+the dataloader delivers a deduplicated feature table `feats` (U, D) for the
+union of sampled nodes plus per-hop index arrays mapping hop nodes to table
+rows.  The innermost aggregation gathers straight from the table via the
+`segment_mean` Pallas kernel (the paper's aggregation hot-spot); outer hops
+aggregate already-transformed activations with reshape-mean.
+
+Layer semantics (GraphSAGE-mean, [11]):
+    h_dst' = act(W_self h_dst + W_nbr mean_{n in N(dst)} h_n)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models.common import ParamDef, init_params
+from repro.sampling.neighbor import SampledBlocks
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    model: str = "sage"              # sage | gcn | gat
+    in_dim: int = 1024
+    hidden_dim: int = 128            # paper §4.1: hidden 128
+    num_classes: int = 47
+    fanouts: Sequence[int] = (10, 5, 5)
+    num_heads: int = 4               # gat
+    use_pallas: bool = True
+
+
+def hop_indices(blocks: SampledBlocks) -> list[np.ndarray]:
+    """Map seeds + each hop's node ids to rows of blocks.all_nodes
+    (all_nodes is sorted-unique, so searchsorted is exact)."""
+    table = blocks.all_nodes
+    out = [np.searchsorted(table, blocks.seeds.astype(np.int64))]
+    for h in blocks.hop_nodes:
+        out.append(np.searchsorted(table, h))
+    return [o.astype(np.int32) for o in out]
+
+
+class GNN:
+    def __init__(self, cfg: GNNConfig):
+        self.cfg = cfg
+        self.L = len(cfg.fanouts)
+
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        dims = [cfg.in_dim] + [cfg.hidden_dim] * self.L
+        defs: dict = {}
+        for l in range(self.L):
+            d_in, d_out = dims[l], dims[l + 1]
+            layer = {
+                "w_self": ParamDef((d_in, d_out), ("embed", "ffn"),
+                                   jnp.float32, init="lecun"),
+                "w_nbr": ParamDef((d_in, d_out), ("embed", "ffn"),
+                                  jnp.float32, init="lecun"),
+                "b": ParamDef((d_out,), ("ffn",), jnp.float32, init="zeros"),
+            }
+            if cfg.model == "gat":
+                layer["attn_src"] = ParamDef((cfg.num_heads,
+                                              d_out // cfg.num_heads),
+                                             (None, None), jnp.float32,
+                                             init="normal")
+                layer["attn_dst"] = ParamDef((cfg.num_heads,
+                                              d_out // cfg.num_heads),
+                                             (None, None), jnp.float32,
+                                             init="normal")
+            defs[f"layer{l}"] = layer
+        defs["head"] = {
+            "w": ParamDef((cfg.hidden_dim, cfg.num_classes),
+                          ("ffn", None), jnp.float32, init="lecun"),
+            "b": ParamDef((cfg.num_classes,), (None,), jnp.float32,
+                          init="zeros"),
+        }
+        return defs
+
+    def init(self, key: jax.Array) -> dict:
+        return init_params(self.param_defs(), key)
+
+    # -- aggregation ----------------------------------------------------------
+    def _aggregate(self, x_nbr: jnp.ndarray, fanout: int) -> jnp.ndarray:
+        n = x_nbr.shape[0] // fanout
+        return x_nbr.reshape(n, fanout, -1).mean(axis=1)
+
+    def _layer(self, p: dict, x_dst, x_nbr_mean, x_nbr=None, fanout=None):
+        cfg = self.cfg
+        if cfg.model == "gcn":
+            deg = 1 + (fanout or 1)
+            h = (x_dst + x_nbr_mean * (fanout or 1)) / deg
+            return jax.nn.relu(h @ p["w_self"] + p["b"])
+        if cfg.model == "gat" and x_nbr is not None:
+            H = cfg.num_heads
+            n, f = x_dst.shape[0], fanout
+            hd = p["w_nbr"].shape[1] // H
+            zd = (x_dst @ p["w_self"]).reshape(n, H, hd)
+            zn = (x_nbr @ p["w_nbr"]).reshape(n, f, H, hd)
+            es = (zd * p["attn_src"]).sum(-1)                  # (n, H)
+            en = (zn * p["attn_dst"]).sum(-1)                  # (n, f, H)
+            e = jax.nn.leaky_relu(es[:, None, :] + en, 0.2)
+            a = jax.nn.softmax(e, axis=1)
+            agg = (a[..., None] * zn).sum(axis=1)              # (n, H, hd)
+            return jax.nn.elu(agg.reshape(n, H * hd) + p["b"])
+        # sage
+        return jax.nn.relu(x_dst @ p["w_self"] + x_nbr_mean @ p["w_nbr"]
+                           + p["b"])
+
+    # -- forward ----------------------------------------------------------------
+    def forward(self, params: dict, feats: jnp.ndarray,
+                hop_idx: list[jnp.ndarray]) -> jnp.ndarray:
+        """feats: (U, D) deduplicated gathered features; hop_idx: per-hop
+        row indices (len L+1, hop 0 = seeds). Returns seed logits.
+
+        Standard block-wise mini-batch computation: after GNN layer t, the
+        activations cover hop levels 0..L-t; layer t consumes level lvl+1
+        into level lvl.  The first layer's aggregation reads straight from
+        the deduplicated feature table via the segment_mean kernel (fused
+        gather+mean — the paper's aggregation stage); later layers
+        reshape-mean already-materialised activations.
+        """
+        cfg = self.cfg
+        fanouts = list(cfg.fanouts)
+        L = self.L
+        h = [feats[hop_idx[lvl]] for lvl in range(L + 1)]
+        for t in range(L):
+            p = params[f"layer{t}"]
+            new_h = []
+            for lvl in range(L - t):
+                f = fanouts[lvl]
+                if t == 0:
+                    idx = hop_idx[lvl + 1].reshape(-1, f)
+                    nbr_mean = ops.segment_mean(idx, feats,
+                                                use_pallas=cfg.use_pallas)
+                else:
+                    nbr_mean = self._aggregate(h[lvl + 1], f)
+                x_nbr = h[lvl + 1] if cfg.model == "gat" else None
+                new_h.append(self._layer(p, h[lvl], nbr_mean,
+                                         x_nbr=x_nbr, fanout=f))
+            h = new_h
+        logits = h[0] @ params["head"]["w"] + params["head"]["b"]
+        return logits
+
+    def loss(self, params, feats, hop_idx, labels) -> jnp.ndarray:
+        logits = self.forward(params, feats, hop_idx)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - lab)

@@ -1,0 +1,377 @@
+"""Shared neural layers: norms, rotary embeddings, attention, MLP, MoE.
+
+All functions are pure (params in, activations out) and shard_map/pjit
+friendly: tensor layouts keep batch leading and feature dims contiguous so
+the sharding rules in `common.py` propagate without resharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain as _constrain
+from repro.models.common import ModelConfig, ParamDef
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def norm_defs(cfg: ModelConfig, shape=None) -> dict:
+    shape = shape or (cfg.d_model,)
+    d = {"scale": ParamDef(shape, ("embed",) * len(shape), jnp.float32,
+                           init="ones")}
+    if cfg.norm_type == "layernorm":
+        d["bias"] = ParamDef(shape, ("embed",) * len(shape), jnp.float32,
+                             init="zeros")
+    return d
+
+
+def apply_norm(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def attention_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    d = {
+        "wq": ParamDef((D, H * hd), ("embed", "qkv"), cfg.param_dtype,
+                       init="lecun"),
+        "wk": ParamDef((D, KV * hd), ("embed", "qkv"), cfg.param_dtype,
+                       init="lecun"),
+        "wv": ParamDef((D, KV * hd), ("embed", "qkv"), cfg.param_dtype,
+                       init="lecun"),
+        "wo": ParamDef((H * hd, D), ("qkv", "embed"), cfg.param_dtype,
+                       init="lecun"),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDef((H * hd,), ("qkv",), jnp.float32, init="zeros")
+        d["bk"] = ParamDef((KV * hd,), ("qkv",), jnp.float32, init="zeros")
+        d["bv"] = ParamDef((KV * hd,), ("qkv",), jnp.float32, init="zeros")
+    if cfg.qk_norm:
+        d["q_norm"] = ParamDef((hd,), ("head_dim",), jnp.float32, init="ones")
+        d["k_norm"] = ParamDef((hd,), ("head_dim",), jnp.float32, init="ones")
+    return d
+
+
+def _rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf ** 2).mean(-1, keepdims=True) + eps) * scale
+    return y.astype(x.dtype)
+
+
+def _mask_bias(Sq, Sk, q_offset, causal, window, dtype):
+    """q_offset: scalar, or (B,) per-sequence offsets (slot decoding).
+    Returns (Sq, Sk) or (B, 1, 1, Sq, Sk)."""
+    vec = jnp.ndim(q_offset) == 1
+    if vec:
+        q_pos = q_offset[:, None, None] + jnp.arange(Sq)[None, :, None]
+        k_pos = jnp.arange(Sk)[None, None, :]
+    else:
+        q_pos = q_offset + jnp.arange(Sq)[:, None]
+        k_pos = jnp.arange(Sk)[None, :]
+    ok = k_pos <= q_pos if causal else \
+        jnp.broadcast_to(jnp.array(True), jnp.broadcast_shapes(
+            q_pos.shape, k_pos.shape))
+    if causal and window is not None:
+        ok &= k_pos > q_pos - window
+    elif window is not None:
+        ok = ok & (k_pos > q_pos - window)
+    bias = jnp.where(ok, 0.0, -1e30).astype(dtype)
+    if vec:
+        bias = bias[:, None, None, :, :]
+    return bias
+
+
+def attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+              kv_x: jnp.ndarray | None = None,
+              positions: jnp.ndarray | None = None,
+              kv_cache: tuple | None = None,
+              cache_index: jnp.ndarray | None = None,
+              causal: bool = True,
+              window: int | None = None,
+              static_kv: bool = False) -> tuple[jnp.ndarray, tuple | None]:
+    """Multi-head attention with GQA / SWA / qk-norm / bias / cache.
+
+    kv_x:      source for K,V (cross-attention) — defaults to x
+    kv_cache:  (k, v) of shape (B, S_cache, KV, hd); when given with
+               cache_index, new K/V are written at that index (prefill
+               writes the whole prompt at 0; decode writes 1 row at pos)
+    static_kv: cross-attention cache — if kv_x is given, encode it into the
+               cache once (prefill); if kv_x is None, reuse the cache
+               verbatim without computing K/V (decode)
+    returns (out, new_cache)
+    """
+    B, Sq, D = x.shape
+    H, KVh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+
+    q = jnp.einsum("bsd,dn->bsn", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+    q = q.reshape(B, Sq, H, hd)
+    if cfg.qk_norm:
+        q = _rms(q, p["q_norm"], cfg.norm_eps)
+
+    new_cache = None
+    q_offset = 0
+    if static_kv and kv_x is None:
+        # cross-attention decode: cache holds the encoded memory
+        assert kv_cache is not None
+        k, v = kv_cache
+        new_cache = kv_cache
+    else:
+        src = x if kv_x is None else kv_x
+        k = jnp.einsum("bsd,dn->bsn", src, p["wk"])
+        v = jnp.einsum("bsd,dn->bsn", src, p["wv"])
+        if cfg.qkv_bias:
+            k = k + p["bk"].astype(k.dtype)
+            v = v + p["bv"].astype(v.dtype)
+        k = k.reshape(B, src.shape[1], KVh, hd)
+        v = v.reshape(B, src.shape[1], KVh, hd)
+        if cfg.qk_norm:
+            k = _rms(k, p["k_norm"], cfg.norm_eps)
+        # cache_index may be a scalar or a per-sequence (B,) vector
+        # (continuous-batching slots decode at different positions)
+        idx_vec = None
+        if cache_index is not None:
+            idx_vec = jnp.broadcast_to(jnp.asarray(cache_index,
+                                                   jnp.int32), (B,)) \
+                if jnp.ndim(cache_index) <= 1 else cache_index
+        if cfg.pos_embed == "rope" and kv_x is None:
+            if positions is None:
+                positions = jnp.arange(Sq)
+                if kv_cache is not None and idx_vec is not None:
+                    positions = positions[None, :] + idx_vec[:, None]
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        if kv_cache is not None:
+            ck, cv = kv_cache                   # (B, S_cache, KV, hd)
+            if Sq == 1 and cache_index is not None:
+                # decode: one-hot masked write — elementwise along the
+                # sequence-sharded cache dim, so no resharding.  A
+                # dynamic-update-slice at a runtime index along a sharded
+                # dim makes XLA all-gather the whole cache per token
+                # (measured 1 GiB/token/layer on llama4 decode_32k).
+                hot = (jnp.arange(ck.shape[1])[None, :]
+                       == idx_vec[:, None])[:, :, None, None]
+                ck = jnp.where(hot, k.astype(ck.dtype), ck)
+                cv = jnp.where(hot, v.astype(cv.dtype), cv)
+            else:
+                idx = cache_index if cache_index is not None else 0
+                ck = jax.lax.dynamic_update_slice(
+                    ck, k.astype(ck.dtype), (0, idx, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cv, v.astype(cv.dtype), (0, idx, 0, 0))
+            if not static_kv:
+                q_offset = idx_vec if idx_vec is not None else 0
+                k, v = ck, cv
+            new_cache = (ck, cv)
+
+    group = H // KVh
+    # attention core is batch-parallel: shard B over every divisible mesh
+    # axis (head counts like 56/40/14 don't divide a 16-way model axis, and
+    # head-sharded scores otherwise lower to f32[S,S] partial-sum
+    # all-reduces — measured 21 GiB/layer on arctic-480b)
+    q = _constrain(q, "attn_act")
+    k = _constrain(k, "attn_act")
+    v = _constrain(v, "attn_act")
+
+    if cfg.attn_impl in ("flash", "flash_stub") and kv_x is None:
+        causal_here = causal and not static_kv
+        if cfg.attn_impl == "flash":
+            # Pallas blocked-attention kernel (kernels/flash_attention.py):
+            # no S^2 materialisation; interpret-mode on CPU, Mosaic on TPU.
+            from repro.kernels import ops as _kops
+            att = _kops.flash_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), causal=causal_here, window=window)
+            out = att.transpose(0, 2, 1, 3).reshape(B, Sq, H * hd)
+        else:
+            # dry-run stand-in with the KERNEL's HBM I/O (reads q and the
+            # FULL k/v exactly once, writes o; no S^2 traffic).  The
+            # kernel's FLOPs are re-added analytically by the dry-run
+            # (XLA cannot cost custom calls).
+            kk = jnp.repeat(k.mean(1, keepdims=True), group, axis=2)
+            vv = jnp.repeat(v.mean(1, keepdims=True), group, axis=2)
+            out = (q + kk + vv).reshape(B, Sq, H * hd)
+        out = _constrain(out, "attn_out")
+        out = jnp.einsum("bsn,nd->bsd", out, p["wo"])
+        return out, new_cache
+
+    # (B,S,H,hd) -> heads-major for the score einsum
+    qh = q.reshape(B, Sq, KVh, group, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qh, k) * (hd ** -0.5)
+    decode = kv_cache is not None and cache_index is not None and Sq == 1
+    scores = _constrain(scores,
+                        "attn_scores_decode" if decode else "attn_scores")
+    Sk = k.shape[1]
+    bias = _mask_bias(Sq, Sk, q_offset,
+                      causal and kv_x is None and not static_kv,
+                      window, scores.dtype)
+    if (kv_cache is not None and cache_index is not None and kv_x is None
+            and not static_kv):
+        # self-attention over a cache: mask unwritten slots (per sequence)
+        valid = (jnp.arange(Sk)[None, :]
+                 <= (idx_vec[:, None] + Sq - 1))[:, None, None, None, :]
+        bias = bias + jnp.where(valid, 0.0, -1e30).astype(bias.dtype)
+    scores = scores + bias
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1
+                           ).astype(x.dtype)
+    probs = _constrain(probs,
+                       "attn_scores_decode" if decode else "attn_scores")
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v).reshape(B, Sq, H * hd)
+    out = _constrain(out, "attn_out")
+    out = jnp.einsum("bsn,nd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "silu_gated":
+        return {
+            "w1": ParamDef((D, F), ("embed", "ffn"), cfg.param_dtype,
+                           init="lecun"),
+            "w3": ParamDef((D, F), ("embed", "ffn"), cfg.param_dtype,
+                           init="lecun"),
+            "w2": ParamDef((F, D), ("ffn", "embed"), cfg.param_dtype,
+                           init="lecun"),
+        }
+    return {  # gelu (whisper)
+        "w1": ParamDef((D, F), ("embed", "ffn"), cfg.param_dtype,
+                       init="lecun"),
+        "b1": ParamDef((F,), ("ffn",), jnp.float32, init="zeros"),
+        "w2": ParamDef((F, D), ("ffn", "embed"), cfg.param_dtype,
+                       init="lecun"),
+        "b2": ParamDef((D,), ("embed",), jnp.float32, init="zeros"),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.act == "silu_gated":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+        return h @ p["w2"]
+    h = jax.nn.gelu(x @ p["w1"] + p["b1"].astype(x.dtype))
+    return h @ p["w2"] + p["b2"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts — capacity-based scatter dispatch (Switch-style).
+#
+# Chosen over the dense-einsum dispatch (which materialises an (E, N, D)
+# tensor and inflates HLO FLOPs by E/top_k — measured 9.9 TiB temp at
+# llama4/train_4k) and over sort-based dropless routing (global sorts lower
+# poorly under SPMD).  Memory: one (N*k, E) fp32 one-hot for the
+# position-in-expert cumsum ≈ 0.5 GB global at N=1M, E=128 — 2 MB/device.
+# --------------------------------------------------------------------------
+def moe_defs(cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    d = {
+        "router": ParamDef((D, E), ("embed", None), jnp.float32,
+                           init="normal", scale=0.1),
+        "w1": ParamDef((E, D, F), ("expert", "expert_ffn", None),
+                       cfg.param_dtype, init="lecun"),
+        "w3": ParamDef((E, D, F), ("expert", "expert_ffn", None),
+                       cfg.param_dtype, init="lecun"),
+        "w2": ParamDef((E, F, D), ("expert", None, "expert_ffn"),
+                       cfg.param_dtype, init="lecun"),
+    }
+    if cfg.moe_shared_expert:
+        d["shared"] = mlp_defs(cfg)
+    if cfg.moe_dense_residual:
+        d["dense"] = mlp_defs(cfg)
+    return d
+
+
+def moe_block(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    B, S, D = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    N = B * S
+    xf = x.reshape(N, D)
+
+    # router matmul in compute dtype, softmax in f32: casting the (N, D)
+    # INPUT up to f32 instead makes the whole dispatch backward f32
+    # (measured +16 GiB/layer of f32 gradient all-reduces on arctic-480b)
+    logits = (xf @ p["router"].astype(xf.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, sel = jax.lax.top_k(probs, k)                     # (N, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    C = int((k * N / E) * cfg.moe_capacity_factor)
+    C = max(8, -(-C // 8) * 8)
+    eid = sel.reshape(-1)                                    # (N*k,)
+    onehot = jax.nn.one_hot(eid, E, dtype=jnp.float32)       # (N*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1.0
+    pos = pos.astype(jnp.int32)
+    keep = pos < C
+    slot = jnp.where(keep, eid * C + pos, E * C)             # overflow -> drop
+
+    token_of = jnp.arange(N * k, dtype=jnp.int32) // k
+    # gather-based dispatch: scatter only the int32 token ids into the
+    # (E*C+1,) slot table, then gather rows.  Scattering the rows directly
+    # (.at[slot].set(xf[token_of])) makes XLA materialise and all-gather a
+    # u32[N*k, D] index tensor — measured 2x56 GiB/layer on arctic-480b.
+    dispatch = jnp.full((E * C + 1,), N, jnp.int32).at[slot].set(token_of)
+    xf_pad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+    xe = xf_pad[dispatch[:E * C]]
+    xe = _constrain(xe.reshape(E, C, D), "moe_dispatch")
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w1"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w3"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w2"])              # (E, C, D)
+    ye = _constrain(ye, "moe_dispatch")
+
+    ypad = jnp.concatenate([ye.reshape(E * C, D),
+                            jnp.zeros((1, D), ye.dtype)], 0)
+    contrib = ypad[slot] * gates.reshape(-1)[:, None].astype(ye.dtype)
+    y = contrib.reshape(N, k, D).sum(axis=1)
+
+    if cfg.moe_shared_expert:
+        y = y + mlp(p["shared"], xf, cfg)
+    if cfg.moe_dense_residual:
+        y = y + mlp(p["dense"], xf, cfg)
+    return y.reshape(B, S, D)
+
+
+def moe_aux_loss(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Switch load-balancing loss: E * Σ_e f_e · p_e."""
+    B, S, D = x.shape
+    xf = x.reshape(-1, D)
+    probs = jax.nn.softmax(xf.astype(jnp.float32) @ p["router"], -1)
+    top = jnp.argmax(probs, -1)
+    f = jnp.mean(jax.nn.one_hot(top, cfg.moe_experts, dtype=jnp.float32), 0)
+    pbar = probs.mean(0)
+    return cfg.moe_experts * jnp.sum(f * pbar)

@@ -1,0 +1,290 @@
+"""Recurrent mixers: RG-LRU (recurrentgemma/Griffin) and Mamba-2 SSD.
+
+Both expose a sequence form (train / prefill — parallel across S via
+associative scan or chunked recurrence) and a single-step form (decode —
+O(1) state update, which is why these archs run the long_500k shape).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamDef
+
+RG_LRU_C = 8.0
+
+
+# --------------------------------------------------------------------------
+# depthwise causal conv (width K), shared by both mixers
+# --------------------------------------------------------------------------
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                ) -> jnp.ndarray:
+    """x: (B,S,C), w: (K,C) depthwise, b: (C,)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b.astype(out.dtype)
+
+
+def conv_step(state: jnp.ndarray, x_t: jnp.ndarray, w: jnp.ndarray,
+              b: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """state: (B,K-1,C) trailing inputs; x_t: (B,1,C)."""
+    window = jnp.concatenate([state, x_t], axis=1)        # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return window[:, 1:, :], out[:, None, :].astype(x_t.dtype)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent residual block)
+# --------------------------------------------------------------------------
+def rglru_defs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    pd = cfg.param_dtype
+    return {
+        "w_in": ParamDef((D, W), ("embed", "lru"), pd, init="lecun"),
+        "w_gate": ParamDef((D, W), ("embed", "lru"), pd, init="lecun"),
+        "conv_w": ParamDef((4, W), ("conv", "lru"), jnp.float32,
+                           init="normal", scale=0.5),
+        "conv_b": ParamDef((W,), ("lru",), jnp.float32, init="zeros"),
+        "wa": ParamDef((W, W), ("lru", None), pd, init="lecun"),
+        "ba": ParamDef((W,), ("lru",), jnp.float32, init="zeros"),
+        "wx": ParamDef((W, W), ("lru", None), pd, init="lecun"),
+        "bx": ParamDef((W,), ("lru",), jnp.float32, init="zeros"),
+        # Λ init so decay a ≈ U(0.9, 0.999) at r=1 (Griffin §2.4)
+        "lam": ParamDef((W,), ("lru",), jnp.float32, init="ones",
+                        scale=1.0),
+        "w_out": ParamDef((W, D), ("lru", "embed"), pd, init="lecun"),
+    }
+
+
+class RGLRUState(NamedTuple):
+    conv: jnp.ndarray   # (B, 3, W)
+    h: jnp.ndarray      # (B, W) f32
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int) -> RGLRUState:
+    W = cfg.lru_width or cfg.d_model
+    return RGLRUState(conv=jnp.zeros((batch, 3, W), cfg.compute_dtype),
+                      h=jnp.zeros((batch, W), jnp.float32))
+
+
+def _rglru_gates(p: dict, u: jnp.ndarray):
+    """u: post-conv input (..., W) -> decay a, driven input b (f32)."""
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["wa"].astype(jnp.float32)
+                       + p["ba"])
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["wx"].astype(jnp.float32)
+                       + p["bx"])
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) \
+        * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_block(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                state: RGLRUState | None = None, *,
+                return_state: bool = False
+                ) -> tuple[jnp.ndarray, RGLRUState | None]:
+    """x: (B,S,D).
+
+    state None  -> sequence mode (train/prefill): parallel associative scan;
+                   pass return_state=True (prefill) to also emit the final
+                   recurrent + conv state.
+    state given -> single-step decode (S must be 1).
+    """
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u_raw = x @ p["w_in"]
+
+    if state is None:
+        u = causal_conv(u_raw, p["conv_w"], p["conv_b"]).astype(u_raw.dtype)
+        a, b = _rglru_gates(p, u)
+
+        def op(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+        new_state = None
+        if return_state:
+            tail = u_raw[:, -3:, :]
+            pad = 3 - tail.shape[1]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            new_state = RGLRUState(conv=tail.astype(cfg.compute_dtype),
+                                   h=h[:, -1, :])
+    else:
+        new_conv, u1 = conv_step(state.conv, u_raw, p["conv_w"], p["conv_b"])
+        a, b = _rglru_gates(p, u1)
+        h1 = a[:, 0] * state.h + b[:, 0]
+        h = h1[:, None, :]
+        new_state = RGLRUState(conv=new_conv, h=h1)
+
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y, new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 SSD block (state-space duality, chunked)
+# --------------------------------------------------------------------------
+def ssd_defs(cfg: ModelConfig) -> dict:
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pd = cfg.param_dtype
+    conv_ch = DI + 2 * N
+    return {
+        "wz": ParamDef((D, DI), ("embed", "ssm_inner"), pd, init="lecun"),
+        "wx": ParamDef((D, DI), ("embed", "ssm_inner"), pd, init="lecun"),
+        "wB": ParamDef((D, N), ("embed", "ssm_state"), pd, init="lecun"),
+        "wC": ParamDef((D, N), ("embed", "ssm_state"), pd, init="lecun"),
+        "wdt": ParamDef((D, H), ("embed", "ssm_heads"), pd, init="lecun"),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), jnp.float32, init="zeros"),
+        "A_log": ParamDef((H,), ("ssm_heads",), jnp.float32, init="ones"),
+        "D_skip": ParamDef((H,), ("ssm_heads",), jnp.float32, init="ones"),
+        "conv_w": ParamDef((4, conv_ch), ("conv", None), jnp.float32,
+                           init="normal", scale=0.5),
+        "conv_b": ParamDef((conv_ch,), (None,), jnp.float32, init="zeros"),
+        "norm": ParamDef((DI,), ("ssm_inner",), jnp.float32, init="ones"),
+        "w_out": ParamDef((DI, D), ("ssm_inner", "embed"), pd, init="lecun"),
+    }
+
+
+class SSDState(NamedTuple):
+    conv: jnp.ndarray   # (B, 3, DI + 2N)
+    h: jnp.ndarray      # (B, H, P, N) f32
+
+
+def ssd_init_state(cfg: ModelConfig, batch: int) -> SSDState:
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    return SSDState(conv=jnp.zeros((batch, 3, DI + 2 * N), cfg.compute_dtype),
+                    h=jnp.zeros((batch, H, P, N), jnp.float32))
+
+
+def _gated_rmsnorm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                   eps: float) -> jnp.ndarray:
+    g = (y * jax.nn.silu(z)).astype(jnp.float32)
+    out = g * jax.lax.rsqrt((g ** 2).mean(-1, keepdims=True) + eps) * scale
+    return out
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., Q) -> (..., Q, Q) lower-tri pairwise sums
+    L[i,j] = sum_{j < k <= i} a_k  (i >= j), -inf above diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_block(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+              state: SSDState | None = None, *,
+              return_state: bool = False
+              ) -> tuple[jnp.ndarray, SSDState | None]:
+    """Mamba-2 mixer. x: (B,S,D) -> (B,S,D).  Modes as in rglru_block."""
+    Bsz, S, D = x.shape
+    DI, N = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.ssm_heads, cfg.ssm_headdim
+    z = x @ p["wz"]
+    xc_raw = jnp.concatenate([x @ p["wx"], x @ p["wB"], x @ p["wC"]], axis=-1)
+    xc = xc_raw
+    dt = jax.nn.softplus(
+        (x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                    # (H,)
+
+    if state is None:
+        xc = jax.nn.silu(causal_conv(xc, p["conv_w"], p["conv_b"])
+                         ).astype(x.dtype)
+        xs, Bm, Cm = jnp.split(xc, [DI, DI + N], axis=-1)
+        xs = xs.reshape(Bsz, S, H, P)
+        # pad S to a chunk multiple; padded steps get dt=0 (identity decay,
+        # zero input) so outputs before S and the final state are exact.
+        Q = cfg.ssm_chunk
+        S_pad = -(-S // Q) * Q
+        if S_pad != S:
+            pad = ((0, 0), (0, S_pad - S))
+            xs = jnp.pad(xs, pad + ((0, 0), (0, 0)))
+            dt = jnp.pad(dt, pad + ((0, 0),))
+            Bm = jnp.pad(Bm, pad + ((0, 0),))
+            Cm = jnp.pad(Cm, pad + ((0, 0),))
+        y, h_final = _ssd_chunked(xs, dt, A, Bm, Cm, p["D_skip"],
+                                  cfg.ssm_chunk)
+        if S_pad != S:
+            y = y[:, :S]
+        new_state = None
+        if return_state:
+            tail = xc_raw[:, -3:, :]
+            pad = 3 - tail.shape[1]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            new_state = SSDState(conv=tail.astype(cfg.compute_dtype),
+                                 h=h_final)
+    else:
+        new_conv, xc1 = conv_step(state.conv, xc, p["conv_w"], p["conv_b"])
+        xc1 = jax.nn.silu(xc1).astype(x.dtype)
+        xs, Bm, Cm = jnp.split(xc1, [DI, DI + N], axis=-1)
+        xs = xs.reshape(Bsz, 1, H, P)
+        dtA = jnp.exp(dt[:, 0] * A)                             # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         Bm[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32))
+        h = dtA[:, :, None, None] * state.h + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, 0].astype(jnp.float32))
+        y = y + p["D_skip"][:, None] * xs[:, 0].astype(jnp.float32)
+        y = y.reshape(Bsz, 1, DI)
+        new_state = SSDState(conv=new_conv, h=h)
+
+    y = _gated_rmsnorm(y.astype(jnp.float32), z.astype(jnp.float32),
+                       p["norm"], cfg.norm_eps).astype(x.dtype)
+    return y @ p["w_out"], new_state
+
+
+def _ssd_chunked(xs, dt, A, Bm, Cm, D_skip, Q: int) -> jnp.ndarray:
+    """Chunked SSD scan (Mamba-2 Alg. 1, single B/C group).
+
+    xs: (B,S,H,P); dt: (B,S,H) f32; A: (H,); Bm/Cm: (B,S,N).
+    Sequential lax.scan across S/Q chunks carrying the (B,H,P,N) state;
+    quadratic attention-like compute within each chunk.
+    """
+    Bsz, S, H, P = xs.shape
+    N = Bm.shape[-1]
+    nc = S // Q
+    assert nc * Q == S, (S, Q)
+    xs = xs.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    dt = dt.reshape(Bsz, nc, Q, H)
+    Bm = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cm = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    a = dt * A                                  # (B,nc,Q,H) log-decay
+    a_cs = jnp.cumsum(a, axis=2)
+    # intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))          # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcsh,bcshp->bclhp",
+                        Cm, Bm, L, dt, xs)
+    # per-chunk input states
+    decay_states = jnp.exp(a_cs[:, :, -1:, :] - a_cs)      # (B,nc,Q,H)
+    states = jnp.einsum("bcsn,bcsh,bcsh,bcshp->bchpn",
+                        Bm, decay_states, dt, xs)
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])               # (B,nc,H)
+
+    # inter-chunk linear recurrence h_c = cd_c * h_{c-1} + st_c via
+    # associative scan over the chunk axis (log-depth, while-free — fully
+    # visible to HLO cost analysis, unlike lax.scan's hidden trip count)
+    def op(c1, c2):
+        a1, s1 = c1
+        a2, s2 = c2
+        return a1 * a2, a2[:, :, :, None, None] * s1 + s2
+
+    _, h_inc = jax.lax.associative_scan(op, (chunk_decay, states), axis=1)
+    h_last = h_inc[:, -1]                                  # (B,H,P,N)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_inc[:, :1]), h_inc[:, :-1]], axis=1)
+    # inter-chunk contribution
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                       Cm, jnp.exp(a_cs), h_prev)
+    y = y_diag + y_off + D_skip[:, None] * xs              # (B,nc,Q,H,P)
+    return y.reshape(Bsz, S, H * P), h_last

@@ -1,0 +1,391 @@
+"""Unified LM covering all 10 assigned architectures.
+
+One model class; the config selects the layer plan:
+
+  dense / vlm        [("attn_dense",) x L]                    (scan)
+  moe interleave=1   [("attn_moe",) x L]                      (arctic)
+  moe interleave=2   [("attn_dense", "attn_moe") x L/2]       (llama4)
+  hybrid 1:2         [("rec","rec","attn") x L//3 + remainder] (recurrentgemma)
+  ssm                [("ssm",) x L]                           (mamba2)
+  encdec             encoder [("enc",) x Le] + decoder [("dec",) x Ld]
+
+Layers are stacked along a leading axis and executed with `jax.lax.scan`
+(compile time independent of depth; remat-able per group).  Serving carries a
+per-group cache pytree (KV / RG-LRU / SSD states) through the same scan.
+
+Sharding: models are mesh-agnostic; activation constraints are applied via a
+context (`activation_sharding`) set by the launcher, so the same forward
+lowers for 1 CPU device (smoke tests) or a 512-chip mesh (dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import recurrent as R
+from repro.models.common import (ModelConfig, ParamDef, init_params,
+                                 tree_map_defs)
+
+from repro.distributed.ctx import activation_sharding, constrain as _constrain  # noqa: F401 (re-export)
+
+
+# --------------------------------------------------------------------------
+# per-kind block definitions
+# --------------------------------------------------------------------------
+def _block_defs(cfg: ModelConfig, kind: str) -> dict:
+    if kind == "attn_dense":
+        return {"ln1": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+                "ln2": L.norm_defs(cfg), "mlp": L.mlp_defs(cfg)}
+    if kind == "attn_moe":
+        return {"ln1": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+                "ln2": L.norm_defs(cfg), "moe": L.moe_defs(cfg)}
+    if kind == "rec":
+        return {"ln1": L.norm_defs(cfg), "rec": R.rglru_defs(cfg),
+                "ln2": L.norm_defs(cfg), "mlp": L.mlp_defs(cfg)}
+    if kind == "attn_local":
+        return {"ln1": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+                "ln2": L.norm_defs(cfg), "mlp": L.mlp_defs(cfg)}
+    if kind == "ssm":
+        return {"ln1": L.norm_defs(cfg), "ssm": R.ssd_defs(cfg)}
+    if kind == "enc":
+        return {"ln1": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+                "ln2": L.norm_defs(cfg), "mlp": L.mlp_defs(cfg)}
+    if kind == "dec":
+        return {"ln1": L.norm_defs(cfg), "attn": L.attention_defs(cfg),
+                "lnx": L.norm_defs(cfg), "xattn": L.attention_defs(cfg),
+                "ln2": L.norm_defs(cfg), "mlp": L.mlp_defs(cfg)}
+    raise ValueError(kind)
+
+
+def _stack(defs: Any, n: int) -> Any:
+    return tree_map_defs(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.dtype,
+                           d.init, d.scale), defs)
+
+
+# --------------------------------------------------------------------------
+# cache structures (per kind)
+# --------------------------------------------------------------------------
+def _kv_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    return (batch, seq, cfg.num_kv_heads, cfg.hd)
+
+
+def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                      enc_seq: int = 0):
+    dt = cfg.compute_dtype
+    if kind in ("attn_dense", "attn_moe", "attn_local"):
+        shape = _kv_cache_shape(cfg, batch, seq)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if kind == "rec":
+        return R.rglru_init_state(cfg, batch)._asdict()
+    if kind == "ssm":
+        return R.ssd_init_state(cfg, batch)._asdict()
+    if kind == "dec":
+        shape = _kv_cache_shape(cfg, batch, seq)
+        xshape = _kv_cache_shape(cfg, batch, enc_seq)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+                "xk": jnp.zeros(xshape, dt), "xv": jnp.zeros(xshape, dt)}
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# the model
+# --------------------------------------------------------------------------
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.plan = self._layer_plan()          # [(kinds tuple, n_groups)]
+
+    # ---- plan ----------------------------------------------------------------
+    def _layer_plan(self) -> list[tuple[tuple[str, ...], int]]:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return [(("ssm",), cfg.num_layers)]
+        if cfg.family == "hybrid":
+            k = cfg.hybrid_attn_every
+            group = ("rec",) * (k - 1) + ("attn_local",)
+            n, rem = divmod(cfg.num_layers, k)
+            plan = [(group, n)]
+            if rem:
+                plan.append((("rec",) * rem, 1))
+            return plan
+        if cfg.family == "encdec":
+            return [(("dec",), cfg.num_layers)]
+        if cfg.moe_experts:
+            il = cfg.moe_interleave
+            group = ("attn_dense",) * (il - 1) + ("attn_moe",)
+            assert cfg.num_layers % il == 0, (cfg.num_layers, il)
+            return [(group, cfg.num_layers // il)]
+        return [(("attn_dense",), cfg.num_layers)]
+
+    # ---- params ----------------------------------------------------------------
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        V, D = cfg.padded_vocab, cfg.d_model
+        defs: dict = {
+            "embed": ParamDef((V, D), ("vocab", "embed"), cfg.param_dtype,
+                              init="normal"),
+            "final_norm": L.norm_defs(cfg),
+            "stacks": [
+                _stack({f"b{i}": _block_defs(cfg, kind)
+                        for i, kind in enumerate(kinds)}, n)
+                for kinds, n in self.plan
+            ],
+        }
+        if not cfg.tie_embeddings:
+            defs["unembed"] = ParamDef((D, V), ("embed", "vocab"),
+                                       cfg.param_dtype, init="normal")
+        if cfg.pos_embed == "learned":
+            defs["pos"] = ParamDef((cfg.max_position, D), (None, "embed"),
+                                   cfg.param_dtype, init="normal")
+        if cfg.family == "encdec":
+            defs["encoder"] = {
+                "stack": _stack({"b0": _block_defs(cfg, "enc")},
+                                cfg.encoder_layers),
+                "final_norm": L.norm_defs(cfg),
+                "pos": ParamDef((cfg.encoder_seq, D), (None, "embed"),
+                                cfg.param_dtype, init="normal"),
+                "frontend": ParamDef((D, D), ("embed", None),
+                                     cfg.param_dtype, init="lecun"),
+            }
+        if cfg.frontend == "vision_stub":
+            defs["frontend"] = ParamDef((D, D), ("embed", None),
+                                        cfg.param_dtype, init="lecun")
+        return defs
+
+    def init(self, key: jax.Array) -> dict:
+        return init_params(self.param_defs(), key)
+
+    # ---- blocks ----------------------------------------------------------------
+    def _apply_block(self, kind: str, p: dict, x, *, mode="train",
+                     cache=None, index=None, enc_out=None):
+        """mode: train (no cache) | prefill (seq, fill cache) | decode
+        (single step against cache)."""
+        cfg = self.cfg
+        res_scale = cfg.residual_scale
+        new_cache = dict(cache) if cache is not None else None
+        if kind in ("attn_dense", "attn_moe", "attn_local", "enc", "dec"):
+            h = L.apply_norm(p["ln1"], x, cfg)
+            window = None
+            if kind == "attn_local":
+                window = cfg.local_window
+            elif cfg.attn_window is not None:
+                window = cfg.attn_window
+            kv = None if cache is None else (cache["k"], cache["v"])
+            a, kv_new = L.attention(p["attn"], h, cfg, kv_cache=kv,
+                                    cache_index=index,
+                                    causal=(kind != "enc"), window=window)
+            if kv_new is not None:
+                new_cache["k"], new_cache["v"] = kv_new
+            x = x + res_scale * a
+            if kind == "dec":
+                h = L.apply_norm(p["lnx"], x, cfg)
+                xkv = (cache["xk"], cache["xv"]) if cache is not None else None
+                a, xkv_new = L.attention(
+                    p["xattn"], h, cfg, kv_x=enc_out, kv_cache=xkv,
+                    cache_index=None, causal=False,
+                    static_kv=cache is not None)
+                if cache is not None and xkv_new is not None:
+                    new_cache["xk"], new_cache["xv"] = xkv_new
+                x = x + res_scale * a
+            h = L.apply_norm(p["ln2"], x, cfg)
+            if kind == "attn_moe":
+                m = L.moe_block(p["moe"], h, cfg)
+            else:
+                m = L.mlp(p["mlp"], h, cfg)
+            return x + res_scale * m, new_cache
+        if kind == "rec":
+            h = L.apply_norm(p["ln1"], x, cfg)
+            st = R.RGLRUState(**cache) if mode == "decode" else None
+            r, st_new = R.rglru_block(p["rec"], h, cfg, st,
+                                      return_state=(mode == "prefill"))
+            if st_new is not None:
+                new_cache = st_new._asdict()
+            x = x + res_scale * r
+            h = L.apply_norm(p["ln2"], x, cfg)
+            return x + res_scale * L.mlp(p["mlp"], h, cfg), new_cache
+        if kind == "ssm":
+            h = L.apply_norm(p["ln1"], x, cfg)
+            st = R.SSDState(**cache) if mode == "decode" else None
+            s, st_new = R.ssd_block(p["ssm"], h, cfg, st,
+                                    return_state=(mode == "prefill"))
+            if st_new is not None:
+                new_cache = st_new._asdict()
+            return x + res_scale * s, new_cache
+        raise ValueError(kind)
+
+    # ---- stacked application ----------------------------------------------------
+    def _run_stacks(self, params: dict, x, *, mode="train", caches=None,
+                    index=None, enc_out=None):
+        cfg = self.cfg
+        new_caches = []
+        for si, (kinds, n) in enumerate(self.plan):
+            stack_params = params["stacks"][si]
+            stack_cache = None if caches is None else caches[si]
+
+            if stack_cache is None:
+                def train_fn(carry, gp, _kinds=kinds):
+                    h = carry
+                    for i, kind in enumerate(_kinds):
+                        h, _ = self._apply_block(kind, gp[f"b{i}"], h,
+                                                 mode="train",
+                                                 enc_out=enc_out)
+                    return h, 0.0
+
+                fn = train_fn
+                if cfg.remat:
+                    fn = jax.checkpoint(
+                        train_fn,
+                        policy=jax.checkpoint_policies.nothing_saveable)
+                if cfg.scan_unroll:
+                    for g in range(n):
+                        gp = jax.tree.map(lambda a: a[g], stack_params)
+                        x, _ = fn(x, gp)
+                else:
+                    x, _ = jax.lax.scan(fn, x, stack_params)
+                new_caches.append(None)
+            else:
+                def serve_fn(carry, xs, _kinds=kinds):
+                    h = carry
+                    gp, gc = xs
+                    out_c = {}
+                    for i, kind in enumerate(_kinds):
+                        h, nc = self._apply_block(kind, gp[f"b{i}"], h,
+                                                  mode=mode,
+                                                  cache=gc[f"b{i}"],
+                                                  index=index,
+                                                  enc_out=enc_out)
+                        out_c[f"b{i}"] = nc
+                    return h, out_c
+
+                if cfg.scan_unroll:
+                    outs = []
+                    for g in range(n):
+                        gp = jax.tree.map(lambda a: a[g], stack_params)
+                        gc = jax.tree.map(lambda a: a[g], stack_cache)
+                        x, oc = serve_fn(x, (gp, gc))
+                        outs.append(oc)
+                    out_caches = jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *outs)
+                else:
+                    x, out_caches = jax.lax.scan(serve_fn, x,
+                                                 (stack_params, stack_cache))
+                new_caches.append(out_caches)
+        return x, new_caches
+
+    # ---- embedding / head ----------------------------------------------------
+    def _embed(self, params: dict, batch: dict):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"][tokens].astype(cfg.compute_dtype)
+        x = x * cfg.embed_scale
+        if cfg.pos_embed == "learned":
+            pos = batch.get("positions")
+            if pos is None:
+                pos = jnp.arange(tokens.shape[1])
+            x = x + params["pos"][pos].astype(x.dtype)
+        if cfg.frontend == "vision_stub" and "patches" in batch:
+            pe = batch["patches"].astype(x.dtype) @ params["frontend"]
+            x = jnp.concatenate([pe, x], axis=1)
+        return _constrain(x, "activations")
+
+    def _head(self, params: dict, x) -> jnp.ndarray:
+        cfg = self.cfg
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+        # mask padded vocab
+        if cfg.padded_vocab != cfg.vocab_size:
+            mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+            logits = jnp.where(mask, logits, -1e30)
+        return logits
+
+    def _encode(self, params: dict, batch: dict):
+        """whisper encoder over stub frame embeddings (B, S_enc, D)."""
+        cfg = self.cfg
+        enc = params["encoder"]
+        x = batch["frames"].astype(cfg.compute_dtype) @ enc["frontend"]
+        x = x + enc["pos"][jnp.arange(x.shape[1])].astype(x.dtype)
+
+        def enc_fn(carry, gp):
+            h, _ = self._apply_block("enc", gp["b0"], carry, mode="train")
+            return h, 0.0
+
+        fn = jax.checkpoint(enc_fn) if cfg.remat else enc_fn
+        if cfg.scan_unroll:
+            for g in range(cfg.encoder_layers):
+                x, _ = fn(x, jax.tree.map(lambda a: a[g], enc["stack"]))
+        else:
+            x, _ = jax.lax.scan(fn, x, enc["stack"])
+        return L.apply_norm(enc["final_norm"], x, cfg)
+
+    # ---- public API ----------------------------------------------------------
+    def forward(self, params: dict, batch: dict) -> jnp.ndarray:
+        """Teacher-forced logits (training / prefill-no-cache)."""
+        enc_out = None
+        if self.cfg.family == "encdec":
+            enc_out = self._encode(params, batch)
+        x = self._embed(params, batch)
+        x, _ = self._run_stacks(params, x, enc_out=enc_out)
+        return self._head(params, x)
+
+    def loss(self, params: dict, batch: dict) -> jnp.ndarray:
+        cfg = self.cfg
+        logits = self.forward(params, batch)
+        labels = batch["labels"]
+        if cfg.frontend == "vision_stub" and "patches" in batch:
+            logits = logits[:, batch["patches"].shape[1]:, :]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        lab = jnp.take_along_axis(
+            logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+        nll = lse - lab
+        mask = (labels >= 0).astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+    # ---- serving ----------------------------------------------------------
+    def init_cache(self, batch_size: int, seq_len: int) -> list:
+        cfg = self.cfg
+        caches = []
+        for kinds, n in self.plan:
+            group = {}
+            for i, kind in enumerate(kinds):
+                c = _init_block_cache(cfg, kind, batch_size, seq_len,
+                                      enc_seq=cfg.encoder_seq)
+                group[f"b{i}"] = c
+            # stack along leading layer axis
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape), group))
+        return caches
+
+    def prefill(self, params: dict, batch: dict, cache: list):
+        """Run the prompt through the model, filling the cache; returns
+        (last-token logits, cache)."""
+        enc_out = None
+        if self.cfg.family == "encdec":
+            enc_out = self._encode(params, batch)
+        x = self._embed(params, batch)
+        x, new_caches = self._run_stacks(params, x, mode="prefill",
+                                         caches=cache, index=jnp.int32(0),
+                                         enc_out=enc_out)
+        logits = self._head(params, x[:, -1:, :])
+        return logits, new_caches
+
+    def decode_step(self, params: dict, token: jnp.ndarray,
+                    cache: list, index: jnp.ndarray):
+        """One decode step. token: (B, 1); index: scalar position."""
+        batch = {"tokens": token}
+        if self.cfg.pos_embed == "learned":
+            batch["positions"] = (index[:, None] if index.ndim == 1
+                                  else index[None])
+        x = self._embed(params, batch)
+        x, new_caches = self._run_stacks(params, x, mode="decode",
+                                         caches=cache, index=index)
+        return self._head(params, x), new_caches

@@ -1,0 +1,98 @@
+"""GraphSAGE uniform neighborhood sampling (paper §2.2.2).
+
+Two implementations with identical semantics:
+
+* `host_sample_blocks` — numpy, drives the prefetch pipeline (the paper's
+  "CPU sampling" baseline path, Fig. 3/7).
+* `device_sample_blocks` — jittable JAX over a `DeviceCSR` (the paper's
+  GPU-sampling path: latency hidden by parallelism).  Fixed fan-out with
+  self-padding (absent neighbors repeat the seed), so shapes are static.
+
+A "block" (DGL terminology) for hop ``l`` maps destination nodes (seeds of
+that hop) to their sampled neighbors.  The union of all hops' nodes is the
+set of feature rows the aggregation stage must fetch — the quantity the GIDS
+accumulator counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph, DeviceCSR
+
+
+@dataclasses.dataclass
+class SampledBlocks:
+    """One mini-batch's sampled computational graph.
+
+    seeds:      (B,) the hop-0 target nodes
+    hop_nodes:  list per hop: (B * prod(fanouts[:l]),) source node ids
+                (padded with the destination node itself when degree < fanout)
+    all_nodes:  unique node ids whose features must be gathered
+    counts:     per-hop edge counts (for request accounting)
+    """
+    seeds: np.ndarray
+    hop_nodes: list
+    all_nodes: np.ndarray
+    num_requests: int
+
+
+def host_sample_blocks(graph: CSRGraph, seeds: np.ndarray,
+                       fanouts: Sequence[int], rng: np.random.Generator
+                       ) -> SampledBlocks:
+    frontier = seeds.astype(np.int64)
+    hop_nodes = []
+    for f in fanouts:
+        deg = graph.indptr[frontier + 1] - graph.indptr[frontier]
+        # uniform with replacement (matches DGL replace=True fast path);
+        # degree-0 nodes self-loop.
+        r = rng.random((frontier.shape[0], f))
+        offs = np.floor(r * np.maximum(deg, 1)[:, None]).astype(np.int64)
+        base = graph.indptr[frontier][:, None]
+        nbr = graph.indices[np.minimum(base + offs,
+                                       graph.num_edges - 1)].astype(np.int64)
+        nbr = np.where(deg[:, None] > 0, nbr, frontier[:, None])
+        nbr = nbr.reshape(-1)
+        hop_nodes.append(nbr)
+        frontier = nbr
+    all_nodes = np.unique(np.concatenate([seeds.astype(np.int64), *hop_nodes]))
+    n_req = int(seeds.shape[0] + sum(h.shape[0] for h in hop_nodes))
+    return SampledBlocks(seeds=seeds, hop_nodes=hop_nodes,
+                         all_nodes=all_nodes, num_requests=n_req)
+
+
+def device_sample_blocks(csr: DeviceCSR, seeds: jnp.ndarray,
+                         fanouts: Sequence[int], key: jax.Array):
+    """Jittable fixed-fanout sampler. Returns (list of per-hop node arrays,
+    flat concatenated node ids). Shapes are static given (|seeds|, fanouts)."""
+    frontier = seeds.astype(jnp.int32)
+    hops = []
+    for i, f in enumerate(fanouts):
+        key_i = jax.random.fold_in(key, i)
+        start = csr.indptr[frontier]
+        deg = csr.indptr[frontier + 1] - start
+        r = jax.random.uniform(key_i, (frontier.shape[0], f))
+        offs = jnp.floor(r * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
+        idx = jnp.minimum(start[:, None] + offs, csr.indices.shape[0] - 1)
+        nbr = csr.indices[idx]
+        nbr = jnp.where(deg[:, None] > 0, nbr, frontier[:, None])
+        nbr = nbr.reshape(-1)
+        hops.append(nbr)
+        frontier = nbr
+    flat = jnp.concatenate([seeds.astype(jnp.int32), *hops])
+    return hops, flat
+
+
+def subgraph_sizes(batch: int, fanouts: Sequence[int]) -> int:
+    """Closed-form node count of a padded sampled subgraph
+    (paper Fig. 2: 1 + 3 + 6 for fanout (3,2) on one seed... generally
+    B * (1 + f1 + f1*f2 + ...))."""
+    n, prod = batch, batch
+    for f in fanouts:
+        prod *= f
+        n += prod
+    return n

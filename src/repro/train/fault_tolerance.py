@@ -1,0 +1,98 @@
+"""Fault-tolerance runtime: step watchdog, straggler mitigation, elastic
+restart policy.
+
+On a real multi-pod deployment the failure modes are (a) hard node loss,
+(b) slow/straggling hosts, (c) preemption.  This module provides the
+host-side machinery; the data-plane contributions of the paper compose with
+it naturally:
+
+  * the GIDS accumulator's dispatch-ahead queue IS the straggler absorber —
+    a host whose storage/preprocessing stalls for < merge_depth iterations
+    never stalls the accelerators (the queue drains);
+  * the window buffer + sampler PRNG state checkpoint with the model, so a
+    restart replays the exact sample stream (no silently skipped data);
+  * restore re-shards onto whatever mesh survives (see checkpoint.restore),
+    so losing a pod degrades to single-pod training instead of aborting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class WatchdogConfig:
+    step_timeout_factor: float = 5.0   # flag a step slower than 5x median
+    min_history: int = 16
+    checkpoint_every: int = 100
+    max_step_history: int = 256
+
+
+class StepWatchdog:
+    """Tracks step latencies; flags stragglers and drives checkpoint cadence.
+
+    With dispatch-ahead (the accumulator), a flagged slow *data* step only
+    re-issues prefetches; a flagged slow *compute* step on real hardware
+    triggers the external orchestrator (restart-from-checkpoint)."""
+
+    def __init__(self, cfg: WatchdogConfig | None = None):
+        self.cfg = cfg or WatchdogConfig()
+        self.history: list[float] = []
+        self.flagged: list[tuple[int, float]] = []
+        self._t0: float | None = None
+        self._step = 0
+
+    def start_step(self, step: int) -> None:
+        self._step = step
+        self._t0 = time.monotonic()
+
+    def end_step(self) -> bool:
+        """Returns True if this step was a straggler."""
+        dt = time.monotonic() - self._t0
+        straggler = False
+        if len(self.history) >= self.cfg.min_history:
+            med = sorted(self.history)[len(self.history) // 2]
+            if dt > self.cfg.step_timeout_factor * med:
+                self.flagged.append((self._step, dt))
+                straggler = True
+        self.history.append(dt)
+        if len(self.history) > self.cfg.max_step_history:
+            self.history.pop(0)
+        return straggler
+
+    def should_checkpoint(self, step: int) -> bool:
+        return step > 0 and step % self.cfg.checkpoint_every == 0
+
+    @property
+    def median_step_s(self) -> float:
+        if not self.history:
+            return 0.0
+        return sorted(self.history)[len(self.history) // 2]
+
+
+def run_with_restarts(make_state: Callable, train_one: Callable,
+                      total_steps: int, *, ckpt_dir, save_every: int = 50,
+                      inject_failure_at: int | None = None):
+    """Crash-safe training loop driver used by tests/examples: builds state,
+    optionally simulates a hard failure, restarts from the latest commit and
+    proves bitwise-resumable iteration.
+
+    make_state(restore_step | None) -> (state, start_step)
+    train_one(state, step)          -> state
+    """
+    from repro.train import checkpoint as ckpt
+
+    state, start = make_state(ckpt.latest_step(ckpt_dir))
+    step = start
+    while step < total_steps:
+        if inject_failure_at is not None and step == inject_failure_at:
+            inject_failure_at = None          # fail exactly once
+            state, start = make_state(ckpt.latest_step(ckpt_dir))
+            step = start
+            continue
+        state = train_one(state, step)
+        step += 1
+        if step % save_every == 0 or step == total_steps:
+            ckpt.save(ckpt_dir, step, state)
+    return state, step

@@ -1,0 +1,245 @@
+"""Optimizers built from scratch (no optax): AdamW and Adafactor, with
+mixed precision (bf16 params + f32 master/moments) and ZeRO-1 style
+optimizer-state sharding over the data axis.
+
+State layout is a plain pytree so pjit shards it like any other input; the
+ZeRO-1 pspec helper places optimizer moments on the data axis along the
+first replicated-and-divisible dim of each parameter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"              # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_dtype: Any = jnp.float32
+    # adafactor
+    factored_min_dim: int = 128
+    decay_rate: float = 0.8
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any                      # f32 master copy of bf16 params
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any                          # row second-moment (factored)
+    vc: Any                          # col second-moment (factored)
+    v: Any                           # full second-moment (unfactored leaves)
+    master: Any
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def _clip(grads, max_norm):
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+def adamw_init(params, cfg: OptimizerConfig) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, cfg.master_dtype)
+    # copy=True: an f32 param must not alias its master (donation safety)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(f32, params),
+        v=jax.tree.map(f32, params),
+        master=jax.tree.map(
+            lambda p: jnp.array(p, dtype=cfg.master_dtype, copy=True),
+            params),
+    )
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: OptimizerConfig,
+                 lr: jnp.ndarray):
+    grads, gn = _clip(grads, cfg.grad_clip)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, w):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        w = w - lr * (u + cfg.weight_decay * w)
+        return m, v, w
+
+    out = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    return new_params, AdamWState(step, m, v, master), gn
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moments — the memory-sane choice for the
+# 400B/480B MoE archs: ~4.07 bytes/param of state vs AdamW's 12)
+# --------------------------------------------------------------------------
+def _factored(shape, min_dim) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def adafactor_init(params, cfg: OptimizerConfig) -> AdafactorState:
+    def vr(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32)
+                if _factored(p.shape, cfg.factored_min_dim) else jnp.zeros((1,)))
+
+    def vc(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p.shape, cfg.factored_min_dim) else jnp.zeros((1,)))
+
+    def vfull(p):
+        return (jnp.zeros((1,)) if _factored(p.shape, cfg.factored_min_dim)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(vr, params),
+        vc=jax.tree.map(vc, params),
+        v=jax.tree.map(vfull, params),
+        master=jax.tree.map(
+            lambda p: jnp.array(p, dtype=cfg.master_dtype, copy=True),
+            params),
+    )
+
+
+def adafactor_update(grads, state: AdafactorState, params,
+                     cfg: OptimizerConfig, lr: jnp.ndarray):
+    grads, gn = _clip(grads, cfg.grad_clip)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+
+    def upd(g, vr, vc, v, w):
+        g2 = g * g + 1e-30
+        if _factored(g.shape, cfg.factored_min_dim):
+            vr = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                     + cfg.eps)
+        else:
+            v = beta2 * v + (1 - beta2) * g2
+            u = g / (jnp.sqrt(v) + cfg.eps)
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        w = w - lr * (u + cfg.weight_decay * w)
+        return vr, vc, v, w
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, state.v, state.master)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    vr, vc, v, master = pick(0), pick(1), pick(2), pick(3)
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    return new_params, AdafactorState(step, vr, vc, v, master), gn
+
+
+# --------------------------------------------------------------------------
+# unified facade
+# --------------------------------------------------------------------------
+def init(params, cfg: OptimizerConfig):
+    return (adamw_init if cfg.name == "adamw" else adafactor_init)(params, cfg)
+
+
+def update(grads, state, params, cfg: OptimizerConfig, lr):
+    fn = adamw_update if cfg.name == "adamw" else adafactor_update
+    return fn(grads, state, params, cfg, lr)
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1: shard optimizer state over the data axis
+# --------------------------------------------------------------------------
+def zero1_pspec(param_spec: P, shape: tuple, mesh: Mesh,
+                axis: str = "data") -> P:
+    """Place `axis` on the first replicated dim divisible by its size;
+    leaves the param's own model-parallel dims untouched."""
+    n = mesh.shape[axis]
+    spec = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    used = {a for s in spec if s for a in ((s,) if isinstance(s, str) else s)}
+    if axis in used:
+        return P(*spec)
+    for i, (s, dim) in enumerate(zip(spec, shape)):
+        if s is None and dim % n == 0 and dim >= n:
+            spec[i] = axis
+            return P(*spec)
+    return P(*spec)
+
+
+def adamw_state_pspecs(params_shapes, params_pspecs, mesh, zero1=True):
+    def z(spec, shape):
+        return zero1_pspec(spec, shape, mesh) if zero1 else spec
+    like = jax.tree.map(z, params_pspecs, params_shapes)
+    return AdamWState(step=P(), m=like, v=like, master=like)
+
+
+def adafactor_state_pspecs(params_shapes, params_pspecs, mesh, zero1=True,
+                           factored_min_dim=128):
+    def z(spec, shape):
+        return zero1_pspec(spec, shape, mesh) if zero1 else spec
+
+    def row(spec, shape):
+        if _factored(shape, factored_min_dim):
+            s = list(spec)[:len(shape) - 1]
+            return P(*s)
+        return P()
+
+    def col(spec, shape):
+        if _factored(shape, factored_min_dim):
+            s = list(spec)
+            s = s[:len(shape) - 2] + s[len(shape) - 1:len(shape)]
+            return P(*s)
+        return P()
+
+    def full(spec, shape):
+        return z(spec, shape) if not _factored(shape, factored_min_dim) \
+            else P()
+
+    return AdafactorState(
+        step=P(),
+        vr=jax.tree.map(row, params_pspecs, params_shapes),
+        vc=jax.tree.map(col, params_pspecs, params_shapes),
+        v=jax.tree.map(full, params_pspecs, params_shapes),
+        master=jax.tree.map(z, params_pspecs, params_shapes),
+    )
+
+
+def opt_state_pspecs(name: str, params_shapes, params_pspecs, mesh,
+                     zero1: bool = True):
+    if name == "adamw":
+        return adamw_state_pspecs(params_shapes, params_pspecs, mesh, zero1)
+    return adafactor_state_pspecs(params_shapes, params_pspecs, mesh, zero1)
+
+
+def abstract_state(name: str, params_abstract, cfg: OptimizerConfig):
+    """ShapeDtypeStruct tree of the optimizer state (dry-run, no alloc)."""
+    zeros = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params_abstract)
+    return jax.eval_shape(lambda p: init(p, cfg), zeros)

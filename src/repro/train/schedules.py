@@ -1,0 +1,34 @@
+"""LR schedules: cosine (default) and WSD (Warmup-Stable-Decay, the
+minicpm-2b training schedule [arXiv:2404.06395] — constant LR plateau with a
+short exponential-ish decay tail, enabling continuous pretraining)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr: float, warmup: int, total: int,
+           min_ratio: float = 0.1):
+    t = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * t / jnp.maximum(warmup, 1)
+    frac = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(t < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, total: int,
+        decay_fraction: float = 0.1, min_ratio: float = 0.01):
+    """Warmup -> stable plateau -> decay over the last `decay_fraction`."""
+    t = jnp.asarray(step, jnp.float32)
+    decay_steps = decay_fraction * total
+    decay_start = total - decay_steps
+    warm = peak_lr * t / jnp.maximum(warmup, 1)
+    frac = jnp.clip((t - decay_start) / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    decay = peak_lr * (min_ratio ** frac)
+    out = jnp.where(t < warmup, warm, peak_lr)
+    return jnp.where(t > decay_start, decay, out)
+
+
+def make(name: str, **kw):
+    fn = {"cosine": cosine, "wsd": wsd}[name]
+    return lambda step: fn(step, **kw)

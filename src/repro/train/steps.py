@@ -1,0 +1,70 @@
+"""Step builders: training (grad + optimizer, optional microbatch
+accumulation) and serving (prefill / decode).  Pure functions suitable for
+pjit with explicit in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt_lib
+from repro.train.optimizer import OptimizerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    microbatches: int = 1
+    schedule: Callable = staticmethod(lambda step: 3e-4)
+
+
+def make_train_step(model, tcfg: TrainConfig):
+    ocfg = tcfg.optimizer
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            m = tcfg.microbatches
+
+            def micro(carry, mb):
+                acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / m, acc, grads)
+                return acc, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbatch = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]),
+                batch)
+            grads, losses = jax.lax.scan(micro, zeros, mbatch)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = tcfg.schedule(opt_state.step)
+        new_params, new_state, gn = opt_lib.update(
+            grads, opt_state, params, ocfg, lr)
+        metrics = {"loss": loss, "grad_norm": gn, "lr": lr}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, token, cache, index):
+        logits, new_cache = model.decode_step(params, token, cache, index)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token[:, None], new_cache
+    return decode_step

@@ -1,0 +1,61 @@
+"""End-to-end GNN training through the GIDS dataloader: loss decreases on a
+learnable synthetic task (features encode the label)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GIDSDataLoader, LoaderConfig
+from repro.graph.synthetic import rmat_graph
+from repro.models.gnn import GNN, GNNConfig, hop_indices
+
+
+@pytest.mark.parametrize("model", ["sage", "gcn", "gat"])
+def test_gnn_learns(model):
+    rng = np.random.default_rng(0)
+    g = rmat_graph(4000, 10, 16, seed=1)
+    n_classes = 5
+    labels_all = rng.integers(0, n_classes, g.num_nodes)
+    # features = one-hot(label) + noise -> learnable from self features
+    feats = (2.0 * np.eye(n_classes, 16)[labels_all]
+             + 0.1 * rng.standard_normal((g.num_nodes, 16))
+             ).astype(np.float32)
+
+    cfg = GNNConfig(model=model, in_dim=16, hidden_dim=32,
+                    num_classes=n_classes, fanouts=(4, 3))
+    gnn = GNN(cfg)
+    params = gnn.init(jax.random.PRNGKey(0))
+    dl = GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=128, fanouts=cfg.fanouts, mode="gids",
+        cache_lines=2048, window_depth=2))
+
+    @jax.jit
+    def step(params, feats_b, h0, h1, h2, labels):
+        loss, grads = jax.value_and_grad(gnn.loss)(
+            params, feats_b, [h0, h1, h2], labels)
+        params = jax.tree.map(lambda p, g_: p - 0.2 * g_, params, grads)
+        return params, loss
+
+    losses = []
+    for _ in range(60):
+        b = dl.next_batch()
+        hi = [jnp.asarray(i) for i in hop_indices(b.blocks)]
+        lab = jnp.asarray(labels_all[b.blocks.seeds])
+        params, loss = step(params, jnp.asarray(b.features),
+                            hi[0], hi[1], hi[2], lab)
+        losses.append(float(loss))
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert np.isfinite(losses).all()
+    assert last < first * 0.8, (first, last)
+
+
+def test_hop_indices_roundtrip():
+    from repro.sampling.neighbor import host_sample_blocks
+    g = rmat_graph(1000, 8, 8, seed=2)
+    rng = np.random.default_rng(0)
+    blocks = host_sample_blocks(g, rng.integers(0, 1000, 16), (3, 2), rng)
+    hi = hop_indices(blocks)
+    np.testing.assert_array_equal(blocks.all_nodes[hi[0]], blocks.seeds)
+    for level, hop in enumerate(blocks.hop_nodes, start=1):
+        np.testing.assert_array_equal(blocks.all_nodes[hi[level]], hop)

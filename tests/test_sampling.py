@@ -1,0 +1,83 @@
+"""Samplers: shape contracts + every sampled edge is a real edge
+(property), host/device agreement on the neighbor relation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.synthetic import rmat_graph, uniform_graph
+from repro.sampling.ladies import ladies_sample_blocks
+from repro.sampling.neighbor import (device_sample_blocks,
+                                     host_sample_blocks, subgraph_sizes)
+
+
+def _edge_set(g):
+    es = set()
+    for v in range(g.num_nodes):
+        for u in g.neighbors(v):
+            es.add((v, int(u)))
+    return es
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_host_sampler_edges_are_real(seed):
+    g = rmat_graph(500, 6, 8, seed=seed % 7)
+    rng = np.random.default_rng(seed)
+    seeds = rng.integers(0, g.num_nodes, 16)
+    blocks = host_sample_blocks(g, seeds, (3, 2), rng)
+    assert blocks.hop_nodes[0].shape == (16 * 3,)
+    assert blocks.hop_nodes[1].shape == (16 * 3 * 2,)
+    es = _edge_set(g)
+    frontier = seeds
+    for f, hop in zip((3, 2), blocks.hop_nodes):
+        parents = np.repeat(frontier, f)
+        for p, c in zip(parents, hop):
+            assert (int(p), int(c)) in es or int(p) == int(c)  # self-pad
+        frontier = hop
+
+
+def test_device_sampler_matches_contract():
+    g = uniform_graph(400, 8, 4, seed=1)
+    csr = g.to_device()
+    seeds = jnp.arange(8, dtype=jnp.int32)
+    hops, flat = jax.jit(
+        lambda s, k: device_sample_blocks(csr, s, (4, 2), k)
+    )(seeds, jax.random.PRNGKey(0))
+    assert hops[0].shape == (8 * 4,)
+    assert hops[1].shape == (8 * 4 * 2,)
+    assert flat.shape == (8 + 32 + 64,)
+    es = _edge_set(g)
+    parents = np.repeat(np.asarray(seeds), 4)
+    for p, c in zip(parents, np.asarray(hops[0])):
+        assert (int(p), int(c)) in es or int(p) == int(c)
+
+
+def test_subgraph_sizes_closed_form():
+    assert subgraph_sizes(1, (3, 2)) == 1 + 3 + 6  # paper Fig. 2
+    assert subgraph_sizes(4, (10, 5, 5)) == 4 * (1 + 10 + 50 + 250)
+
+
+def test_ladies_fixed_layer_sizes():
+    g = rmat_graph(1000, 8, 8, seed=2)
+    rng = np.random.default_rng(0)
+    blocks = ladies_sample_blocks(g, rng.integers(0, 1000, 32),
+                                  (64, 64), rng)
+    assert blocks.hop_nodes[0].shape == (64,)
+    assert blocks.hop_nodes[1].shape == (64,)
+    assert blocks.num_requests == 32 + 64 + 64
+
+
+def test_ladies_importance_bias():
+    """High in-degree nodes should be sampled more often by LADIES."""
+    g = rmat_graph(2000, 10, 8, seed=3)
+    rng = np.random.default_rng(1)
+    counts = np.zeros(g.num_nodes)
+    for _ in range(20):
+        blocks = ladies_sample_blocks(g, rng.integers(0, 2000, 16),
+                                      (128,), rng)
+        counts[blocks.hop_nodes[0]] += 1
+    indeg = np.bincount(g.indices, minlength=g.num_nodes)
+    hot = np.argsort(-indeg)[:100]
+    cold = np.argsort(-indeg)[-1000:]
+    assert counts[hot].mean() > counts[cold].mean()

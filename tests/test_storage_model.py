@@ -1,0 +1,76 @@
+"""Accumulator analytic model (paper Eq. 2-3) vs the discrete-event
+simulator — the Fig. 8 correspondence — plus property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO,
+                                    model_burst, required_accesses,
+                                    simulate_burst, StorageTimeline)
+
+
+@pytest.mark.parametrize("spec", [INTEL_OPTANE, SAMSUNG_980PRO],
+                         ids=lambda s: s.name)
+def test_model_matches_simulation(spec):
+    """Fig. 8: the Eq. 2-3 model tracks simulated bandwidth — loosely on
+    the ramp (latency variance; the paper notes the same), tightly near
+    saturation ("accurately estimates ... particularly when it approaches
+    the peak bandwidth")."""
+    for n in (64, 256, 1024, 4096, 16384):
+        m = model_burst(spec, n)
+        s = simulate_burst(spec, n, seed=1)
+        tol = 0.15 if m.efficiency < 0.8 else 0.05
+        assert m.efficiency == pytest.approx(s.efficiency, rel=tol), n
+    # saturation: large bursts approach peak
+    big = model_burst(spec, 10 * required_accesses(spec, 0.95))
+    assert big.efficiency > 0.95
+
+
+@pytest.mark.parametrize("spec", [INTEL_OPTANE, SAMSUNG_980PRO],
+                         ids=lambda s: s.name)
+def test_required_accesses_inverts_model(spec):
+    for rho in (0.5, 0.8, 0.9, 0.95):
+        n = required_accesses(spec, rho)
+        assert model_burst(spec, n).efficiency >= rho - 1e-6
+        # minimality: 20% fewer accesses miss the target
+        assert model_burst(spec, int(n * 0.8)).efficiency < rho
+
+
+@given(rho1=st.floats(0.1, 0.9), drho=st.floats(0.01, 0.09),
+       n_ssd=st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_required_accesses_monotone(rho1, drho, n_ssd):
+    """More SSDs or a higher efficiency target need more outstanding
+    accesses (Little's law monotonicity)."""
+    lo = required_accesses(INTEL_OPTANE, rho1, n_ssd)
+    hi = required_accesses(INTEL_OPTANE, rho1 + drho, n_ssd)
+    assert hi >= lo
+    assert required_accesses(INTEL_OPTANE, rho1, n_ssd + 1) >= lo
+
+
+def test_higher_latency_ssd_needs_more_overlap():
+    """980Pro (324us) demands more concurrency than Optane (11us) — §3.2."""
+    assert (required_accesses(SAMSUNG_980PRO, 0.9)
+            > required_accesses(INTEL_OPTANE, 0.9))
+
+
+def test_timeline_gids_beats_mmap():
+    """Same request mix: GIDS (overlapped direct access) must beat the
+    page-faulting mmap path by a wide margin (Fig. 13/14 direction)."""
+    tl = StorageTimeline(SAMSUNG_980PRO, n_ssd=1)
+    n, fb = 100_000, 4096
+    t_gids = tl.gids_batch_time(n_storage=n, n_host=0, n_hbm=0,
+                                feat_bytes=fb, outstanding=8192)
+    t_mmap = tl.mmap_batch_time(n_storage=n, n_page_cache=0, feat_bytes=fb)
+    assert t_gids < t_mmap / 5
+
+
+def test_timeline_redirection_amplifies_bandwidth():
+    """Redirecting hot requests to the host buffer raises effective
+    bandwidth until PCIe saturates (Fig. 10 direction)."""
+    tl = StorageTimeline(INTEL_OPTANE, n_ssd=1)
+    n, fb = 100_000, 4096
+    base = tl.gids_batch_time(n, 0, 0, fb, outstanding=4096)
+    redir = tl.gids_batch_time(int(n * 0.6), int(n * 0.4), 0, fb,
+                               outstanding=4096)
+    assert redir < base

@@ -1,0 +1,83 @@
+"""End-to-end behaviour of the full system: the GIDS dataloader feeding an
+LM trainer, checkpoint/restart mid-run, and the dry-run cell builder on a
+host mesh (sharding machinery sanity without 512 devices)."""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_lm_training_loss_decreases(tmp_path):
+    """The production trainer drives a reduced arch for 60 steps on a
+    learnable synthetic stream and the loss must drop."""
+    from repro.launch.train import build
+    from repro.train import optimizer as opt_lib
+
+    cfg, model, step_fn, pipe, ocfg = build(
+        "qwen2_1_5b", reduced=True, batch=8, seq=32, lr=3e-3,
+        total_steps=60, schedule="cosine")
+    # learnable stream: next token = (token + 1) % 50
+    stream = (np.cumsum(np.ones(1 << 14)) % 50).astype(np.int32)
+    pipe.tokens = stream
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt_lib.init(params, ocfg)
+    losses = []
+    for _ in range(60):
+        batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-10:]) < 0.5 * np.mean(losses[:5]), \
+        (np.mean(losses[:5]), np.mean(losses[-10:]))
+
+
+def test_cell_builder_on_host_mesh():
+    """build_cell produces lowerable abstractions on the 1-device mesh —
+    the same code path the 512-way dry-run uses."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.specs import build_cell
+
+    mesh = make_host_mesh()
+    cell = build_cell("qwen2_1_5b", "train_4k", mesh, multi_pod=False,
+                      overrides={"num_layers": 2, "vocab_size": 512,
+                                 "vocab_pad_to": 64, "d_model": 64,
+                                 "num_heads": 4, "num_kv_heads": 2,
+                                 "d_ff": 128})
+    lowered = jax.jit(cell.step_fn).lower(*cell.abstract_args)
+    assert lowered.as_text()                      # lowers cleanly
+    assert cell.kind == "train"
+
+
+def test_serve_cell_builder_on_host_mesh():
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.specs import build_cell
+
+    mesh = make_host_mesh()
+    cell = build_cell("mamba2_1_3b", "decode_32k", mesh, multi_pod=False,
+                      overrides={"num_layers": 2, "vocab_size": 512,
+                                 "vocab_pad_to": 64, "d_model": 64,
+                                 "ssm_state": 16, "ssm_headdim": 8,
+                                 "ssm_chunk": 8})
+    jax.jit(cell.step_fn).lower(*cell.abstract_args)
+    assert cell.kind == "decode"
+
+
+def test_trainer_cli_resume(tmp_path):
+    """The CLI trainer checkpoints and resumes (subprocess integration)."""
+    import os
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch",
+           "qwen2_1_5b", "--reduced", "--steps", "12", "--batch", "2",
+           "--seq", "16", "--ckpt-dir", str(tmp_path), "--ckpt-every", "6"]
+    r1 = subprocess.run(cmd, capture_output=True, text=True, env=env)
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    cmd2 = [c if c != "12" else "18" for c in cmd]
+    r2 = subprocess.run(cmd2, capture_output=True, text=True, env=env)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed from step 12" in r2.stdout
