@@ -17,7 +17,7 @@ def measured_bw(dl: GIDSDataLoader, iters=12):
     bws = []
     for _ in range(iters):
         b = dl.next_batch()
-        bws.append(b.report.n_requests * b.report.feat_bytes
+        bws.append(b.report.n_requests * b.report.bytes_per_row
                    / b.prep_time_s)
     return float(np.mean(bws[2:]))
 
@@ -25,7 +25,7 @@ def measured_bw(dl: GIDSDataLoader, iters=12):
 def main():
     g = IGB_FULL.materialize()
     feats = np.zeros((g.num_nodes, 1), np.float32)
-    base_cfg = dict(batch_size=256, fanouts=(5, 5), mode="gids",
+    base_cfg = dict(batch_size=256, fanouts=(5, 5), data_plane="gids",
                     cache_lines=1 << 14, window_depth=0, n_ssd=1)
 
     dl = GIDSDataLoader(g, feats,

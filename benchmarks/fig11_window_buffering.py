@@ -17,7 +17,7 @@ def run(depth: int, iters=25):
     feats = np.zeros((g.num_nodes, 1), np.float32)
     dl = GIDSDataLoader(
         g, feats,
-        LoaderConfig(batch_size=256, fanouts=(5, 5), mode="gids",
+        LoaderConfig(batch_size=256, fanouts=(5, 5), data_plane="gids",
                      cache_lines=1 << 13, window_depth=depth,
                      cbuf_fraction=0.0),
         ssd=INTEL_OPTANE)

@@ -20,7 +20,7 @@ def run(lines: int, depth: int, iters=30):
     # line caches -> same regime.
     dl = GIDSDataLoader(
         g, feats,
-        LoaderConfig(batch_size=512, fanouts=(10, 5), mode="gids",
+        LoaderConfig(batch_size=512, fanouts=(10, 5), data_plane="gids",
                      cache_lines=lines, window_depth=depth,
                      cbuf_fraction=0.0),
         ssd=INTEL_OPTANE)

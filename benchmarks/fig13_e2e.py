@@ -47,7 +47,7 @@ def e2e(dataset, ssd, mode, t_train, fits_in_memory, iters=10):
     feats = np.zeros((g.num_nodes, 1), np.float32)
     dl = GIDSDataLoader(
         g, feats,
-        LoaderConfig(batch_size=512, fanouts=(10, 5), mode=mode,
+        LoaderConfig(batch_size=512, fanouts=(10, 5), data_plane=mode,
                      cache_lines=1 << 13, window_depth=8,
                      cbuf_fraction=0.1 if mode == "gids" else 0.0),
         ssd=ssd)

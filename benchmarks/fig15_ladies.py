@@ -16,7 +16,7 @@ def agg_time(mode, sampler, iters=8):
     feats = np.zeros((g.num_nodes, 1), np.float32)
     cfg = LoaderConfig(batch_size=256, fanouts=(10, 5),
                        sampler=sampler, ladies_layer_sizes=(2048, 2048),
-                       mode=mode, cache_lines=1 << 13, window_depth=8,
+                       data_plane=mode, cache_lines=1 << 13, window_depth=8,
                        cbuf_fraction=0.1 if mode == "gids" else 0.0)
     dl = GIDSDataLoader(g, feats, cfg, ssd=SAMSUNG_980PRO)
     dl.store.feature_dim = IGB_FULL.feature_dim

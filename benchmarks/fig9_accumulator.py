@@ -31,8 +31,8 @@ def effective_bw(dl: GIDSDataLoader, accumulate: bool, iters=10):
         else:
             outstanding = r.n_storage
         t = tl.gids_batch_time(r.n_storage, r.n_host_hits, r.n_hbm_hits,
-                               r.feat_bytes, outstanding)
-        ingress = (r.n_storage + r.n_host_hits) * r.feat_bytes
+                               r.bytes_per_row, outstanding)
+        ingress = (r.n_storage + r.n_host_hits) * r.bytes_per_row
         bws.append(ingress / t)
     return float(np.mean(bws[2:]))
 
@@ -44,13 +44,13 @@ def main():
 
     for batch in (32, 64, 128):
         for mode in ("bam", "gids"):
-            cfg = LoaderConfig(batch_size=batch, fanouts=(5, 5), mode=mode,
+            cfg = LoaderConfig(batch_size=batch, fanouts=(5, 5), data_plane=mode,
                                cache_lines=1 << 14, window_depth=8,
                                n_ssd=2, cbuf_fraction=0.1)
             out = {}
             for acc in (False, True):
                 dl = GIDSDataLoader(g, feats, cfg, ssd=INTEL_OPTANE)
-                # feat_bytes must reflect the 1024-dim f32 rows of IGB
+                # bytes_per_row must reflect the 1024-dim f32 rows of IGB
                 dl.store.feature_dim = feats_dim
                 bw = effective_bw(dl, accumulate=acc)
                 out[acc] = bw

@@ -1,15 +1,18 @@
 """Quickstart: the GIDS dataloader in 40 lines.
 
-Builds a synthetic power-law graph, turns on all three GIDS techniques
-(dynamic access accumulator, constant CPU buffer, window-buffered cache),
-and streams mini-batches, printing the tier split and modelled data-prep
-time vs the mmap baseline.
+Builds a synthetic power-law graph and streams mini-batches through three
+declarative data planes — the paper's full GIDS stack (dynamic access
+accumulator + constant CPU buffer + window-buffered cache) and the mmap/BaM
+baselines — printing each plane's tier split and modelled data-prep time.
+A data plane is a `DataPlaneSpec` preset (or your own registered stack);
+the loader just consumes it.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import GIDSDataLoader, LoaderConfig, SAMSUNG_980PRO
+from repro.core import (DataPlaneSpec, GIDSDataLoader, LoaderConfig,
+                        SAMSUNG_980PRO)
 from repro.graph.synthetic import rmat_graph
 
 graph = rmat_graph(num_nodes=100_000, avg_degree=12, feature_dim=256,
@@ -18,12 +21,14 @@ features = np.random.default_rng(0).standard_normal(
     (graph.num_nodes, 256)).astype(np.float32)
 
 print(f"graph: {graph.num_nodes:,} nodes, {graph.num_edges:,} edges, "
-      f"features {features.nbytes/2**20:.0f} MiB\n")
+      f"features {features.nbytes/2**20:.0f} MiB")
+print(f"registered data planes: {', '.join(DataPlaneSpec.names())}\n")
 
-for mode in ("mmap", "bam", "gids"):
+for name in ("mmap", "bam", "gids"):
+    spec = DataPlaneSpec.preset(name)
     loader = GIDSDataLoader(
         graph, features,
-        LoaderConfig(batch_size=1024, fanouts=(10, 5), mode=mode,
+        LoaderConfig(batch_size=1024, fanouts=(10, 5), data_plane=spec,
                      cache_lines=8192, window_depth=8, cbuf_fraction=0.1),
         ssd=SAMSUNG_980PRO)
     prep = []
@@ -32,9 +37,9 @@ for mode in ("mmap", "bam", "gids"):
         prep.append(batch.prep_time_s)
     r = batch.report
     hit = loader.store.cache.stats.hit_ratio if loader.store.cache else 0.0
-    print(f"[{mode:4s}] prep {np.mean(prep)*1e3:8.2f} ms/iter | "
-          f"tier split hbm={r.n_hbm_hits} host={r.n_host_hits} "
-          f"ssd={r.n_storage} | cache hit {hit:.2f} | "
+    tiers = " ".join(f"{t}={n}" for t, n in zip(r.tier_names, r.tier_counts))
+    print(f"[{name:4s}] prep {np.mean(prep)*1e3:8.2f} ms/iter | "
+          f"tier split {tiers} | cache hit {hit:.2f} | "
           f"lookahead depth {batch.merge_depth}")
 
 print("\nfeatures gathered for the last batch:", batch.features.shape)

@@ -51,7 +51,7 @@ def main():
     loader = GIDSDataLoader(
         graph, feats,
         LoaderConfig(batch_size=args.batch, fanouts=cfg.fanouts,
-                     mode="gids", cache_lines=1 << 14, window_depth=8,
+                     data_plane="gids", cache_lines=1 << 14, window_depth=8,
                      cbuf_fraction=0.1),
         ssd=INTEL_OPTANE)
 

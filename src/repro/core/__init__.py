@@ -1,19 +1,30 @@
 # The paper's primary contribution: the GIDS dataloader — storage-direct
 # feature aggregation with dynamic access accumulation (§3.2), constant
-# host buffer (§3.3), and window-buffered device software cache (§3.4).
+# host buffer (§3.3), and window-buffered device software cache (§3.4),
+# composed as a pluggable tier stack (tiers.py) declared by a
+# DataPlaneSpec (dataplane.py).
 from .accumulator import AccumulatorConfig, DynamicAccessAccumulator
 from .constant_buffer import ConstantBuffer
-from .feature_store import FeatureStore, GatherReport
+from .dataplane import (BuildContext, DataPlane, DataPlaneSpec, TierSpec,
+                        register_tier_kind, tier)
+from .feature_store import FeatureStore, GatherReport, TieredFeatureStore
 from .pipeline import Batch, GIDSDataLoader, LoaderConfig
 from .software_cache import CacheStats, WindowBufferedCache, run_trace
 from .storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO, SSDSpec,
                           StorageTimeline, model_burst, required_accesses,
                           simulate_burst)
+from .tiers import (ConstantBufferTier, DeviceCacheTier, GatherPlan,
+                    KVSlotTier, StorageTier, Tier, build_plan)
 
 __all__ = [
     "AccumulatorConfig", "DynamicAccessAccumulator", "ConstantBuffer",
-    "FeatureStore", "GatherReport", "Batch", "GIDSDataLoader", "LoaderConfig",
+    "BuildContext", "DataPlane", "DataPlaneSpec", "TierSpec",
+    "register_tier_kind", "tier",
+    "FeatureStore", "GatherReport", "TieredFeatureStore",
+    "Batch", "GIDSDataLoader", "LoaderConfig",
     "CacheStats", "WindowBufferedCache", "run_trace", "INTEL_OPTANE",
     "SAMSUNG_980PRO", "SSDSpec", "StorageTimeline", "model_burst",
     "required_accesses", "simulate_burst",
+    "ConstantBufferTier", "DeviceCacheTier", "GatherPlan", "KVSlotTier",
+    "StorageTier", "Tier", "build_plan",
 ]

@@ -1,0 +1,311 @@
+"""Declarative data-plane composition: `DataPlaneSpec` and the preset
+registry that replaces the old `mode="gids"|"bam"|"mmap"` strings.
+
+A spec is data, not code: an ordered tuple of `TierSpec`s (kind + params)
+plus the two orchestration policies the loader needs — how storage time is
+priced (`pricing`) and whether sampling runs ahead under the accumulator
+(`lookahead`).  `build()` resolves each TierSpec through the tier-kind
+factory registry against a `BuildContext` (graph, features, and the sizing
+knobs LoaderConfig carries) and returns a `DataPlane` wrapping a
+`TieredFeatureStore`.
+
+    plane = DataPlaneSpec.preset("gids").build(graph, features)
+    rows, report = plane.store.gather(node_ids)
+
+The paper's three baselines are presets; new stacks register alongside them:
+
+    DataPlaneSpec.register(DataPlaneSpec(
+        name="my-plane",
+        tiers=(tier("constant_buffer", fraction=0.5), tier("storage"))))
+
+Tier kinds themselves are also open — `register_tier_kind` admits user
+factories, which is the seam sharded tiers / async prefetch plug into.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+from .constant_buffer import ConstantBuffer
+from .feature_store import TieredFeatureStore
+from .software_cache import WindowBufferedCache
+from .storage_sim import StorageTimeline
+from .tiers import (ConstantBufferTier, DeviceCacheTier, KVSlotTier,
+                    StorageTier, Tier)
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One tier in a declarative stack: a registered kind plus overrides.
+    Params left unset fall back to the BuildContext knobs, so one spec
+    serves every graph/feature size."""
+
+    kind: str
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def tier(kind: str, **params) -> TierSpec:
+    """Sugar: `tier("window_cache", window_depth=0)`."""
+    return TierSpec(kind, params)
+
+
+@dataclasses.dataclass
+class BuildContext:
+    """Everything a tier factory may need.  Field names deliberately mirror
+    `LoaderConfig` so `build(config=cfg)` maps knobs across by name."""
+
+    graph: Any = None
+    features: Any = None
+    cache_lines: int = 1 << 15
+    cache_ways: int = 8
+    window_depth: int = 8
+    cbuf_fraction: float = 0.1
+    cbuf_selection: str = "pagerank"
+    seed: int = 0
+    # serve-engine knobs (KV slot pool)
+    slots: int = 0
+    bytes_per_slot: int = 0
+
+    _KNOBS = ("cache_lines", "cache_ways", "window_depth", "cbuf_fraction",
+              "cbuf_selection", "seed")
+
+    def absorb(self, config: Any) -> "BuildContext":
+        for k in self._KNOBS:
+            if config is not None and hasattr(config, k):
+                setattr(self, k, getattr(config, k))
+        return self
+
+
+# -- tier-kind factory registry -----------------------------------------------
+
+TierFactory = Callable[..., "Tier | None"]
+_TIER_KINDS: dict[str, TierFactory] = {}
+
+
+def register_tier_kind(kind: str) -> Callable[[TierFactory], TierFactory]:
+    """Register a factory `(ctx: BuildContext, **params) -> Tier | None`.
+    Returning None omits the tier (e.g. a constant buffer at fraction 0)."""
+    def deco(fn: TierFactory) -> TierFactory:
+        _TIER_KINDS[kind] = fn
+        return fn
+    return deco
+
+
+@register_tier_kind("window_cache")
+def _make_window_cache(ctx: BuildContext, num_lines=None, ways=None,
+                       window_depth=None, evict="random") -> Tier:
+    num_lines = ctx.cache_lines if num_lines is None else num_lines
+    ways = ctx.cache_ways if ways is None else ways
+    window_depth = ctx.window_depth if window_depth is None else window_depth
+    return DeviceCacheTier(WindowBufferedCache(
+        num_lines, ways, window_depth=window_depth, seed=ctx.seed,
+        evict=evict))
+
+
+@register_tier_kind("constant_buffer")
+def _make_constant_buffer(ctx: BuildContext, fraction=None,
+                          selection=None) -> Tier | None:
+    fraction = ctx.cbuf_fraction if fraction is None else fraction
+    selection = ctx.cbuf_selection if selection is None else selection
+    if fraction <= 0:
+        return None                           # legitimate omit (Fig. 10/11)
+    if ctx.graph is None:
+        raise ValueError(
+            "constant_buffer tier needs a graph in the BuildContext to rank "
+            "hot nodes; pass build(graph, ...) or set fraction=0 to omit it")
+    cbuf = ConstantBuffer.from_graph(ctx.graph, fraction,
+                                     selection=selection, seed=ctx.seed)
+    row_bytes = None
+    if ctx.features is not None:
+        row_bytes = ctx.features.shape[1] * ctx.features.dtype.itemsize
+    return ConstantBufferTier(cbuf, row_bytes=row_bytes)
+
+
+@register_tier_kind("device_store")
+def _make_device_store(ctx: BuildContext, num_lines=None, ways=None,
+                       window_depth=None, use_pallas=False) -> Tier:
+    from .tiers import DeviceStoreTier            # deferred: pulls in jax
+    num_lines = ctx.cache_lines if num_lines is None else num_lines
+    ways = ctx.cache_ways if ways is None else ways
+    window_depth = ctx.window_depth if window_depth is None else window_depth
+    return DeviceStoreTier(ctx.features, num_lines, ways=ways,
+                           window_depth=window_depth, use_pallas=use_pallas)
+
+
+@register_tier_kind("storage")
+def _make_storage(ctx: BuildContext) -> Tier:
+    if ctx.features is None:
+        raise ValueError("storage tier needs features in the BuildContext")
+    return StorageTier(ctx.features)
+
+
+@register_tier_kind("kv_slots")
+def _make_kv_slots(ctx: BuildContext, slots=None, bytes_per_slot=None) -> Tier:
+    slots = ctx.slots if slots is None else slots
+    bytes_per_slot = (ctx.bytes_per_slot if bytes_per_slot is None
+                      else bytes_per_slot)
+    return KVSlotTier(slots, bytes_per_slot)
+
+
+# -- the spec ------------------------------------------------------------------
+
+_PRESETS: dict[str, "DataPlaneSpec"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class DataPlaneSpec:
+    """Declarative description of a data plane.
+
+    pricing:   "overlapped"  — storage requests overlap under the
+                                accumulator's outstanding count (GIDS/BaM)
+               "page_fault"  — serial fault handling (the mmap baseline)
+    lookahead: sampling runs ahead of training under accumulator control;
+               False degenerates to synchronous depth-1 sampling.
+    """
+
+    name: str
+    tiers: tuple[TierSpec, ...]
+    pricing: str = "overlapped"
+    lookahead: bool = True
+    description: str = ""
+
+    def with_(self, **overrides) -> "DataPlaneSpec":
+        return dataclasses.replace(self, **overrides)
+
+    # -- construction ---------------------------------------------------------
+    def build_stack(self, ctx: BuildContext | None = None,
+                    **ctx_kwargs) -> list[Tier]:
+        """Resolve the TierSpecs into live tiers (None results omitted)."""
+        ctx = ctx or BuildContext(**ctx_kwargs)
+        out = []
+        for ts in self.tiers:
+            try:
+                factory = _TIER_KINDS[ts.kind]
+            except KeyError:
+                raise KeyError(
+                    f"unknown tier kind {ts.kind!r}; registered: "
+                    f"{sorted(_TIER_KINDS)}") from None
+            t = factory(ctx, **dict(ts.params))
+            if t is not None:
+                out.append(t)
+        return out
+
+    def build(self, graph=None, features=None, config=None,
+              **overrides) -> "DataPlane":
+        """One factory for every consumer (loader, benchmarks, examples):
+        `DataPlaneSpec.preset("gids").build(graph, features)`."""
+        ctx = BuildContext(graph=graph, features=features).absorb(config)
+        valid = {f.name for f in dataclasses.fields(BuildContext)}
+        for k, v in overrides.items():
+            if k not in valid:
+                raise TypeError(f"unknown build override {k!r}; "
+                                f"valid knobs: {sorted(valid)}")
+            setattr(ctx, k, v)
+        return DataPlane(spec=self,
+                         store=TieredFeatureStore(self.build_stack(ctx)))
+
+    # -- registry -------------------------------------------------------------
+    @staticmethod
+    def preset(name: str, **overrides) -> "DataPlaneSpec":
+        try:
+            spec = _PRESETS[name]
+        except KeyError:
+            raise KeyError(f"unknown data-plane preset {name!r}; "
+                           f"available: {DataPlaneSpec.names()}") from None
+        return spec.with_(**overrides) if overrides else spec
+
+    @staticmethod
+    def register(spec: "DataPlaneSpec",
+                 overwrite: bool = False) -> "DataPlaneSpec":
+        if spec.name in _PRESETS and not overwrite:
+            raise ValueError(f"preset {spec.name!r} already registered")
+        _PRESETS[spec.name] = spec
+        return spec
+
+    @staticmethod
+    def names() -> tuple[str, ...]:
+        return tuple(sorted(_PRESETS))
+
+    @staticmethod
+    def resolve(obj: "DataPlaneSpec | str") -> "DataPlaneSpec":
+        if isinstance(obj, DataPlaneSpec):
+            return obj
+        if isinstance(obj, str):
+            return DataPlaneSpec.preset(obj)
+        raise TypeError(f"expected DataPlaneSpec or preset name, got {obj!r}")
+
+
+@dataclasses.dataclass
+class DataPlane:
+    """A built data plane: the tier stack plus the orchestration policies the
+    loader reads instead of branching on mode strings."""
+
+    spec: DataPlaneSpec
+    store: TieredFeatureStore
+
+    @property
+    def pricing(self) -> str:
+        return self.spec.pricing
+
+    @property
+    def lookahead(self) -> bool:
+        return self.spec.lookahead
+
+    @property
+    def min_lookahead(self) -> int:
+        """Lookahead floor: a windowed tier needs its window kept full."""
+        wt = self.store.windowed_tier
+        return max(1, wt.window_depth if wt is not None else 1)
+
+    def price(self, timeline: StorageTimeline, report,
+              outstanding: int) -> float:
+        return timeline.price_batch(report, outstanding=outstanding,
+                                    policy=self.spec.pricing)
+
+    def reset(self) -> None:
+        self.store.reset()
+
+
+# -- the paper's baselines + composable extras, as presets ---------------------
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="gids",
+    tiers=(tier("window_cache"), tier("constant_buffer"), tier("storage")),
+    pricing="overlapped", lookahead=True,
+    description="Paper §3: window-buffered HBM cache + constant pinned-host "
+                "buffer + GPU-initiated direct storage, accumulator-merged."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="bam",
+    tiers=(tier("window_cache", window_depth=0), tier("storage")),
+    pricing="overlapped", lookahead=True,
+    description="BaM baseline: random-eviction GPU cache over direct "
+                "storage; no window buffering, no host buffer."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="mmap",
+    tiers=(tier("storage"),),
+    pricing="page_fault", lookahead=False,
+    description="DGL-mmap baseline: synchronous sampling, page-fault-priced "
+                "storage, no redirection tiers."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="pinned-host",
+    tiers=(tier("constant_buffer"), tier("storage")),
+    pricing="overlapped", lookahead=True,
+    description="PyTorch-Direct-style zero-copy plane: pinned-host hot set "
+                "over direct storage, no device cache."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="gids-device",
+    tiers=(tier("device_store"), tier("constant_buffer"), tier("storage")),
+    pricing="overlapped", lookahead=True,
+    description="GIDS with the fully-jittable HBM tier (cache_jax metadata "
+                "+ Pallas tiered_gather) in place of the numpy reference."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="serve-kv",
+    tiers=(tier("kv_slots"),),
+    pricing="overlapped", lookahead=False,
+    description="Serve engine's KV-cache slot pool as a single-tier plane "
+                "(no storage backstop — requests queue when it is full)."))

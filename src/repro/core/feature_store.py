@@ -1,49 +1,218 @@
-"""Two-tier feature store — the data plane of the GIDS dataloader.
+"""Tiered feature store — the data plane of the GIDS dataloader.
 
-Tier 0: device software cache (HBM)      — window-buffered, §3.4
-Tier 1: constant host buffer (pinned)    — hot nodes, §3.3
-Tier 2: storage (memmap file or array)   — everything, §3.1
+`TieredFeatureStore` folds an *ordered, pluggable stack* of `Tier`s
+(`core/tiers.py`) into a single `GatherPlan` per request batch: each tier is
+offered the requests every faster tier declined, so the per-request tier
+assignment is a partition by construction.  The paper's fixed hierarchy is
+one such stack —
 
-`gather()` is a *real* data path: it returns the actual feature rows (from a
-numpy memmap standing in for the SSD namespace) and a `GatherReport` with the
-tier split, which the storage simulator prices for benchmarks and the
-accumulator consumes as telemetry.  The device-side gather of cached rows is
-performed by the `tiered_gather` Pallas kernel when running jitted.
+  hbm-cache  (window-buffered software cache, §3.4)
+  host-cbuf  (constant pinned-host buffer,   §3.3)
+  storage    (memmap standing in for the SSD namespace, §3.1)
+
+— declared by the `gids` preset in `core/dataplane.py`; `bam` and `mmap` are
+shorter stacks of the same tiers, and user stacks compose freely.
+
+`gather()` is a *real* data path: it returns the actual feature rows and a
+`GatherReport` whose per-tier counts feed the storage-timeline pricing
+(`StorageTimeline.price_batch`).  The plan's `kernel_slots` array feeds the
+`tiered_gather` Pallas kernel (see `device_rows` for the reference HBM row
+store, `tiers.DeviceStoreTier` for the jittable one).
+
+`FeatureStore` survives as a thin compatibility wrapper that builds the
+classic cache/cbuf/storage stack from keyword components.
 """
 from __future__ import annotations
 
 import dataclasses
-import os
-import tempfile
+import warnings
+from typing import Sequence
 
 import numpy as np
 
 from .constant_buffer import ConstantBuffer
 from .software_cache import WindowBufferedCache
+from .tiers import (ConstantBufferTier, DeviceCacheTier, GatherPlan,
+                    StorageTier, Tier, build_plan)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class GatherReport:
+    """Per-batch tier split.  `bytes_per_row` is the size of ONE feature row
+    (dim * itemsize) — multiply by a count to get transfer bytes.  The
+    `n_hbm_hits` / `n_host_hits` / `n_storage` views aggregate tiers by
+    latency class so pricing and telemetry are stack-shape-agnostic."""
+
     n_requests: int
-    n_hbm_hits: int
-    n_host_hits: int
-    n_storage: int
-    feat_bytes: int
+    bytes_per_row: int
+    tier_names: tuple[str, ...]
+    tier_classes: tuple[str, ...]
+    tier_counts: tuple[int, ...]
+
+    def _class_count(self, latency_class: str) -> int:
+        return sum(n for c, n in zip(self.tier_classes, self.tier_counts)
+                   if c == latency_class)
+
+    @property
+    def n_hbm_hits(self) -> int:
+        return self._class_count("hbm")
+
+    @property
+    def n_host_hits(self) -> int:
+        return self._class_count("host")
+
+    @property
+    def n_storage(self) -> int:
+        return self._class_count("storage")
 
     @property
     def redirected(self) -> int:
-        return self.n_hbm_hits + self.n_host_hits
+        return self.n_requests - self.n_storage
+
+    @property
+    def feat_bytes(self) -> int:
+        warnings.warn(
+            "GatherReport.feat_bytes is deprecated (it was always bytes per "
+            "ROW, not per batch); use GatherReport.bytes_per_row",
+            DeprecationWarning, stacklevel=2)
+        return self.bytes_per_row
+
+    @classmethod
+    def from_plan(cls, plan: GatherPlan, bytes_per_row: int) -> "GatherReport":
+        return cls(
+            n_requests=len(plan.node_ids),
+            bytes_per_row=bytes_per_row,
+            tier_names=tuple(t.name for t in plan.tiers),
+            tier_classes=tuple(t.latency_class for t in plan.tiers),
+            tier_counts=tuple(int(c) for c in plan.counts()),
+        )
 
 
-class FeatureStore:
+class TieredFeatureStore:
+    """An ordered tier stack folded into one gather plan per batch.
+
+    The last tier must be a storage backstop exposing `.features` (the
+    authoritative rows); faster tiers only redirect requests off it.
+    """
+
+    def __init__(self, tiers: Sequence[Tier]):
+        from .tiers import LATENCY_CLASSES
+        tiers = tuple(tiers)
+        if not tiers:
+            raise ValueError("empty tier stack")
+        for t in tiers:
+            if t.latency_class not in LATENCY_CLASSES:
+                raise ValueError(
+                    f"tier {t.name!r} has unknown latency_class "
+                    f"{t.latency_class!r}; pricing/telemetry aggregate by "
+                    f"class and only know {LATENCY_CLASSES}")
+        backstop = tiers[-1]
+        if backstop.latency_class != "storage" \
+                or not hasattr(backstop, "features"):
+            raise ValueError(
+                f"last tier {backstop.name!r} "
+                f"({backstop.latency_class}) is not a storage backstop")
+        for i, t in enumerate(tiers):
+            # window semantics need the tier to see EVERY batch: access
+            # consumes the reuse reservations that push_window made, and a
+            # faster tier claiming requests first would leave counters
+            # incrementing forever (lines pinned, capacity silently shrinks)
+            if getattr(t, "window_depth", 0) > 0 and i != 0:
+                raise ValueError(
+                    f"windowed tier {t.name!r} must be first in the stack "
+                    f"(got position {i}): tiers above it would starve its "
+                    "reuse-counter decrements")
+        self.tiers = tiers
+        self.features = backstop.features
+        self.feature_dim = self.features.shape[1]
+        self.itemsize = self.features.dtype.itemsize
+        self.last_plan: GatherPlan | None = None
+
+    # -- compatibility views ---------------------------------------------------
+    @property
+    def cache(self) -> WindowBufferedCache | None:
+        for t in self.tiers:
+            c = getattr(t, "cache", None)
+            if isinstance(c, WindowBufferedCache):
+                return c
+        return None
+
+    @property
+    def cbuf(self) -> ConstantBuffer | None:
+        for t in self.tiers:
+            if isinstance(t, ConstantBufferTier):
+                return t.cbuf
+        return None
+
+    @property
+    def windowed_tier(self) -> Tier | None:
+        """First tier with a look-ahead window (drives lookahead sync)."""
+        for t in self.tiers:
+            if hasattr(t, "window_depth") and hasattr(t, "window"):
+                return t
+        return None
+
+    # -- data plane -----------------------------------------------------------
+    def plan(self, node_ids: np.ndarray) -> GatherPlan:
+        return build_plan(self.tiers, node_ids)
+
+    def gather(self, node_ids: np.ndarray) -> tuple[np.ndarray, GatherReport]:
+        """Fetch feature rows for (deduplicated) node_ids through the tiers."""
+        plan = self.plan(node_ids)
+        # a device-store tier at the top already gathered this batch's rows
+        # on device during its probe — don't fetch them from the backstop
+        # a second time
+        rows = getattr(plan.tiers[0], "last_rows", None)
+        if rows is None or len(rows) != len(node_ids):
+            rows = np.asarray(self.features[node_ids])
+        report = GatherReport.from_plan(
+            plan, bytes_per_row=self.feature_dim * self.itemsize)
+        self.last_plan = plan
+        return rows, report
+
+    def push_window(self, future_nodes: np.ndarray) -> None:
+        """Announce a future batch to every tier (window pinning etc.)."""
+        for t in self.tiers:
+            t.admit(future_nodes)
+
+    def reset(self) -> None:
+        for t in self.tiers:
+            t.reset()
+
+    def device_rows(self, tier_index: int = 0) -> np.ndarray:
+        """The HBM row store of a device tier, as the `tiered_gather` Pallas
+        kernel consumes it.  A `DeviceStoreTier` keeps the array resident and
+        hands it over; for the metadata-only `DeviceCacheTier` reference it
+        is materialized from the tags (line i = feature row of its resident
+        tag, zeros when empty)."""
+        tier = self.tiers[tier_index]
+        if hasattr(tier, "device_rows"):
+            return tier.device_rows()
+        tags = tier.cache.tags.reshape(-1)
+        rows = np.zeros((len(tags), self.features.shape[1]),
+                        self.features.dtype)
+        resident = tags >= 0
+        rows[resident] = self.features[tags[resident]]
+        return rows
+
+
+class FeatureStore(TieredFeatureStore):
+    """Classic keyword construction of the cache/cbuf/storage stack —
+    compatibility wrapper over `TieredFeatureStore`; new code should build a
+    stack via `DataPlaneSpec` (core/dataplane.py)."""
+
     def __init__(self, features: np.ndarray,
                  cache: WindowBufferedCache | None = None,
                  constant_buffer: ConstantBuffer | None = None):
-        self.features = features
-        self.cache = cache
-        self.cbuf = constant_buffer
-        self.feature_dim = features.shape[1]
-        self.itemsize = features.dtype.itemsize
+        tiers: list[Tier] = []
+        if cache is not None:
+            tiers.append(DeviceCacheTier(cache))
+        if constant_buffer is not None:
+            tiers.append(ConstantBufferTier(
+                constant_buffer,
+                row_bytes=features.shape[1] * features.dtype.itemsize))
+        tiers.append(StorageTier(features))
+        super().__init__(tiers)
 
     # -- construction ---------------------------------------------------------
     @classmethod
@@ -70,28 +239,3 @@ class FeatureStore:
         rng = np.random.default_rng(seed)
         feats = rng.standard_normal((num_nodes, dim)).astype(dtype)
         return cls(feats, **kw)
-
-    # -- data plane -----------------------------------------------------------
-    def gather(self, node_ids: np.ndarray) -> tuple[np.ndarray, GatherReport]:
-        """Fetch feature rows for (deduplicated) node_ids through the tiers."""
-        n = len(node_ids)
-        hbm_hits = np.zeros(n, dtype=bool)
-        if self.cache is not None:
-            hbm_hits = self.cache.access(node_ids)
-        host_hits = np.zeros(n, dtype=bool)
-        if self.cbuf is not None:
-            host_hits = ~hbm_hits & self.cbuf.redirect_mask(node_ids)
-        n_storage = int(n - hbm_hits.sum() - host_hits.sum())
-        rows = np.asarray(self.features[node_ids])
-        report = GatherReport(
-            n_requests=n,
-            n_hbm_hits=int(hbm_hits.sum()),
-            n_host_hits=int(host_hits.sum()),
-            n_storage=n_storage,
-            feat_bytes=self.feature_dim * self.itemsize,
-        )
-        return rows, report
-
-    def push_window(self, future_nodes: np.ndarray) -> None:
-        if self.cache is not None:
-            self.cache.push_window(future_nodes)

@@ -4,23 +4,35 @@ Per training iteration the loader must deliver (sampled blocks, gathered
 features).  Orchestration:
 
   * sampling runs `merge_depth` iterations AHEAD of training (decoupled —
-    §3.2): a deque of pre-sampled batches doubles as the cache's window
-    buffer and as the accumulator's outstanding-request pool;
+    §3.2): a deque of pre-sampled batches doubles as the windowed tier's
+    look-ahead buffer and as the accumulator's outstanding-request pool;
   * the accumulator recomputes the merge depth from live telemetry
     (requests/iter, redirection rate);
-  * feature gathers flow through the two-tier store (HBM cache + constant
-    host buffer + storage);
-  * the storage timeline simulator prices each batch (benchmarks); the
-    actual bytes are returned for real training.
+  * feature gathers flow through a *pluggable tier stack*
+    (`TieredFeatureStore`, see core/tiers.py) folded into one gather plan
+    per batch;
+  * the storage timeline prices each batch from the plan's tier split
+    (benchmarks); the actual bytes are returned for real training.
 
-The same class drives the mmap/BaM baselines (Fig. 13/14) via `mode`:
-  mode="mmap": CPU sampling, no cache, no cbuf, page-fault-priced storage
-  mode="bam" : GPU-style sampling + plain cache (window=0), no cbuf
-  mode="gids": everything on
+Which tiers exist and how time is priced is declared by a `DataPlaneSpec`
+(core/dataplane.py), not by mode strings.  The paper's three baselines are
+presets of the same machinery:
+
+  LoaderConfig(data_plane="gids")   # window cache + host cbuf + storage
+  LoaderConfig(data_plane="bam")    # random-eviction cache + storage
+  LoaderConfig(data_plane="mmap")   # storage only, page-fault pricing
+
+or any registered/user-composed spec:
+
+  LoaderConfig(data_plane=DataPlaneSpec.preset("pinned-host"))
+
+The old `mode="gids"` kwarg maps onto the preset of the same name through a
+deprecation shim.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Iterator, Sequence
 
@@ -30,9 +42,8 @@ from repro.graph.csr import CSRGraph
 from repro.sampling.neighbor import host_sample_blocks, SampledBlocks
 from repro.sampling.ladies import ladies_sample_blocks
 from .accumulator import DynamicAccessAccumulator, AccumulatorConfig
-from .constant_buffer import ConstantBuffer
-from .feature_store import FeatureStore, GatherReport
-from .software_cache import WindowBufferedCache
+from .dataplane import DataPlane, DataPlaneSpec
+from .feature_store import GatherReport
 from .storage_sim import SSDSpec, StorageTimeline, INTEL_OPTANE
 
 
@@ -42,7 +53,8 @@ class LoaderConfig:
     fanouts: Sequence[int] = (10, 5, 5)       # 3 sampling layers (paper §4.1)
     sampler: str = "neighbor"                  # or "ladies"
     ladies_layer_sizes: Sequence[int] = (512, 512, 512)
-    mode: str = "gids"                         # gids | bam | mmap
+    data_plane: DataPlaneSpec | str | None = None  # preset name or spec;
+                                               # None resolves to "gids"
     window_depth: int = 8                      # paper default
     cache_lines: int = 1 << 15                 # 8GB @4KB in paper; scaled here
     cache_ways: int = 8
@@ -51,6 +63,38 @@ class LoaderConfig:
     target_efficiency: float = 0.95
     n_ssd: int = 1
     seed: int = 0
+    # deprecated spelling of data_plane; kept so old call sites keep running
+    mode: dataclasses.InitVar[str | None] = None
+
+    def __post_init__(self, mode: str | None) -> None:
+        # an explicitly-set data_plane always wins over the deprecated mode
+        # kwarg: dataclasses.replace() re-feeds the shimmed `mode` read back
+        # through __init__, and must not revert a data_plane change or
+        # degrade a spec object to its bare name
+        if self.data_plane is None:
+            if mode is not None:
+                warnings.warn(
+                    "LoaderConfig(mode=...) is deprecated; use "
+                    "data_plane=<preset name> or "
+                    "data_plane=DataPlaneSpec.preset(...)",
+                    DeprecationWarning, stacklevel=3)
+            self.data_plane = mode if mode is not None else "gids"
+
+    def __getattr__(self, name: str):
+        # read-side half of the shim: old call sites also *read* cfg.mode
+        # (the InitVar is consumed by __init__ and never stored).  No
+        # deprecation warning here — dataclasses.replace() reads it on
+        # every call
+        if name == "mode":
+            dp = self.__dict__.get("data_plane", "gids")
+            return dp if isinstance(dp, str) else dp.name
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
+
+
+# the InitVar's class-level default (mode = None) would shadow the
+# __getattr__ read shim; the generated __init__ keeps its own reference
+del LoaderConfig.mode
 
 
 @dataclasses.dataclass
@@ -72,23 +116,15 @@ class GIDSDataLoader:
         self.rng = np.random.default_rng(cfg.seed)
         self.train_ids = (train_ids if train_ids is not None
                           else np.arange(graph.num_nodes))
-        cache = None
-        cbuf = None
-        if cfg.mode in ("gids", "bam"):
-            window = cfg.window_depth if cfg.mode == "gids" else 0
-            cache = WindowBufferedCache(cfg.cache_lines, cfg.cache_ways,
-                                        window_depth=window, seed=cfg.seed)
-        if cfg.mode == "gids" and cfg.cbuf_fraction > 0:
-            cbuf = ConstantBuffer.from_graph(graph, cfg.cbuf_fraction,
-                                             selection=cfg.cbuf_selection,
-                                             seed=cfg.seed)
-        self.store = FeatureStore(features, cache=cache, constant_buffer=cbuf)
+        self.spec = DataPlaneSpec.resolve(cfg.data_plane)
+        self.plane: DataPlane = self.spec.build(graph, features, config=cfg)
+        self.store = self.plane.store
         self.accumulator = DynamicAccessAccumulator(
             ssd, AccumulatorConfig(target_efficiency=cfg.target_efficiency,
                                    n_ssd=cfg.n_ssd,
                                    max_merge_iters=max(cfg.window_depth, 8)))
         self.timeline = StorageTimeline(ssd, cfg.n_ssd)
-        self._lookahead: deque[SampledBlocks] = deque()
+        self._lookahead: deque[tuple[dict, SampledBlocks]] = deque()
         self._win_idx = 0   # lookahead entries already pushed to cache window
         self._requests_per_iter = 0
 
@@ -105,15 +141,15 @@ class GIDSDataLoader:
         raise ValueError(cfg.sampler)
 
     def _refill_lookahead(self) -> int:
-        """Run sampling ahead until the accumulator's merge depth is covered
-        (GIDS/BaM modes; mmap samples synchronously, depth 1)."""
-        if self.config.mode == "mmap":
+        """Run sampling ahead until the accumulator's merge depth is covered.
+        Planes without lookahead (mmap) sample synchronously, depth 1; a
+        windowed tier floors the depth at its window size."""
+        if not self.plane.lookahead:
             depth = 1
         else:
             depth = self.accumulator.merge_depth(
                 max(self._requests_per_iter, 1))
-            depth = max(depth, self.config.window_depth
-                        if self.config.mode == "gids" else 1)
+            depth = max(depth, self.plane.min_lookahead)
         while len(self._lookahead) < depth:
             # snapshot the sampler PRNG before sampling so a checkpoint
             # resumes at the logical consumption point, not the sampling
@@ -125,13 +161,14 @@ class GIDSDataLoader:
         return depth
 
     def _sync_window(self) -> None:
-        """Keep the cache's window buffer = first `window_depth` lookahead
-        entries.  The lookahead may run deeper than the window (accumulator
-        merge depth > window depth); extra batches are sampled-ahead only."""
-        cache = self.store.cache
-        if cache is None or cache.window_depth == 0:
+        """Keep the windowed tier's look-ahead = first `window_depth`
+        lookahead entries.  The lookahead may run deeper than the window
+        (accumulator merge depth > window depth); extra batches are
+        sampled-ahead only."""
+        wt = self.store.windowed_tier
+        if wt is None or wt.window_depth == 0:
             return
-        while (len(cache.window) < cache.window_depth
+        while (len(wt.window) < wt.window_depth
                and self._win_idx < len(self._lookahead)):
             self.store.push_window(
                 self._lookahead[self._win_idx][1].all_nodes)
@@ -151,19 +188,7 @@ class GIDSDataLoader:
         self.accumulator.update(report.n_requests, report.redirected)
 
         outstanding = self.accumulator.outstanding(blocks.num_requests)
-        if self.config.mode == "mmap":
-            # page-cache hit means the row was touched recently: approximate
-            # with the cbuf-free, cache-free split — everything is storage on
-            # first touch; the timeline prices fault overheads.
-            t = self.timeline.mmap_batch_time(
-                n_storage=report.n_storage + report.n_host_hits
-                + report.n_hbm_hits,
-                n_page_cache=0, feat_bytes=report.feat_bytes)
-        else:
-            t = self.timeline.gids_batch_time(
-                n_storage=report.n_storage, n_host=report.n_host_hits,
-                n_hbm=report.n_hbm_hits, feat_bytes=report.feat_bytes,
-                outstanding=outstanding)
+        t = self.plane.price(self.timeline, report, outstanding)
         return Batch(blocks=blocks, features=rows, report=report,
                      prep_time_s=t, merge_depth=depth)
 
@@ -179,5 +204,7 @@ class GIDSDataLoader:
         self._requests_per_iter = state["requests_per_iter"]
         self._lookahead.clear()
         self._win_idx = 0
-        if self.store.cache is not None:
-            self.store.cache.window.clear()
+        # resume must be bit-identical to a freshly-built loader fed the same
+        # state: drop tier contents AND the accumulator's merge-depth EMA
+        self.plane.reset()
+        self.accumulator.reset_telemetry()

@@ -68,11 +68,22 @@ class WindowBufferedCache:
         self.ways = ways
         self.window_depth = window_depth
         self.evict = evict
+        self._seed = seed
         self.tags = np.full((self.num_sets, ways), -1, dtype=np.int64)
         self.reuse = np.zeros((self.num_sets, ways), dtype=np.int64)
         self.window: deque[np.ndarray] = deque()
         self.stats = CacheStats()
         self._rng = np.random.default_rng(seed)
+
+    def reset(self) -> None:
+        """Return to the exact post-construction state (metadata, stats,
+        window, AND eviction rng) — checkpoint-resume must be
+        indistinguishable from a freshly-built cache."""
+        self.tags.fill(-1)
+        self.reuse.fill(0)
+        self.window.clear()
+        self.stats = CacheStats()
+        self._rng = np.random.default_rng(self._seed)
 
     # -- window management ---------------------------------------------------
     def push_window(self, future_nodes: np.ndarray) -> None:
@@ -146,6 +157,18 @@ class WindowBufferedCache:
             self.reuse[s, w] = 0
 
     # -- introspection ---------------------------------------------------------
+    def lookup(self, nodes: np.ndarray) -> np.ndarray:
+        """Resident cache line index (set*ways+way) per node, -1 if absent.
+        Read-only — no stats, no fills; used to render a GatherPlan as the
+        slot array for the `tiered_gather` kernel."""
+        sets = _hash_ids(np.asarray(nodes), self.num_sets)
+        out = np.full(len(nodes), -1, dtype=np.int64)
+        for i, (s, n) in enumerate(zip(sets, nodes)):
+            w = np.nonzero(self.tags[s] == n)[0]
+            if len(w):
+                out[i] = s * self.ways + w[0]
+        return out
+
     def pinned_lines(self) -> int:
         return int((self.reuse > 0).sum())
 

@@ -113,11 +113,32 @@ class StorageTimeline:
     def __init__(self, spec: SSDSpec, n_ssd: int = 1):
         self.spec, self.n_ssd = spec, n_ssd
 
+    def price_batch(self, report, outstanding: int,
+                    policy: str = "overlapped") -> float:
+        """Price one gather from its `GatherReport` tier split.
+
+        policy "overlapped": storage requests overlap under the
+        accumulator-maintained outstanding count (GIDS/BaM planes);
+        "page_fault": every request is a serially-handled page fault (the
+        mmap baseline — redirection tiers don't exist, so the whole batch
+        hits storage)."""
+        bpr = report.bytes_per_row
+        if policy == "page_fault":
+            return self.mmap_batch_time(n_storage=report.n_requests,
+                                        n_page_cache=0, feat_bytes=bpr)
+        if policy == "overlapped":
+            return self.gids_batch_time(
+                n_storage=report.n_storage, n_host=report.n_host_hits,
+                n_hbm=report.n_hbm_hits, feat_bytes=bpr,
+                outstanding=outstanding)
+        raise ValueError(f"unknown pricing policy {policy!r}")
+
     def gids_batch_time(self, n_storage: int, n_host: int, n_hbm: int,
                         feat_bytes: int, outstanding: int) -> float:
         """GIDS: storage requests overlapped (efficiency from the accumulator's
         maintained outstanding count), host/HBM redirections run concurrently
-        on their own links; PCIe caps combined host+storage ingress."""
+        on their own links; PCIe caps combined host+storage ingress.
+        `feat_bytes` is the size of ONE feature row — counts scale it."""
         eff = model_burst(self.spec, max(outstanding, 1), self.n_ssd).efficiency
         ssd_bw = self.spec.peak_bw * self.n_ssd * eff
         t_ssd = n_storage * feat_bytes / ssd_bw if n_storage else 0.0
@@ -130,7 +151,9 @@ class StorageTimeline:
     def mmap_batch_time(self, n_storage: int, n_page_cache: int,
                         feat_bytes: int, cpu_threads: int = 16) -> float:
         """mmap baseline: page faults served with limited overlap (readahead
-        gives ~cpu_threads-deep concurrency), plus per-fault kernel overhead."""
+        gives ~cpu_threads-deep concurrency), plus per-fault kernel overhead.
+        `feat_bytes` is the size of ONE feature row; rows wider than the 4 KB
+        IO line fault once per line (no double-scaling against counts)."""
         lines = max(1, feat_bytes // IO_BYTES)
         faults = n_storage * lines
         t_fault = faults * (MMAP_FAULT_OVERHEAD_S / cpu_threads)

@@ -1,0 +1,380 @@
+"""Pluggable data-plane tiers — the open hierarchy behind the feature store.
+
+The paper fixes three placements (GPU software cache §3.4, constant host
+buffer §3.3, GPU-direct storage §3.1).  Related systems show the hierarchy
+should be open: PyTorch-Direct's zero-copy host tier and Data Tiering's
+reorder-and-score placement are each "just another tier".  This module
+defines the `Tier` protocol every placement implements plus adapters for the
+existing components:
+
+  DeviceCacheTier    — wraps `WindowBufferedCache` (HBM metadata, numpy ref)
+  DeviceStoreTier    — wraps `device_store.DeviceStore` (jittable HBM rows +
+                       Pallas `tiered_gather`)
+  ConstantBufferTier — wraps `ConstantBuffer` (pinned host memory)
+  StorageTier        — the memmap/array storage backstop (always hits)
+  KVSlotTier         — a KV-cache slot pool for the serve engine (a request
+                       "hits" while it holds a slot; retirement = evictable)
+
+`build_plan` folds an ordered tier stack over one batch of requests into a
+`GatherPlan`: a per-request tier-assignment array that is, by construction, a
+partition — every request is served by exactly one tier.  The plan feeds both
+the `tiered_gather` Pallas kernel (slot array) and the storage-timeline
+pricing (per-tier counts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from .constant_buffer import ConstantBuffer
+from .software_cache import WindowBufferedCache
+from .storage_sim import IO_BYTES
+
+#: Valid latency classes, fastest first.  The storage-timeline pricing keys
+#: off the class, not the concrete tier, so user tiers slot into the model.
+LATENCY_CLASSES = ("hbm", "host", "storage")
+
+
+@runtime_checkable
+class Tier(Protocol):
+    """One placement in the data plane.
+
+    `probe(node_ids)` returns a boolean hit mask over the requests that
+    reached this tier (requests claimed by faster tiers are not offered).
+    Probing MAY mutate tier state (a cache fills its lines on miss — the
+    paper's access path does exactly that).  `admit(node_ids)` announces the
+    node list of a *future* batch so the tier can pin / prefetch (window
+    buffering); tiers without look-ahead treat it as a no-op.
+    """
+
+    name: str
+    latency_class: str
+
+    @property
+    def capacity_bytes(self) -> int | None: ...      # None = unbounded
+
+    def probe(self, node_ids: np.ndarray) -> np.ndarray: ...
+
+    def admit(self, node_ids: np.ndarray) -> None: ...
+
+    def reset(self) -> None: ...
+
+
+class _TierBase:
+    """Default no-op admit/reset so simple tiers stay two methods."""
+
+    name = "tier"
+    latency_class = "storage"
+
+    @property
+    def capacity_bytes(self) -> int | None:
+        return None
+
+    def admit(self, node_ids: np.ndarray) -> None:
+        del node_ids
+
+    def reset(self) -> None:
+        pass
+
+
+class DeviceCacheTier(_TierBase):
+    """HBM tier backed by the window-buffered software cache (§3.4).
+
+    The wrapped cache is metadata-only (the reference numpy twin); the HBM
+    row store it implies can be materialized for the Pallas kernel via
+    `TieredFeatureStore.device_rows`.
+    """
+
+    latency_class = "hbm"
+
+    def __init__(self, cache: WindowBufferedCache, name: str = "hbm-cache",
+                 line_bytes: int = IO_BYTES):
+        self.cache = cache
+        self.name = name
+        self.line_bytes = line_bytes
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.cache.num_sets * self.cache.ways * self.line_bytes
+
+    @property
+    def window_depth(self) -> int:
+        return self.cache.window_depth
+
+    @property
+    def window(self) -> deque:
+        return self.cache.window
+
+    def probe(self, node_ids: np.ndarray) -> np.ndarray:
+        return self.cache.access(node_ids)
+
+    def admit(self, node_ids: np.ndarray) -> None:
+        self.cache.push_window(node_ids)
+
+    def lookup_slots(self, node_ids: np.ndarray) -> np.ndarray:
+        """Resident cache line per node (post-probe), -1 if absent."""
+        return self.cache.lookup(node_ids)
+
+    def reset(self) -> None:
+        self.cache.reset()
+
+
+class DeviceStoreTier(_TierBase):
+    """Fully-jittable HBM tier: cache_jax metadata + HBM row store + the
+    `tiered_gather` Pallas kernel, via `device_store.device_gather`.
+
+    Requests are padded to a power-of-two bucket so the jitted step re-uses
+    compiled shapes across batches.  `last_rows` holds the device-gathered
+    rows of the most recent probe (the real data path of this tier).
+    """
+
+    latency_class = "hbm"
+
+    def __init__(self, features: np.ndarray, num_lines: int, ways: int = 8,
+                 window_depth: int = 0, use_pallas: bool = False,
+                 name: str = "device-store"):
+        import jax.numpy as jnp                      # deferred: numpy-only
+        from . import device_store                   # users never pay for jax
+        self._jnp = jnp
+        self._mod = device_store
+        self._host_features = features
+        self._init_args = (num_lines, features.shape[1], ways)
+        self.store = device_store.init_store(num_lines, features.shape[1],
+                                             ways)
+        self.window_depth = window_depth
+        self.window: deque[np.ndarray] = deque()
+        self.use_pallas = use_pallas
+        self.name = name
+        self.last_rows = None
+
+    @property
+    def capacity_bytes(self) -> int:
+        return int(self.store.rows.nbytes)
+
+    def _future_counts(self, ids: np.ndarray) -> np.ndarray:
+        fc = np.zeros(len(ids), np.int32)
+        for w in self.window:
+            fc += np.isin(ids, w).astype(np.int32)
+        return fc
+
+    def probe(self, node_ids: np.ndarray) -> np.ndarray:
+        if self.window_depth > 0 and self.window:
+            self.window.popleft()
+        n = len(node_ids)
+        pad = max(8, 1 << (n - 1).bit_length())      # shape bucket for jit
+        ids = np.full(pad, -1, np.int32)
+        ids[:n] = node_ids
+        staged = self._host_features[np.maximum(ids, 0)]
+        fc = np.zeros(pad, np.int32)
+        fc[:n] = self._future_counts(node_ids)
+        self.store, rows, hits = self._mod.device_gather(
+            self.store, self._jnp.asarray(ids), self._jnp.asarray(staged),
+            self._jnp.asarray(fc), use_pallas=self.use_pallas)
+        self.last_rows = np.asarray(rows)[:n]
+        return np.asarray(hits)[:n]
+
+    def admit(self, node_ids: np.ndarray) -> None:
+        if self.window_depth == 0:
+            return
+        self.window.append(np.asarray(node_ids))
+        self.store = self.store._replace(cache=self._mod.push_window(
+            self.store.cache,
+            self._jnp.asarray(np.asarray(node_ids, np.int32))))
+
+    def lookup_slots(self, node_ids: np.ndarray) -> np.ndarray:
+        """Resident HBM row per node from the jittable cache metadata, -1 if
+        absent (read-only; mirrors `WindowBufferedCache.lookup`)."""
+        from .software_cache import _hash_ids   # the shared Fibonacci hash —
+        tags = np.asarray(self.store.cache.tags)  # must match cache_jax
+        slots = np.asarray(self.store.cache.slots)  # bit-exactly
+        sets = _hash_ids(np.asarray(node_ids), tags.shape[0])
+        out = np.full(len(node_ids), -1, np.int32)
+        for i, (s, n) in enumerate(zip(sets, node_ids)):
+            w = np.nonzero(tags[s] == n)[0]
+            if len(w):
+                out[i] = slots[s, w[0]]
+        return out
+
+    def device_rows(self) -> np.ndarray:
+        """The resident HBM row store (already materialized on device)."""
+        return np.asarray(self.store.rows)
+
+    def reset(self) -> None:
+        self.store = self._mod.init_store(*self._init_args)
+        self.window.clear()
+        self.last_rows = None
+
+
+class ConstantBufferTier(_TierBase):
+    """Pinned-host tier backed by the constant CPU buffer (§3.3).  Stateless
+    membership lookup — the PyTorch-Direct zero-copy tier has the same shape
+    with a different selection policy."""
+
+    latency_class = "host"
+
+    def __init__(self, cbuf: ConstantBuffer, row_bytes: int | None = None,
+                 name: str = "host-cbuf"):
+        self.cbuf = cbuf
+        self.row_bytes = row_bytes
+        self.name = name
+
+    @property
+    def capacity_bytes(self) -> int | None:
+        if self.cbuf.rows is not None:
+            return int(self.cbuf.rows.nbytes)
+        if self.row_bytes is not None:
+            return self.cbuf.size * self.row_bytes
+        return None
+
+    def probe(self, node_ids: np.ndarray) -> np.ndarray:
+        return self.cbuf.redirect_mask(node_ids)
+
+
+class StorageTier(_TierBase):
+    """The storage namespace backstop (memmap file or in-memory array).
+    Always hits — a tier stack is valid iff it ends in a backstop."""
+
+    latency_class = "storage"
+
+    def __init__(self, features: np.ndarray, name: str = "storage"):
+        self.features = features
+        self.name = name
+
+    @property
+    def capacity_bytes(self) -> int:
+        return int(self.features.nbytes)
+
+    def probe(self, node_ids: np.ndarray) -> np.ndarray:
+        return np.ones(len(node_ids), dtype=bool)
+
+    def rows(self, node_ids: np.ndarray) -> np.ndarray:
+        return np.asarray(self.features[node_ids])
+
+
+class KVSlotTier(_TierBase):
+    """KV-cache slot pool as a data-plane tier (serve engine).
+
+    A request "hits" while it holds a slot — its KV lines are resident and
+    un-evictable, the serving analogue of the window cache's USE state.  A
+    retired request's slot returns to safe-to-evict and is recycled for the
+    next admission.
+    """
+
+    latency_class = "hbm"
+
+    def __init__(self, slots: int, bytes_per_slot: int = 0,
+                 name: str = "kv-slots"):
+        self.num_slots = slots
+        self.bytes_per_slot = bytes_per_slot
+        self.name = name
+        self._free: deque[int] = deque(range(slots))
+        self._held: dict[int, int] = {}              # rid -> slot
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.num_slots * self.bytes_per_slot
+
+    @property
+    def occupancy(self) -> float:
+        return len(self._held) / self.num_slots if self.num_slots else 0.0
+
+    def probe(self, request_ids: np.ndarray) -> np.ndarray:
+        return np.array([int(r) in self._held for r in request_ids],
+                        dtype=bool)
+
+    def admit(self, request_ids: np.ndarray) -> None:
+        """Best-effort bulk admission: ids beyond the free capacity are NOT
+        admitted (no queueing at this layer).  Callers that must know the
+        outcome use `acquire()` per id — the serve engine does, keeping its
+        own queue for the overflow."""
+        for r in request_ids:
+            self.acquire(int(r))
+
+    def acquire(self, rid: int) -> int | None:
+        """Assign a free slot to `rid` (idempotent); None when full."""
+        if rid in self._held:
+            return self._held[rid]
+        if not self._free:
+            return None
+        slot = self._free.popleft()
+        self._held[rid] = slot
+        return slot
+
+    def release(self, rid: int) -> int:
+        slot = self._held.pop(rid)
+        self._free.append(slot)
+        return slot
+
+    def reset(self) -> None:
+        self._free = deque(range(self.num_slots))
+        self._held.clear()
+
+
+# -- gather plan ---------------------------------------------------------------
+
+@dataclasses.dataclass
+class GatherPlan:
+    """Per-request tier assignment for one batch: `assignment[i]` indexes the
+    tier stack entry that serves request i.  Folding guarantees a partition
+    (`is_partition`); `kernel_slots` renders the device-tier portion as the
+    slot array the `tiered_gather` Pallas kernel consumes."""
+
+    node_ids: np.ndarray
+    assignment: np.ndarray          # (B,) int8 index into `tiers`
+    tiers: tuple
+
+    def counts(self) -> np.ndarray:
+        return np.bincount(self.assignment, minlength=len(self.tiers))
+
+    def mask(self, tier_index: int) -> np.ndarray:
+        return self.assignment == tier_index
+
+    def is_partition(self) -> bool:
+        a = self.assignment
+        return bool(((a >= 0) & (a < len(self.tiers))).all()
+                    and int(self.counts().sum()) == len(self.node_ids))
+
+    def kernel_slots(self, tier_index: int = 0) -> np.ndarray:
+        """Slot array for `ops.tiered_gather`: requests served by the device
+        tier carry their cache line, everything else -1 (staged row i).
+
+        Slots are resolved against the tier's *post-probe* metadata — the
+        same state `TieredFeatureStore.device_rows` materializes — so the
+        (slots, rows) pair is always coherent.  A hit whose line was evicted
+        later in the same batch (a colliding fill in its set) resolves to -1
+        and is demoted to the staged path: the gathered bytes stay correct,
+        at worst the pricing report counted one extra HBM hit."""
+        tier = self.tiers[tier_index]
+        slots = np.full(len(self.node_ids), -1, np.int32)
+        m = self.mask(tier_index)
+        if m.any():
+            slots[m] = tier.lookup_slots(self.node_ids[m])
+        return slots
+
+
+def build_plan(tiers: Sequence[Tier], node_ids: np.ndarray) -> GatherPlan:
+    """Fold the ordered tier stack over one batch: each tier is offered the
+    requests every faster tier declined; its hits are claimed.  The last tier
+    must be a backstop (probe everything True), else the fold fails loudly."""
+    node_ids = np.asarray(node_ids)
+    n = len(node_ids)
+    assignment = np.full(n, -1, np.int8)
+    unclaimed = np.ones(n, dtype=bool)
+    for ti, tier in enumerate(tiers):
+        idx = np.nonzero(unclaimed)[0]
+        if len(idx) == 0:
+            break
+        hits = np.asarray(tier.probe(node_ids[idx]), dtype=bool)
+        took = idx[hits]
+        assignment[took] = ti
+        unclaimed[took] = False
+    if unclaimed.any():
+        raise RuntimeError(
+            f"tier stack {[t.name for t in tiers]} left "
+            f"{int(unclaimed.sum())} of {n} requests unserved — the stack "
+            "must end in a storage backstop")
+    return GatherPlan(node_ids=node_ids, assignment=assignment,
+                      tiers=tuple(tiers))

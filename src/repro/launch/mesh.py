@@ -11,14 +11,24 @@ see 1 CPU device while the dry-run sees 512 placeholders).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                # jax >= 0.5 names axis modes explicitly;
+    from jax.sharding import AxisType   # older releases are Auto-only and
+except ImportError:                     # take no axis_types kwarg
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def batch_axes(multi_pod: bool = False):
@@ -28,5 +38,4 @@ def batch_axes(multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh over whatever devices exist (tests/examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((n, 1), ("data", "model"))

@@ -1,3 +1,4 @@
+from repro.core.tiers import KVSlotTier
 from .engine import EngineConfig, Request, ServeEngine
 
-__all__ = ["EngineConfig", "Request", "ServeEngine"]
+__all__ = ["EngineConfig", "KVSlotTier", "Request", "ServeEngine"]

@@ -5,8 +5,10 @@ GIDS principles carry over to serving:
   * the request queue is the accumulator's dispatch-ahead pool — admissions
     are batched so the decode step always runs at full slot occupancy
     (latency of admission hidden behind in-flight decodes);
-  * per-slot KV cache blocks are the software-cache lines; a finished
-    request's slot is "safe to evict" and recycled for the next admission.
+  * per-slot KV cache blocks are the software-cache lines: the slot pool is
+    literally a data-plane tier (`KVSlotTier`, built through the "serve-kv"
+    `DataPlaneSpec` preset) — a request "hits" while it holds a slot, a
+    finished request's slot is "safe to evict" and recycled.
 
 Single-host reference implementation (the pjit'd steps are the same ones
 the 512-chip dry-run compiles; here they run on the local device).
@@ -21,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dataplane import DataPlaneSpec
+from repro.core.tiers import KVSlotTier
 from repro.models.transformer import LM
 
 
@@ -31,6 +35,7 @@ class Request:
     max_new_tokens: int = 16
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    kv_key: int = -1                # slot-pool key, assigned at admission
 
 
 @dataclasses.dataclass
@@ -53,9 +58,16 @@ class ServeEngine:
         self.params = params
         self.cfg = cfg
         self.cache = model.init_cache(cfg.slots, cfg.max_seq)
+        kv_bytes = sum(x.nbytes for x in jax.tree.leaves(self.cache))
+        (self.kv_slots,) = DataPlaneSpec.preset("serve-kv").build_stack(
+            slots=cfg.slots,
+            bytes_per_slot=kv_bytes // max(cfg.slots, 1))
+        assert isinstance(self.kv_slots, KVSlotTier)
         self.positions = np.zeros(cfg.slots, np.int32)   # next write index
         self.active: list[Optional[Request]] = [None] * cfg.slots
         self.queue: deque[Request] = deque()
+        self._admit_seq = 0      # slot-pool key: admission order, not the
+                                 # caller-supplied rid (rids may collide)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._next_tok = np.zeros((cfg.slots, 1), np.int32)
 
@@ -73,11 +85,20 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def _admit(self) -> None:
-        for slot in range(self.cfg.slots):
-            if self.active[slot] is not None or not self.queue:
-                continue
+    def _admit(self) -> list[Request]:
+        """Admit queued requests into free slots; returns requests that
+        finished AT prefill (max_new_tokens=1 or EOS on the first token) —
+        they never occupy a slot for decoding."""
+        retired = []
+        while self.queue:
+            slot = self.kv_slots.acquire(self._admit_seq)
+            if slot is None:                   # pool full: stay queued
+                break
+            assert self.active[slot] is None, \
+                "slot pool and active list out of sync"
             req = self.queue.popleft()
+            req.kv_key = self._admit_seq
+            self._admit_seq += 1
             S = len(req.prompt)
             # prefill this slot: run the prompt through a slot-batched
             # forward (batch of 1 padded into the slot position).
@@ -85,29 +106,35 @@ class ServeEngine:
             sub_cache = self.model.init_cache(1, self.cfg.max_seq)
             logits, sub_cache = self.model.prefill(self.params, batch,
                                                    sub_cache)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.generated.append(tok)
+            if (len(req.generated) >= req.max_new_tokens
+                    or tok == self.cfg.eos_token):
+                req.done = True
+                retired.append(req)
+                self.kv_slots.release(req.kv_key)
+                continue
             # splice the slot's cache rows in
             self.cache = jax.tree.map(
                 lambda full, one: full.at[:, slot:slot + 1].set(one)
                 if full.ndim >= 2 else full,
                 self.cache, sub_cache)
-            tok = int(jnp.argmax(logits[0, -1]))
-            req.generated.append(tok)
             self._next_tok[slot, 0] = tok
             self.positions[slot] = S
             self.active[slot] = req
+        return retired
 
     # -- main loop ---------------------------------------------------------------
     def step(self) -> list[Request]:
         """One engine tick: admit waiting requests, one decode step for all
         active slots, retire finished requests.  Returns retired."""
-        self._admit()
+        retired = self._admit()
         if not any(r is not None for r in self.active):
-            return []
+            return retired
         tok, self.cache = self._decode(
             jnp.asarray(self._next_tok), self.cache,
             jnp.asarray(self.positions))
         tok_np = np.asarray(tok)
-        retired = []
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
@@ -119,7 +146,8 @@ class ServeEngine:
                     or self.positions[slot] >= self.cfg.max_seq - 1):
                 req.done = True
                 retired.append(req)
-                self.active[slot] = None       # slot safe-to-evict
+                self.active[slot] = None
+                self.kv_slots.release(req.kv_key)  # slot safe-to-evict
             else:
                 self._next_tok[slot, 0] = t
         return retired

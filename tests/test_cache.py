@@ -2,6 +2,8 @@
 numpy/JAX twin agreement (property-based)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.software_cache import WindowBufferedCache, run_trace

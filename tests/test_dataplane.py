@@ -1,0 +1,310 @@
+"""Pluggable tiered data-plane API: tier-stack composition order, preset
+registry round-trip vs the deprecated mode= shim, the partition property of
+per-request tier assignment, kernel-slot wiring, and KV-slot recycling."""
+import numpy as np
+import pytest
+
+from repro.core import (DataPlaneSpec, GIDSDataLoader, KVSlotTier,
+                        LoaderConfig, TierSpec, TieredFeatureStore, tier)
+from repro.core.constant_buffer import ConstantBuffer
+from repro.core.software_cache import WindowBufferedCache
+from repro.core.tiers import (ConstantBufferTier, DeviceCacheTier,
+                              StorageTier, build_plan)
+from repro.graph.synthetic import rmat_graph
+
+
+@pytest.fixture(scope="module")
+def graph_and_feats():
+    g = rmat_graph(8_000, 10, 16, seed=3)
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 16)).astype(np.float32)
+    return g, feats
+
+
+def _stack(feats, num_nodes, cache_lines=0, cbuf_ids=None, seed=0,
+           window_depth=0):
+    tiers = []
+    if cache_lines:
+        tiers.append(DeviceCacheTier(WindowBufferedCache(
+            cache_lines, ways=4, window_depth=window_depth, seed=seed)))
+    if cbuf_ids is not None:
+        tiers.append(ConstantBufferTier(
+            ConstantBuffer(num_nodes, cbuf_ids)))
+    tiers.append(StorageTier(feats))
+    return tiers
+
+
+# -- partition property --------------------------------------------------------
+
+def test_plan_assignment_is_partition_property():
+    """Every request is served by exactly one tier, across random stacks,
+    random batches, and repeated (stateful) probing."""
+    rng = np.random.default_rng(7)
+    N, D = 2000, 8
+    feats = rng.standard_normal((N, D)).astype(np.float32)
+    for trial in range(20):
+        cache_lines = int(rng.choice([0, 64, 256, 1024]))
+        with_cbuf = bool(rng.integers(0, 2))
+        cbuf_ids = (np.unique(rng.integers(0, N, rng.integers(1, N // 2)))
+                    if with_cbuf else None)
+        tiers = _stack(feats, N, cache_lines=cache_lines, cbuf_ids=cbuf_ids,
+                       seed=trial)
+        for _ in range(4):                     # cache state evolves
+            ids = np.unique(rng.integers(0, N, rng.integers(1, 400)))
+            plan = build_plan(tiers, ids)
+            assert plan.is_partition()
+            # exactly-one-tier, stated directly: the per-tier masks are
+            # disjoint and cover the batch
+            masks = [plan.mask(i) for i in range(len(tiers))]
+            assert (np.sum(masks, axis=0) == 1).all()
+            assert int(plan.counts().sum()) == len(ids)
+
+
+def test_stack_without_backstop_fails_loudly():
+    N = 100
+    cbuf = ConstantBufferTier(ConstantBuffer(N, np.arange(10)))
+    with pytest.raises(RuntimeError, match="backstop"):
+        build_plan([cbuf], np.arange(50))
+    feats = np.zeros((N, 4), np.float32)
+    with pytest.raises(ValueError, match="backstop"):
+        TieredFeatureStore([cbuf])
+    del feats
+
+
+# -- composition order ---------------------------------------------------------
+
+def test_composition_order_changes_tier_split():
+    """The fold offers each tier only what faster tiers declined, so stack
+    order is semantic: once the cache is warm, cache-first claims requests
+    the cbuf would otherwise serve."""
+    rng = np.random.default_rng(0)
+    N, D = 1000, 8
+    feats = rng.standard_normal((N, D)).astype(np.float32)
+    pinned = np.arange(0, N, 2)                # half the nodes
+    ids = np.unique(rng.integers(0, N, 300))
+
+    def run(order):
+        cache = DeviceCacheTier(WindowBufferedCache(1 << 12, ways=4, seed=0))
+        cbuf = ConstantBufferTier(ConstantBuffer(N, pinned))
+        stack = ([cache, cbuf] if order == "cache_first" else [cbuf, cache])
+        stack.append(StorageTier(feats))
+        store = TieredFeatureStore(stack)
+        store.gather(ids)                      # warm the cache
+        _, report = store.gather(ids)
+        return report
+
+    cache_first = run("cache_first")
+    cbuf_first = run("cbuf_first")
+    # warm cache claims everything when probed first...
+    assert cache_first.n_hbm_hits == len(ids)
+    assert cache_first.n_host_hits == 0
+    # ...but the cbuf intercepts its pinned nodes when it comes first
+    assert cbuf_first.n_host_hits == int(np.sum(ids % 2 == 0))
+    assert cbuf_first.n_hbm_hits == len(ids) - cbuf_first.n_host_hits
+
+
+# -- preset registry round-trip vs mode= shim ----------------------------------
+
+@pytest.mark.parametrize("mode", ["gids", "bam", "mmap"])
+def test_preset_equivalent_to_deprecated_mode_shim(graph_and_feats, mode):
+    g, feats = graph_and_feats
+    kw = dict(batch_size=128, fanouts=(4, 3), cache_lines=2048,
+              window_depth=4, seed=5)
+    with pytest.warns(DeprecationWarning):
+        old = GIDSDataLoader(g, feats, LoaderConfig(mode=mode, **kw))
+    new = GIDSDataLoader(g, feats, LoaderConfig(data_plane=mode, **kw))
+    for _ in range(6):
+        bo, bn = old.next_batch(), new.next_batch()
+        assert bo.report == bn.report
+        assert bo.prep_time_s == bn.prep_time_s
+        assert bo.merge_depth == bn.merge_depth
+        np.testing.assert_array_equal(bo.features, bn.features)
+
+
+def test_spec_build_factory_direct(graph_and_feats):
+    """The one-factory entry point from the redesign:
+    DataPlaneSpec.preset("gids").build(graph, features)."""
+    g, feats = graph_and_feats
+    plane = DataPlaneSpec.preset("gids").build(g, feats)
+    ids = np.unique(np.random.default_rng(1).integers(0, g.num_nodes, 200))
+    rows, report = plane.store.gather(ids)
+    np.testing.assert_array_equal(rows, feats[ids])
+    assert report.n_requests == len(ids)
+    assert report.tier_names == ("hbm-cache", "host-cbuf", "storage")
+    assert plane.min_lookahead == 8            # gids floors at window depth
+
+
+def test_mmap_plane_is_synchronous(graph_and_feats):
+    g, feats = graph_and_feats
+    dl = GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=64, fanouts=(3,), data_plane="mmap"))
+    b = dl.next_batch()
+    assert b.merge_depth == 1
+    assert b.report.n_storage == b.report.n_requests
+
+
+def test_custom_preset_registration(graph_and_feats):
+    g, feats = graph_and_feats
+    name = "test-hot-host"
+    if name not in DataPlaneSpec.names():
+        DataPlaneSpec.register(DataPlaneSpec(
+            name=name,
+            tiers=(tier("constant_buffer", fraction=0.5),
+                   tier("storage"))))
+    dl = GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=128, fanouts=(4,), data_plane=name))
+    b = dl.next_batch()
+    assert b.report.n_hbm_hits == 0            # no device tier in the stack
+    assert b.report.n_host_hits > 0
+    assert b.report.n_host_hits + b.report.n_storage == b.report.n_requests
+    assert isinstance(DataPlaneSpec.preset(name).tiers[0], TierSpec)
+    with pytest.raises(ValueError):
+        DataPlaneSpec.register(DataPlaneSpec(name=name, tiers=()))
+    with pytest.raises(KeyError, match="unknown data-plane preset"):
+        DataPlaneSpec.preset("no-such-plane")
+
+
+# -- report semantics ----------------------------------------------------------
+
+def test_mode_shim_is_readable_and_typoed_knobs_rejected(graph_and_feats):
+    import dataclasses
+
+    g, feats = graph_and_feats
+    with pytest.warns(DeprecationWarning):
+        cfg = LoaderConfig(mode="bam")
+    assert cfg.mode == "bam"                   # read side of the shim
+    cfg2 = LoaderConfig(data_plane=DataPlaneSpec.preset("gids"))
+    assert cfg2.mode == "gids"                 # spec resolves to its name
+    with pytest.raises(AttributeError):
+        cfg.no_such_attr
+    with pytest.raises(TypeError, match="unknown build override"):
+        DataPlaneSpec.preset("gids").build(g, feats, cache_line=64)
+
+    # dataclasses.replace re-feeds the shimmed mode read through __init__;
+    # an explicit data_plane must win and spec objects must survive intact
+    assert dataclasses.replace(
+        LoaderConfig(data_plane="gids"), data_plane="bam").data_plane == "bam"
+    spec = DataPlaneSpec.preset("gids").with_(name="replace-keeps-spec")
+    kept = dataclasses.replace(LoaderConfig(data_plane=spec), batch_size=64)
+    assert kept.data_plane is spec
+    # explicit new API beats the deprecated kwarg when both are given
+    # (no warning: this is exactly the pair replace() feeds on every call)
+    assert LoaderConfig(data_plane="gids", mode="mmap").data_plane == "gids"
+
+
+def test_report_bytes_per_row_and_deprecated_alias(graph_and_feats):
+    g, feats = graph_and_feats
+    dl = GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=64, fanouts=(3,), data_plane="gids", cache_lines=1024,
+        window_depth=2))
+    r = dl.next_batch().report
+    assert r.bytes_per_row == feats.shape[1] * feats.dtype.itemsize
+    with pytest.warns(DeprecationWarning):
+        assert r.feat_bytes == r.bytes_per_row
+
+
+# -- plan -> Pallas kernel wiring ----------------------------------------------
+
+def test_kernel_slots_feed_tiered_gather(graph_and_feats):
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    g, feats = graph_and_feats
+    dl = GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=32, fanouts=(3,), data_plane="gids", cache_lines=4096,
+        window_depth=2, cbuf_fraction=0.0))
+    for _ in range(3):                         # warm the cache for real hits
+        b = dl.next_batch()
+    plan = dl.store.last_plan
+    slots = plan.kernel_slots(0)
+    assert (slots[plan.mask(0)] >= 0).all()    # hits carry a cache line
+    assert (slots[~plan.mask(0)] == -1).all()  # everything else is staged
+    cache_rows = dl.store.device_rows(0)
+    staged = feats[plan.node_ids]
+    out = ops.tiered_gather(jnp.asarray(slots, jnp.int32),
+                            jnp.asarray(cache_rows), jnp.asarray(staged))
+    np.testing.assert_allclose(np.asarray(out), feats[plan.node_ids])
+    assert b.report.n_hbm_hits == int(plan.mask(0).sum())
+
+
+def test_device_store_tier_plane(graph_and_feats):
+    """The fully-jittable HBM tier composes like any other tier."""
+    g, feats = graph_and_feats
+    dl = GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=16, fanouts=(2,), data_plane="gids-device",
+        cache_lines=512, window_depth=0, cbuf_fraction=0.0))
+    b1 = dl.next_batch()
+    np.testing.assert_array_equal(b1.features, feats[b1.blocks.all_nodes])
+    assert b1.report.n_hbm_hits + b1.report.n_storage == b1.report.n_requests
+    # the tier's own gathered rows match the backstop's
+    dtier = dl.store.tiers[0]
+    np.testing.assert_allclose(dtier.last_rows, feats[b1.blocks.all_nodes],
+                               rtol=1e-6)
+    # the kernel feed works for the jittable tier too: resident slots point
+    # at device rows holding the right features (warm until hub nodes repeat)
+    hbm = np.zeros(0, bool)
+    for _ in range(6):
+        dl.next_batch()
+        plan = dl.store.last_plan
+        slots = plan.kernel_slots(0)
+        hbm = slots >= 0
+        if hbm.any():
+            break
+    assert hbm.any()
+    rows = dl.store.device_rows(0)
+    np.testing.assert_allclose(rows[slots[hbm]], feats[plan.node_ids[hbm]],
+                               rtol=1e-6)
+
+
+def test_unknown_latency_class_rejected():
+    feats = np.zeros((50, 4), np.float32)
+
+    class NvmeTier(StorageTier):
+        latency_class = "nvme"
+
+    with pytest.raises(ValueError, match="latency_class"):
+        TieredFeatureStore([NvmeTier(feats), StorageTier(feats)])
+
+
+# -- checkpoint-resume telemetry reset -----------------------------------------
+
+def test_resume_resets_telemetry_bit_reproducible(graph_and_feats):
+    g, feats = graph_and_feats
+    mk = lambda: GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=64, fanouts=(4,), data_plane="gids", cache_lines=1024,
+        window_depth=2, seed=11))
+    a = mk()
+    for _ in range(6):
+        a.next_batch()
+    assert a.accumulator.redirect_rate > 0
+    st = a.state_dict()
+
+    a.load_state_dict(st)                      # resume in place
+    assert a.accumulator.redirect_rate == 0.0
+    assert a.store.cache.stats.accesses == 0   # tier state dropped too
+
+    b = mk()                                   # resume on a fresh loader
+    b.load_state_dict(st)
+    for _ in range(3):
+        ba, bb = a.next_batch(), b.next_batch()
+        np.testing.assert_array_equal(ba.blocks.seeds, bb.blocks.seeds)
+        assert ba.report == bb.report
+        assert ba.prep_time_s == bb.prep_time_s
+
+
+# -- KV slot pool (serve engine's tier) ----------------------------------------
+
+def test_kv_slot_tier_recycling():
+    (kv,) = DataPlaneSpec.preset("serve-kv").build_stack(
+        slots=2, bytes_per_slot=1024)
+    assert isinstance(kv, KVSlotTier)
+    assert kv.capacity_bytes == 2048
+    s0, s1 = kv.acquire(10), kv.acquire(11)
+    assert {s0, s1} == {0, 1}
+    assert kv.acquire(12) is None              # pool full
+    assert kv.acquire(10) == s0                # idempotent for the holder
+    np.testing.assert_array_equal(kv.probe(np.array([10, 11, 12])),
+                                  [True, True, False])
+    assert kv.release(10) == s0
+    assert kv.acquire(12) == s0                # recycled
+    assert kv.occupancy == 1.0

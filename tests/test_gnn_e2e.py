@@ -26,7 +26,7 @@ def test_gnn_learns(model):
     gnn = GNN(cfg)
     params = gnn.init(jax.random.PRNGKey(0))
     dl = GIDSDataLoader(g, feats, LoaderConfig(
-        batch_size=128, fanouts=cfg.fanouts, mode="gids",
+        batch_size=128, fanouts=cfg.fanouts, data_plane="gids",
         cache_lines=2048, window_depth=2))
 
     @jax.jit

@@ -1,5 +1,8 @@
 """Graph substrate: CSR invariants, reverse, PageRank, constant buffer."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.constant_buffer import ConstantBuffer

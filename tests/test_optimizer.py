@@ -54,9 +54,8 @@ def test_schedules():
 
 
 def test_zero1_pspec_places_data_axis():
-    import jax as j
-    mesh = j.make_mesh((1, 1), ("data", "model"),
-                       axis_types=(j.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()        # (1, 1) ("data", "model") on one device
     # dim0 replicated & divisible -> gets 'data'
     assert opt_lib.zero1_pspec(P(None, "model"), (8, 16), mesh) \
         == P("data", "model")

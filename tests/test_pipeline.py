@@ -17,7 +17,7 @@ def graph_and_feats():
 
 def _avg_prep(g, feats, mode, iters=12, **kw):
     dl = GIDSDataLoader(g, feats, LoaderConfig(
-        batch_size=256, fanouts=(5, 5), mode=mode, cache_lines=4096,
+        batch_size=256, fanouts=(5, 5), data_plane=mode, cache_lines=4096,
         window_depth=4, **kw))
     ts = [dl.next_batch().prep_time_s for _ in range(iters)]
     return np.mean(ts[2:]), dl
@@ -36,7 +36,7 @@ def test_mode_ordering_gids_bam_mmap(graph_and_feats):
 def test_features_are_correct_rows(graph_and_feats):
     g, feats = graph_and_feats
     dl = GIDSDataLoader(g, feats, LoaderConfig(batch_size=64, fanouts=(4,),
-                                               mode="gids",
+                                               data_plane="gids",
                                                cache_lines=1024,
                                                window_depth=2))
     b = dl.next_batch()
@@ -51,7 +51,7 @@ def test_accumulator_merges_when_batches_small(graph_and_feats):
     assert small_depth >= 1
     # tiny batches -> more merging needed to cover the threshold
     dl_tiny = GIDSDataLoader(g, feats, LoaderConfig(
-        batch_size=8, fanouts=(2,), mode="gids", cache_lines=1024,
+        batch_size=8, fanouts=(2,), data_plane="gids", cache_lines=1024,
         window_depth=2))
     for _ in range(3):
         dl_tiny.next_batch()
@@ -70,7 +70,7 @@ def test_redirect_rate_rises_with_cache(graph_and_feats):
 def test_telemetry_tiers_partition_requests(graph_and_feats):
     g, feats = graph_and_feats
     dl = GIDSDataLoader(g, feats, LoaderConfig(batch_size=128, fanouts=(4, 4),
-                                               mode="gids",
+                                               data_plane="gids",
                                                cache_lines=2048,
                                                window_depth=2))
     for _ in range(5):
@@ -82,7 +82,7 @@ def test_telemetry_tiers_partition_requests(graph_and_feats):
 def test_loader_state_resume(graph_and_feats):
     g, feats = graph_and_feats
     mk = lambda: GIDSDataLoader(g, feats, LoaderConfig(
-        batch_size=64, fanouts=(4,), mode="gids", cache_lines=1024,
+        batch_size=64, fanouts=(4,), data_plane="gids", cache_lines=1024,
         window_depth=2, seed=9))
     a = mk()
     for _ in range(4):

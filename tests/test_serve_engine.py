@@ -62,3 +62,12 @@ def test_engine_slot_recycling():
                               max_new_tokens=3))
     done = engine.run_until_drained()
     assert len(done) == 3                      # 3 requests through 1 slot
+    assert engine.kv_slots.occupancy == 0.0    # every slot recycled
+
+    # a one-token request finishes at prefill and never holds a slot
+    engine.submit(Request(rid=9,
+                          prompt=rng.integers(0, cfg.vocab_size, 4)
+                          .astype(np.int32),
+                          max_new_tokens=1))
+    (one,) = engine.run_until_drained()
+    assert one.done and len(one.generated) == 1

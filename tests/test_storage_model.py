@@ -2,6 +2,8 @@
 simulator — the Fig. 8 correspondence — plus property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO,
