@@ -1,11 +1,27 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV rows; `python -m benchmarks.run [--quick]`.
+# CSV rows; `python -m benchmarks.run [--quick]`.  `--json [path]` is the CI
+# smoke mode: fig13 + fig14 headline numbers as JSON (default BENCH_pr2.json)
+# so the perf trajectory is recorded per PR.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+
+
+def write_json_smoke(path: str) -> None:
+    from benchmarks import fig13_e2e, fig14_overlap
+    payload = {
+        "fig13_e2e": fig13_e2e.headline(),
+        "fig14_overlap": fig14_overlap.headline(),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+    print(json.dumps(payload, indent=2))
 
 
 def main() -> None:
@@ -13,13 +29,21 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow E2E figures")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", nargs="?", const="BENCH_pr2.json",
+                    default=None, metavar="PATH",
+                    help="smoke mode: write fig13/fig14 headline numbers to "
+                         "PATH (default BENCH_pr2.json) and exit")
     args = ap.parse_args()
+
+    if args.json:
+        write_json_smoke(args.json)
+        return
 
     from benchmarks import (fig3_request_rates, fig7_sampling,
                             fig8_bandwidth_model, fig9_accumulator,
                             fig10_constant_buffer, fig11_window_buffering,
-                            fig12_cache_size, fig13_e2e, fig15_ladies,
-                            roofline, tables)
+                            fig12_cache_size, fig13_e2e, fig14_overlap,
+                            fig15_ladies, roofline, tables)
     suites = [
         ("tables", tables.main),
         ("fig3", fig3_request_rates.main),
@@ -30,6 +54,7 @@ def main() -> None:
         ("fig11", fig11_window_buffering.main),
         ("fig12", fig12_cache_size.main),
         ("fig13_14", fig13_e2e.main),
+        ("fig14_overlap", fig14_overlap.main),
         ("fig15", fig15_ladies.main),
         ("roofline", roofline.main),
     ]

@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--hidden", type=int, default=4096)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--plane", default="gids-async",
+                    help="data-plane preset (gids-async overlaps prep with "
+                         "the measured train step)")
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
@@ -51,8 +54,8 @@ def main():
     loader = GIDSDataLoader(
         graph, feats,
         LoaderConfig(batch_size=args.batch, fanouts=cfg.fanouts,
-                     data_plane="gids", cache_lines=1 << 14, window_depth=8,
-                     cbuf_fraction=0.1),
+                     data_plane=args.plane, cache_lines=1 << 14,
+                     window_depth=8, cbuf_fraction=0.1),
         ssd=INTEL_OPTANE)
 
     @jax.jit
@@ -62,19 +65,26 @@ def main():
         return p, loss
 
     t0 = time.time()
-    losses, prep_times = [], []
+    losses, prep_times, exposed_times = [], [], []
+    last_step_s = 0.0     # measured compute the prefetch overlapped with
     for it in range(args.steps):
-        b = loader.next_batch()
+        b = loader.next_batch(compute_s=last_step_s)
         hi = [jnp.asarray(i) for i in hop_indices(b.blocks)]
         y = jnp.asarray(labels_all[b.blocks.seeds])
+        ts = time.perf_counter()
         params, loss = step(params, jnp.asarray(b.features),
                             hi[0], hi[1], hi[2], y,
                             jnp.float32(args.lr))
-        losses.append(float(loss))
+        loss = float(loss)                       # sync point: step finished
+        if it > 0:      # step 0's wall time is dominated by jit compilation
+            last_step_s = time.perf_counter() - ts
+        losses.append(loss)
         prep_times.append(b.prep_time_s)
+        exposed_times.append(b.exposed_prep_s)
         if it % 25 == 0 or it == args.steps - 1:
             print(f"iter {it:4d} loss {losses[-1]:.4f} "
                   f"prep {np.mean(prep_times[-25:])*1e3:.2f} ms "
+                  f"(exposed {np.mean(exposed_times[-25:])*1e3:.2f} ms) "
                   f"cache_hit {loader.store.cache.stats.hit_ratio:.2f} "
                   f"redirect {loader.accumulator.redirect_rate:.2f}")
         if args.ckpt_dir and it and it % 100 == 0:

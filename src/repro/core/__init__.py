@@ -8,7 +8,8 @@ from .constant_buffer import ConstantBuffer
 from .dataplane import (BuildContext, DataPlane, DataPlaneSpec, TierSpec,
                         register_tier_kind, tier)
 from .feature_store import FeatureStore, GatherReport, TieredFeatureStore
-from .pipeline import Batch, GIDSDataLoader, LoaderConfig
+from .pipeline import Batch, BatchPlan, GIDSDataLoader, LoaderConfig
+from .prefetch import PrefetchEngine, PrefetchStats
 from .software_cache import CacheStats, WindowBufferedCache, run_trace
 from .storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO, SSDSpec,
                           StorageTimeline, model_burst, required_accesses,
@@ -21,7 +22,8 @@ __all__ = [
     "BuildContext", "DataPlane", "DataPlaneSpec", "TierSpec",
     "register_tier_kind", "tier",
     "FeatureStore", "GatherReport", "TieredFeatureStore",
-    "Batch", "GIDSDataLoader", "LoaderConfig",
+    "Batch", "BatchPlan", "GIDSDataLoader", "LoaderConfig",
+    "PrefetchEngine", "PrefetchStats",
     "CacheStats", "WindowBufferedCache", "run_trace", "INTEL_OPTANE",
     "SAMSUNG_980PRO", "SSDSpec", "StorageTimeline", "model_burst",
     "required_accesses", "simulate_burst",

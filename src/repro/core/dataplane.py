@@ -2,9 +2,10 @@
 registry that replaces the old `mode="gids"|"bam"|"mmap"` strings.
 
 A spec is data, not code: an ordered tuple of `TierSpec`s (kind + params)
-plus the two orchestration policies the loader needs — how storage time is
-priced (`pricing`) and whether sampling runs ahead under the accumulator
-(`lookahead`).  `build()` resolves each TierSpec through the tier-kind
+plus the orchestration policies the loader needs — how storage time is
+priced (`pricing`), whether sampling runs ahead under the accumulator
+(`lookahead`), and how many batches the prefetch engine stages ahead of
+consumption (`prefetch`; see core/prefetch.py — the `gids-async` preset).  `build()` resolves each TierSpec through the tier-kind
 factory registry against a `BuildContext` (graph, features, and the sizing
 knobs LoaderConfig carries) and returns a `DataPlane` wrapping a
 `TieredFeatureStore`.
@@ -161,12 +162,18 @@ class DataPlaneSpec:
                "page_fault"  — serial fault handling (the mmap baseline)
     lookahead: sampling runs ahead of training under accumulator control;
                False degenerates to synchronous depth-1 sampling.
+    prefetch:  batches the `PrefetchEngine` (core/prefetch.py) stages ahead
+               of consumption; 0 = synchronous execute-on-demand.  A
+               prefetching plane prices *exposed* prep time — the portion of
+               the modelled prep that the previous batch's model compute
+               did not hide (`StorageTimeline.price_batch_overlapped`).
     """
 
     name: str
     tiers: tuple[TierSpec, ...]
     pricing: str = "overlapped"
     lookahead: bool = True
+    prefetch: int = 0
     description: str = ""
 
     def with_(self, **overrides) -> "DataPlaneSpec":
@@ -257,10 +264,23 @@ class DataPlane:
         wt = self.store.windowed_tier
         return max(1, wt.window_depth if wt is not None else 1)
 
+    @property
+    def prefetch_depth(self) -> int:
+        return self.spec.prefetch
+
     def price(self, timeline: StorageTimeline, report,
               outstanding: int) -> float:
         return timeline.price_batch(report, outstanding=outstanding,
                                     policy=self.spec.pricing)
+
+    def exposed_prep(self, timeline: StorageTimeline, prep_s: float,
+                     compute_s: float) -> float:
+        """Critical-path prep time the consumer actually waits for.  Only a
+        prefetching plane overlaps prep with the previous batch's compute; a
+        synchronous plane exposes the full modelled prep."""
+        if self.prefetch_depth > 0:
+            return timeline.price_batch_overlapped(prep_s, compute_s)
+        return prep_s
 
     def reset(self) -> None:
         self.store.reset()
@@ -288,6 +308,15 @@ DataPlaneSpec.register(DataPlaneSpec(
     pricing="page_fault", lookahead=False,
     description="DGL-mmap baseline: synchronous sampling, page-fault-priced "
                 "storage, no redirection tiers."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="gids-async",
+    tiers=(tier("window_cache"), tier("constant_buffer"), tier("storage")),
+    pricing="overlapped", lookahead=True, prefetch=2,
+    description="GIDS with the two-stage prefetch engine: batch k+1's "
+                "gather/staging executes while batch k trains, so only "
+                "prep time in excess of the compute time is exposed "
+                "(§3.2 decoupling, Fig. 13 overlap)."))
 
 DataPlaneSpec.register(DataPlaneSpec(
     name="pinned-host",

@@ -1,11 +1,29 @@
 """GIDSDataLoader — the end-to-end data-preparation pipeline (paper Fig. 1).
 
-Per training iteration the loader must deliver (sampled blocks, gathered
-features).  Orchestration:
+The loader is a genuine *two-stage pipeline*, split so prefetch can overlap
+data preparation with model compute (§3.2):
 
-  * sampling runs `merge_depth` iterations AHEAD of training (decoupled —
-    §3.2): a deque of pre-sampled batches doubles as the windowed tier's
-    look-ahead buffer and as the accumulator's outstanding-request pool;
+  stage 1, `plan_next()`  — sampling + admit-side staging: refill the
+    lookahead deque (sampling runs `merge_depth` iterations AHEAD under the
+    accumulator), push future node lists into the windowed tiers
+    (`admit()`), pop the next batch's blocks, and snapshot the sampler PRNG
+    for checkpoint resume.  Produces a `BatchPlan`.
+  stage 2, `execute(plan)` — data movement + pricing: fold the tier stack
+    over the plan's nodes into one `GatherPlan`, gather the actual feature
+    rows, feed accumulator telemetry, and price the batch from its tier
+    split.  Produces a `Batch`.
+
+`next_batch()` composes the stages.  On a synchronous plane the two run
+back-to-back inside the call; on a prefetching plane (`DataPlaneSpec` with
+`prefetch > 0`, e.g. the `gids-async` preset) a `PrefetchEngine`
+(core/prefetch.py) has already staged the next `prefetch` batches ahead of
+consumption, and `next_batch(compute_s=...)` re-prices the batch's
+*exposed* prep time against the model-compute seconds it overlapped
+(`Batch.exposed_prep_s = max(0, prep - compute)`); the raw `prep_time_s`
+and every other `Batch` field stay bit-identical to the sync plane.
+
+Other orchestration, common to both stages:
+
   * the accumulator recomputes the merge depth from live telemetry
     (requests/iter, redirection rate);
   * feature gathers flow through a *pluggable tier stack*
@@ -24,7 +42,7 @@ presets of the same machinery:
 
 or any registered/user-composed spec:
 
-  LoaderConfig(data_plane=DataPlaneSpec.preset("pinned-host"))
+  LoaderConfig(data_plane=DataPlaneSpec.preset("gids-async"))
 
 The old `mode="gids"` kwarg maps onto the preset of the same name through a
 deprecation shim.
@@ -44,6 +62,7 @@ from repro.sampling.ladies import ladies_sample_blocks
 from .accumulator import DynamicAccessAccumulator, AccumulatorConfig
 from .dataplane import DataPlane, DataPlaneSpec
 from .feature_store import GatherReport
+from .prefetch import PrefetchEngine
 from .storage_sim import SSDSpec, StorageTimeline, INTEL_OPTANE
 
 
@@ -98,12 +117,30 @@ del LoaderConfig.mode
 
 
 @dataclasses.dataclass
+class BatchPlan:
+    """Stage-1 output: what to gather, plus the resume point.  `snapshot` is
+    the sampler state *before* this batch was sampled, so a checkpoint taken
+    while the batch is staged-but-unconsumed replays it deterministically."""
+
+    blocks: SampledBlocks
+    merge_depth: int
+    snapshot: dict
+
+
+@dataclasses.dataclass
 class Batch:
     blocks: SampledBlocks
     features: np.ndarray          # rows for blocks.all_nodes
     report: GatherReport
     prep_time_s: float            # modelled data-preparation time
     merge_depth: int
+    # critical-path prep after prefetch overlap; None at construction
+    # resolves to prep_time_s (synchronous planes expose everything)
+    exposed_prep_s: float | None = None
+
+    def __post_init__(self) -> None:
+        if self.exposed_prep_s is None:
+            self.exposed_prep_s = self.prep_time_s
 
 
 class GIDSDataLoader:
@@ -127,6 +164,8 @@ class GIDSDataLoader:
         self._lookahead: deque[tuple[dict, SampledBlocks]] = deque()
         self._win_idx = 0   # lookahead entries already pushed to cache window
         self._requests_per_iter = 0
+        self.prefetch = (PrefetchEngine(self, self.plane.prefetch_depth)
+                         if self.plane.prefetch_depth > 0 else None)
 
     # -- sampling -------------------------------------------------------------
     def _sample_one(self) -> SampledBlocks:
@@ -174,26 +213,48 @@ class GIDSDataLoader:
                 self._lookahead[self._win_idx][1].all_nodes)
             self._win_idx += 1
 
-    # -- iteration -------------------------------------------------------------
-    def __iter__(self) -> Iterator[Batch]:
-        while True:
-            yield self.next_batch()
-
-    def next_batch(self) -> Batch:
+    # -- the two pipeline stages ----------------------------------------------
+    def plan_next(self) -> BatchPlan:
+        """Stage 1: sampling + admit-side staging.  Refills the lookahead
+        (sampling ahead, window admits), pops the next batch's blocks."""
         depth = self._refill_lookahead()
-        _, blocks = self._lookahead.popleft()
+        snap, blocks = self._lookahead.popleft()
         self._win_idx = max(0, self._win_idx - 1)
         self._requests_per_iter = blocks.num_requests
+        return BatchPlan(blocks=blocks, merge_depth=depth, snapshot=snap)
+
+    def execute(self, plan: BatchPlan) -> Batch:
+        """Stage 2: data movement + pricing.  Folds the tier stack over the
+        plan's nodes, gathers the rows, prices the tier split."""
+        blocks = plan.blocks
         rows, report = self.store.gather(blocks.all_nodes)
         self.accumulator.update(report.n_requests, report.redirected)
 
         outstanding = self.accumulator.outstanding(blocks.num_requests)
         t = self.plane.price(self.timeline, report, outstanding)
         return Batch(blocks=blocks, features=rows, report=report,
-                     prep_time_s=t, merge_depth=depth)
+                     prep_time_s=t, merge_depth=plan.merge_depth)
+
+    # -- iteration -------------------------------------------------------------
+    def __iter__(self) -> Iterator[Batch]:
+        while True:
+            yield self.next_batch()
+
+    def next_batch(self, compute_s: float = 0.0) -> Batch:
+        """Deliver the next batch.  `compute_s` is the model-compute time of
+        the iteration this batch's preparation overlapped with; a prefetching
+        plane discounts the exposed prep time by it (a synchronous plane
+        exposes the full prep and ignores it)."""
+        if self.prefetch is not None:
+            return self.prefetch.next(compute_s)
+        return self.execute(self.plan_next())
 
     # -- state for checkpoint/restart (fault tolerance) -----------------------
     def state_dict(self) -> dict:
+        if self.prefetch is not None:
+            snap = self.prefetch.oldest_snapshot()
+            if snap is not None:
+                return dict(snap)
         if self._lookahead:
             return dict(self._lookahead[0][0])
         return {"rng": self.rng.bit_generator.state,
@@ -206,5 +267,8 @@ class GIDSDataLoader:
         self._win_idx = 0
         # resume must be bit-identical to a freshly-built loader fed the same
         # state: drop tier contents AND the accumulator's merge-depth EMA
+        # (and any batches the prefetch engine staged past the resume point)
+        if self.prefetch is not None:
+            self.prefetch.reset()
         self.plane.reset()
         self.accumulator.reset_telemetry()

@@ -1,0 +1,103 @@
+"""Overlapped prefetch execution engine (paper §3.2, Fig. 13).
+
+The paper's core speedup comes from decoupling data preparation from model
+compute: sampling and gather/staging for batch *k+1* run while batch *k*
+trains, so storage latency stops adding serially to the iteration time.
+`PrefetchEngine` is that decoupling for the two-stage loader: it drives the
+loader's `plan_next()` (sampling + tier `admit()` staging through the
+lookahead window) and `execute()` (tier fold, gather, pricing) for up to
+`depth` future batches ahead of the consumer, then discounts each consumed
+batch's prep time by the model-compute time the caller reports
+(`StorageTimeline.price_batch_overlapped` — only the excess is exposed).
+
+Determinism contract: the engine performs *exactly* the same plan/execute
+calls in *exactly* the same order as a synchronous loader — earlier in wall
+time, never reordered — so the `Batch` sequence (blocks, rows, reports,
+raw prep times) is bit-identical to the sync plane's; only `exposed_prep_s`
+differs.  `tests/test_prefetch.py` pins this, including across
+`state_dict`/`load_state_dict` resume.
+
+PyTorch-Direct (arXiv:2101.07956) applies the same overlap to pinned-host
+access; here it is a property of the *plane* — any `DataPlaneSpec` with
+`prefetch > 0` (e.g. the `gids-async` preset) runs through this engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:                       # pipeline imports this module
+    from .pipeline import Batch, BatchPlan, GIDSDataLoader
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    """Engine telemetry: how much modelled prep time the overlap hid."""
+
+    staged_batches: int = 0
+    consumed_batches: int = 0
+    prep_s_total: float = 0.0
+    exposed_s_total: float = 0.0
+
+    @property
+    def hidden_s_total(self) -> float:
+        return self.prep_s_total - self.exposed_s_total
+
+    @property
+    def hidden_fraction(self) -> float:
+        if self.prep_s_total <= 0:
+            return 0.0
+        return self.hidden_s_total / self.prep_s_total
+
+
+class PrefetchEngine:
+    """Stage up to `depth` executed batches ahead of consumption.
+
+    `next(compute_s)` returns the oldest staged batch with its
+    `exposed_prep_s` re-priced against the `compute_s` seconds of model
+    compute the caller overlapped it with, then tops the stage queue back
+    up.  `depth` bounds staging memory (each staged batch holds its gathered
+    feature rows) the same way the accumulator's `max_merge_iters` bounds
+    sample-ahead memory.
+    """
+
+    def __init__(self, loader: "GIDSDataLoader", depth: int):
+        self.loader = loader
+        self.depth = max(1, int(depth))
+        self._ready: deque[tuple[dict, "Batch"]] = deque()
+        self.stats = PrefetchStats()
+
+    def __len__(self) -> int:
+        return len(self._ready)
+
+    def _stage(self) -> None:
+        while len(self._ready) < self.depth:
+            plan: "BatchPlan" = self.loader.plan_next()
+            batch = self.loader.execute(plan)
+            self._ready.append((plan.snapshot, batch))
+            self.stats.staged_batches += 1
+
+    def next(self, compute_s: float = 0.0) -> "Batch":
+        self._stage()
+        _, batch = self._ready.popleft()
+        exposed = self.loader.plane.exposed_prep(
+            self.loader.timeline, batch.prep_time_s, compute_s)
+        batch = dataclasses.replace(batch, exposed_prep_s=exposed)
+        self.stats.consumed_batches += 1
+        self.stats.prep_s_total += batch.prep_time_s
+        self.stats.exposed_s_total += exposed
+        return batch
+
+    # -- checkpoint/resume -----------------------------------------------------
+    def oldest_snapshot(self) -> dict | None:
+        """Sampler snapshot of the oldest staged-but-unconsumed batch — the
+        loader resumes from the logical consumption point, so staged work is
+        deterministically re-done after a restore."""
+        if self._ready:
+            return self._ready[0][0]
+        return None
+
+    def reset(self) -> None:
+        self._ready.clear()
+        self.stats = PrefetchStats()

@@ -102,6 +102,14 @@ def simulate_burst(spec: SSDSpec, n_requests: int, n_ssd: int = 1,
     return BurstResult(n_requests, worst, achieved, achieved / spec.peak_iops)
 
 
+def overlap_exposed(prep_s: float, compute_s: float) -> float:
+    """max(0, prep - compute): the prep time left on the critical path after
+    `compute_s` seconds of concurrent model compute hid the rest.  Pure —
+    `StorageTimeline.price_batch_overlapped` and the serve engine's
+    admission pricing share it."""
+    return max(0.0, prep_s - max(compute_s, 0.0))
+
+
 class StorageTimeline:
     """Accumulates modelled time for a training run (Fig. 13/14 E2E bench).
 
@@ -132,6 +140,17 @@ class StorageTimeline:
                 n_hbm=report.n_hbm_hits, feat_bytes=bpr,
                 outstanding=outstanding)
         raise ValueError(f"unknown pricing policy {policy!r}")
+
+    def price_batch_overlapped(self, prep_s: float, compute_s: float) -> float:
+        """Exposed (critical-path) prep time when data preparation for batch
+        k+1 runs concurrently with batch k's model compute (paper §3.2: the
+        decoupled stages hide storage latency behind training).  `compute_s`
+        seconds of the prep are hidden; only the excess is exposed:
+
+            exposed = max(0, prep_s - compute_s)
+
+        A synchronous plane passes compute_s=0 and exposes everything."""
+        return overlap_exposed(prep_s, compute_s)
 
     def gids_batch_time(self, n_storage: int, n_host: int, n_hbm: int,
                         feat_bytes: int, outstanding: int) -> float:

@@ -21,11 +21,16 @@ _ON_TPU = jax.default_backend() == "tpu"
 _INTERPRET = not _ON_TPU
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
-def tiered_gather(slots, cache, staged, use_pallas: bool = True):
+@functools.partial(jax.jit,
+                   static_argnames=("use_pallas", "block_b", "block_d"))
+def tiered_gather(slots, cache, staged, use_pallas: bool = True,
+                  block_b: int | None = None, block_d: int = 512):
+    # block_b=None defers to the kernel's backend-aware default (row-blocked
+    # when interpret-validated, single-row on compiled TPU)
     if not use_pallas:
         return ref.tiered_gather_ref(slots, cache, staged)
-    return _tgather(slots, cache, staged, interpret=_INTERPRET)
+    return _tgather(slots, cache, staged, block_b=block_b, block_d=block_d,
+                    interpret=_INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

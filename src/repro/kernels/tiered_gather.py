@@ -5,9 +5,16 @@ vector from the BaM software cache or (on miss) from an NVMe request buffer.
 TPU adaptation: there are no per-thread random accesses; instead the gather
 over the HBM-resident cache + host-staged miss buffer is expressed as a
 scalar-prefetch gather — request slot ids are known before the block runs, so
-the BlockSpec `index_map` *itself* selects which cache row to DMA into VMEM.
-The paper's thread-per-request access pattern becomes TPU-native
-double-buffered row DMA (HBM->VMEM) with the slot table prefetched to SMEM.
+the kernel can issue the cache-row DMAs itself.  The paper's
+thread-per-request access pattern becomes TPU-native double-buffered row DMA
+(HBM->VMEM) with the slot table prefetched to SMEM.
+
+The request dimension is *blocked* (FastGL-style): each grid step serves
+`block_b` request rows, so the pipelined staged/out DMAs move `(block_b, bd)`
+tiles instead of `(1, bd)` slivers and the per-row cache DMAs overlap each
+other inside the step.  `block_b=1` degenerates to the original
+one-row-per-step layout (same grid, same DMA shapes) and all block sizes are
+bit-identical — blocking changes the transfer schedule, never the bytes.
 
 Inputs
   slots:   (B,)  int32; >= 0 -> row in `cache`; -1 -> row i of `staged`
@@ -16,10 +23,15 @@ Inputs
 Output
   out:     (B, D)
 
-Grid: (B, D // bd) — one request row per grid step, feature dim blocked so a
-row block always fits VMEM (bd aligned to the 128-lane VPU width).  Both
-candidate rows are DMA'd and selected in-register: the select is free next to
-the DMA and keeps the pipeline branch-free.
+Grid: (B // block_b, D // bd) after padding — `block_b` request rows per grid
+step, feature dim blocked so a tile always fits VMEM (bd aligned to the
+128-lane VPU width).  The staged tile streams through the automatic pipeline;
+cache rows are gathered by explicit per-row async copies (slot indices come
+from the prefetched slot table) into a VMEM scratch tile, then a per-row
+select merges the two — branch-free next to the DMAs.  Ragged extents clamp
+instead of asserting: `D % block_d != 0` shrinks the feature block to a
+divisor of D (padding D would copy the whole cache), and a ragged request
+dim is padded with -1 slots and sliced back.
 """
 from __future__ import annotations
 
@@ -31,20 +43,48 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(slots_pf, cache_blk, staged_blk, out_ref):
+def _row_dma(cache_hbm, scratch, sems, slot, r, j, bd):
+    """The (1, bd) cache-row copy for block row `r` — built identically at
+    start and wait time (the descriptor is recreated, the semaphore pairs
+    the two halves)."""
+    return pltpu.make_async_copy(
+        cache_hbm.at[pl.ds(slot, 1), pl.ds(j * bd, bd)],
+        scratch.at[pl.ds(r, 1), :],
+        sems.at[r],
+    )
+
+
+def _kernel(slots_pf, cache_hbm, staged_blk, out_ref, scratch, sems, *,
+            block_b: int, bd: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    base = i * block_b
+    # launch every row DMA before waiting on any: the copies overlap each
+    # other and the staged tile's pipeline DMA.  -1 slots clamp to row 0 —
+    # a valid, discarded read keeps the schedule branch-free.
+    for r in range(block_b):
+        slot = jnp.maximum(slots_pf[base + r], 0)
+        _row_dma(cache_hbm, scratch, sems, slot, r, j, bd).start()
+    for r in range(block_b):
+        slot = jnp.maximum(slots_pf[base + r], 0)
+        _row_dma(cache_hbm, scratch, sems, slot, r, j, bd).wait()
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_b, 1), 0) + base
+    use_cache = slots_pf[rows] >= 0
+    out_ref[...] = jnp.where(use_cache, scratch[...], staged_blk[...])
+
+
+def _single_row_kernel(slots_pf, cache_blk, staged_blk, out_ref):
     i = pl.program_id(0)
     use_cache = slots_pf[i] >= 0
     out_ref[...] = jnp.where(use_cache, cache_blk[...], staged_blk[...])
 
 
-def tiered_gather(slots: jax.Array, cache: jax.Array, staged: jax.Array,
-                  *, block_d: int = 512, interpret: bool = False
-                  ) -> jax.Array:
+def _single_row_call(slots, cache, staged, bd, interpret):
+    """The original one-request-per-step layout (`block_b=1`): the BlockSpec
+    `index_map` itself selects which cache row to DMA, so the automatic
+    pipeline double-buffers the (1, bd) row copies."""
     B, = slots.shape
     _, D = cache.shape
-    assert staged.shape == (B, D), (staged.shape, B, D)
-    bd = min(block_d, D)
-    assert D % bd == 0, (D, bd)
 
     def cache_index(i, j, slots_pf):
         return (jnp.maximum(slots_pf[i], 0), j)  # clamp: -1 rows unused
@@ -62,14 +102,91 @@ def tiered_gather(slots: jax.Array, cache: jax.Array, staged: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, bd), staged_index),
     )
-    fn = pl.pallas_call(
-        _kernel,
+    return pl.pallas_call(
+        _single_row_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, D), staged.dtype),
         interpret=interpret,
         name="tiered_gather",
+    )(slots, cache, staged)
+
+
+def _blocked_call(slots, cache, staged, bb, bd, interpret):
+    """Row-blocked layout (`block_b>1`): staged/out stream as (bb, bd) tiles,
+    cache rows are gathered by explicit in-kernel DMAs from HBM."""
+    B, = slots.shape
+    _, D = cache.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B // bb, D // bd),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),     # cache stays in HBM
+            pl.BlockSpec((bb, bd), lambda i, j, s: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bd), lambda i, j, s: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bb, bd), staged.dtype),
+                        pltpu.SemaphoreType.DMA((bb,))],
     )
-    return fn(slots, cache, staged)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_b=bb, bd=bd),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), staged.dtype),
+        interpret=interpret,
+        name="tiered_gather",
+    )(slots, cache, staged)
+
+
+def _pad_to(x: jax.Array, axis: int, size: int, value=0) -> jax.Array:
+    short = size - x.shape[axis]
+    if short == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, short)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def tiered_gather(slots: jax.Array, cache: jax.Array, staged: jax.Array,
+                  *, block_b: int | None = None, block_d: int = 512,
+                  interpret: bool = False) -> jax.Array:
+    if block_b is None:
+        # the blocked layout's Mosaic lowering (in-kernel DMA from an
+        # ANY-space ref) hasn't run on a device yet: compiled TPU calls
+        # default to the proven single-row layout until it has (ROADMAP:
+        # TPU validation); pass block_b explicitly to opt in
+        compiled_tpu = not interpret and jax.default_backend() == "tpu"
+        block_b = 1 if compiled_tpu else 8
+    B, = slots.shape
+    L, D = cache.shape
+    assert staged.shape == (B, D), (staged.shape, B, D)
+    bd = min(block_d, D)
+    bb = min(block_b, B)
+
+    # ragged feature dim: shrink the block to a divisor of D when a usable
+    # one exists — padding D would copy the whole (L, D) cache, the largest
+    # array in the data plane, on every call.  Only a pathological D (no
+    # divisor >= 128 below block_d) falls back to the padded copy.
+    if D % bd != 0:
+        div = next(d for d in range(bd, 0, -1) if D % d == 0)
+        if div >= min(128, D):
+            bd = div
+
+    # remaining ragged edges: pad the request dim with -1 slots (staged
+    # zeros pass through the select) and, on the fallback only, the feature
+    # dim with zero columns; the result is sliced back — clamping to the
+    # real extents instead of asserting divisibility.
+    Bp = -(-B // bb) * bb
+    Dp = -(-D // bd) * bd
+    slots_p = _pad_to(jnp.asarray(slots, jnp.int32), 0, Bp, value=-1)
+    staged_p = _pad_to(_pad_to(staged, 1, Dp), 0, Bp)
+    cache_p = _pad_to(cache, 1, Dp)
+
+    if bb == 1:
+        out = _single_row_call(slots_p, cache_p, staged_p, bd, interpret)
+    else:
+        out = _blocked_call(slots_p, cache_p, staged_p, bb, bd, interpret)
+    if (Bp, Dp) != (B, D):
+        out = out[:B, :D]
+    return out
 
 
 tiered_gather_cpu = functools.partial(tiered_gather, interpret=True)

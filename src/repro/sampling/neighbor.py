@@ -47,12 +47,13 @@ def host_sample_blocks(graph: CSRGraph, seeds: np.ndarray,
     frontier = seeds.astype(np.int64)
     hop_nodes = []
     for f in fanouts:
-        deg = graph.indptr[frontier + 1] - graph.indptr[frontier]
+        start = graph.indptr[frontier]
+        deg = graph.indptr[frontier + 1] - start
         # uniform with replacement (matches DGL replace=True fast path);
         # degree-0 nodes self-loop.
         r = rng.random((frontier.shape[0], f))
         offs = np.floor(r * np.maximum(deg, 1)[:, None]).astype(np.int64)
-        base = graph.indptr[frontier][:, None]
+        base = start[:, None]
         nbr = graph.indices[np.minimum(base + offs,
                                        graph.num_edges - 1)].astype(np.int64)
         nbr = np.where(deg[:, None] > 0, nbr, frontier[:, None])

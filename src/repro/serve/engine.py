@@ -8,7 +8,12 @@ GIDS principles carry over to serving:
   * per-slot KV cache blocks are the software-cache lines: the slot pool is
     literally a data-plane tier (`KVSlotTier`, built through the "serve-kv"
     `DataPlaneSpec` preset) — a request "hits" while it holds a slot, a
-    finished request's slot is "safe to evict" and recycled.
+    finished request's slot is "safe to evict" and recycled;
+  * admission staging gets the training loop's overlap pricing: per tick,
+    the modelled prefill/staging cost of admitted requests is discounted by
+    the decode compute it ran behind
+    (`StorageTimeline.price_batch_overlapped`), and `overlap_stats` reports
+    how much of the admission prep the decode loop hid.
 
 Single-host reference implementation (the pjit'd steps are the same ones
 the 512-chip dry-run compiles; here they run on the local device).
@@ -24,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dataplane import DataPlaneSpec
+from repro.core.prefetch import PrefetchStats
+from repro.core.storage_sim import overlap_exposed
 from repro.core.tiers import KVSlotTier
 from repro.models.transformer import LM
 
@@ -43,6 +50,9 @@ class EngineConfig:
     slots: int = 4                  # concurrent sequences (batch dim)
     max_seq: int = 256
     eos_token: int = -1             # -1: never stops early
+    # modelled timing for the overlap accounting (0 = don't model)
+    admit_cost_s: float = 0.0       # prefill/staging cost per admission
+    decode_cost_s: float = 0.0      # compute cost of one decode tick
 
 
 class ServeEngine:
@@ -68,6 +78,7 @@ class ServeEngine:
         self.queue: deque[Request] = deque()
         self._admit_seq = 0      # slot-pool key: admission order, not the
                                  # caller-supplied rid (rids may collide)
+        self.overlap_stats = PrefetchStats()  # admission prep vs decode hide
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._next_tok = np.zeros((cfg.slots, 1), np.int32)
 
@@ -127,8 +138,26 @@ class ServeEngine:
     # -- main loop ---------------------------------------------------------------
     def step(self) -> list[Request]:
         """One engine tick: admit waiting requests, one decode step for all
-        active slots, retire finished requests.  Returns retired."""
+        active slots, retire finished requests.  Returns retired.
+
+        Overlap accounting: the modelled staging cost of this tick's
+        admissions overlaps the decode compute of requests already in flight
+        *before* the tick — a cold-start admission has no decode to hide
+        behind and is fully exposed — so only the excess is hidden, exactly
+        like the training loader's prefetch pricing."""
+        was_decoding = any(r is not None for r in self.active)
+        admitted_before = self._admit_seq
         retired = self._admit()
+        n_admitted = self._admit_seq - admitted_before
+        prep_s = n_admitted * self.cfg.admit_cost_s
+        compute_s = self.cfg.decode_cost_s if was_decoding else 0.0
+        # staged_batches counts admissions; consumed_batches is left at 0 —
+        # serve has no per-batch consumer, only the prep/exposed totals and
+        # hidden_fraction carry meaning here
+        self.overlap_stats.staged_batches += n_admitted
+        self.overlap_stats.prep_s_total += prep_s
+        self.overlap_stats.exposed_s_total += \
+            overlap_exposed(prep_s, compute_s)
         if not any(r is not None for r in self.active):
             return retired
         tok, self.cache = self._decode(

@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 import repro.configs as configs
 from repro.models.transformer import LM
@@ -71,3 +72,47 @@ def test_engine_slot_recycling():
                           max_new_tokens=1))
     (one,) = engine.run_until_drained()
     assert one.done and len(one.generated) == 1
+
+
+def test_engine_overlap_pricing():
+    """Admission staging is priced like the training loader's prefetch:
+    decodes already in flight when the tick starts hide it, only the excess
+    is exposed — and a cold-start admission has nothing to hide behind."""
+    cfg = configs.get("mamba2_1_3b", reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(2)
+
+    def mk_req(i, n=4):
+        return Request(rid=i,
+                       prompt=rng.integers(0, cfg.vocab_size, 4)
+                       .astype(np.int32),
+                       max_new_tokens=n)
+
+    engine = ServeEngine(model, params, EngineConfig(
+        slots=2, max_seq=48, admit_cost_s=1e-3, decode_cost_s=4e-4))
+    st = engine.overlap_stats
+    engine.submit(mk_req(0))
+    engine.step()                 # cold start: no in-flight decode to hide
+    assert st.prep_s_total == pytest.approx(1e-3)
+    assert st.exposed_s_total == pytest.approx(1e-3)
+
+    engine.submit(mk_req(1))
+    engine.step()                 # admitted behind r0's in-flight decode
+    assert st.prep_s_total == pytest.approx(2e-3)
+    assert st.exposed_s_total == pytest.approx(1e-3 + (1e-3 - 4e-4))
+
+    done = engine.run_until_drained()
+    assert len(done) == 2 and st.staged_batches == 2
+    assert 0.0 < st.hidden_fraction < 1.0
+
+    # decode dominating the staging cost: the warm admission is free
+    engine2 = ServeEngine(model, params, EngineConfig(
+        slots=2, max_seq=48, admit_cost_s=1e-4, decode_cost_s=5e-4))
+    engine2.submit(mk_req(0))
+    engine2.step()
+    engine2.submit(mk_req(1))
+    engine2.step()
+    st2 = engine2.overlap_stats
+    assert st2.prep_s_total == pytest.approx(2e-4)
+    assert st2.exposed_s_total == pytest.approx(1e-4)  # cold tick only
