@@ -1,7 +1,10 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows; `python -m benchmarks.run [--quick]`.  `--json [path]` is the CI
-# smoke mode: fig13 + fig14 headline numbers as JSON (default BENCH_pr2.json)
-# so the perf trajectory is recorded per PR.
+# smoke mode: fig13 + fig14 headline numbers as JSON (default BENCH_pr3.json)
+# so the perf trajectory is recorded per PR.  `--baseline PATH` compares the
+# fresh numbers against a committed earlier BENCH_*.json and exits non-zero
+# if the `gids` preset's e2e regressed (the model is deterministic, so the
+# tolerance only absorbs float/env noise).
 from __future__ import annotations
 
 import argparse
@@ -10,8 +13,28 @@ import sys
 import time
 import traceback
 
+BASELINE_TOLERANCE = 1.05       # gids e2e may not exceed baseline by >5%
 
-def write_json_smoke(path: str) -> None:
+
+def check_baseline(payload: dict, baseline_path: str) -> None:
+    """Gate on both gids e2e AND gids exposed prep: e2e is dominated by the
+    fixed modelled train step, so the prep gate is the sensitive one (a 5%
+    e2e tolerance alone would let the data plane regress severalfold)."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    for key, unit in (("gids_e2e_s", "s"), ("gids_exposed_prep_us", "us")):
+        fresh = payload["fig13_e2e"][key]
+        ref = baseline["fig13_e2e"][key]
+        if fresh > ref * BASELINE_TOLERANCE:
+            raise SystemExit(
+                f"PERF REGRESSION: {key} {fresh:.6f}{unit} vs baseline "
+                f"{ref:.6f}{unit} ({baseline_path}) exceeds the "
+                f"{BASELINE_TOLERANCE:.2f}x tolerance")
+        print(f"# baseline check OK: {key} {fresh:.6f}{unit} vs "
+              f"{ref:.6f}{unit} ({baseline_path})", flush=True)
+
+
+def write_json_smoke(path: str, baseline: str | None = None) -> None:
     from benchmarks import fig13_e2e, fig14_overlap
     payload = {
         "fig13_e2e": fig13_e2e.headline(),
@@ -22,6 +45,13 @@ def write_json_smoke(path: str) -> None:
         f.write("\n")
     print(f"# wrote {path}", flush=True)
     print(json.dumps(payload, indent=2))
+    merged = payload["fig13_e2e"]
+    if merged["e2e_speedup_gids_merged_vs_gids"] < 1.0:
+        raise SystemExit(
+            "MERGED REGRESSION: the gids-merged preset must beat gids e2e "
+            f"(got {merged['e2e_speedup_gids_merged_vs_gids']:.4f}x)")
+    if baseline:
+        check_baseline(payload, baseline)
 
 
 def main() -> None:
@@ -29,14 +59,17 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow E2E figures")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", nargs="?", const="BENCH_pr2.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr3.json",
                     default=None, metavar="PATH",
                     help="smoke mode: write fig13/fig14 headline numbers to "
-                         "PATH (default BENCH_pr2.json) and exit")
+                         "PATH (default BENCH_pr3.json) and exit")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="with --json: fail if the gids preset's e2e "
+                         "regressed vs this earlier BENCH_*.json")
     args = ap.parse_args()
 
     if args.json:
-        write_json_smoke(args.json)
+        write_json_smoke(args.json, baseline=args.baseline)
         return
 
     from benchmarks import (fig3_request_rates, fig7_sampling,

@@ -3,30 +3,33 @@
 # host buffer (§3.3), and window-buffered device software cache (§3.4),
 # composed as a pluggable tier stack (tiers.py) declared by a
 # DataPlaneSpec (dataplane.py).
-from .accumulator import AccumulatorConfig, DynamicAccessAccumulator
+from .accumulator import (AccumulatorConfig, DynamicAccessAccumulator,
+                          MergedWindow, merge_window)
 from .constant_buffer import ConstantBuffer
 from .dataplane import (BuildContext, DataPlane, DataPlaneSpec, TierSpec,
                         register_tier_kind, tier)
-from .feature_store import FeatureStore, GatherReport, TieredFeatureStore
+from .feature_store import (CoalescedReport, FeatureStore, GatherReport,
+                            TieredFeatureStore)
 from .pipeline import Batch, BatchPlan, GIDSDataLoader, LoaderConfig
 from .prefetch import PrefetchEngine, PrefetchStats
 from .software_cache import CacheStats, WindowBufferedCache, run_trace
 from .storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO, SSDSpec,
-                          StorageTimeline, model_burst, required_accesses,
-                          simulate_burst)
+                          StorageTimeline, coalesce_lines, model_burst,
+                          required_accesses, simulate_burst)
 from .tiers import (ConstantBufferTier, DeviceCacheTier, GatherPlan,
                     KVSlotTier, StorageTier, Tier, build_plan)
 
 __all__ = [
-    "AccumulatorConfig", "DynamicAccessAccumulator", "ConstantBuffer",
+    "AccumulatorConfig", "DynamicAccessAccumulator", "MergedWindow",
+    "merge_window", "ConstantBuffer",
     "BuildContext", "DataPlane", "DataPlaneSpec", "TierSpec",
     "register_tier_kind", "tier",
-    "FeatureStore", "GatherReport", "TieredFeatureStore",
+    "CoalescedReport", "FeatureStore", "GatherReport", "TieredFeatureStore",
     "Batch", "BatchPlan", "GIDSDataLoader", "LoaderConfig",
     "PrefetchEngine", "PrefetchStats",
     "CacheStats", "WindowBufferedCache", "run_trace", "INTEL_OPTANE",
-    "SAMSUNG_980PRO", "SSDSpec", "StorageTimeline", "model_burst",
-    "required_accesses", "simulate_burst",
+    "SAMSUNG_980PRO", "SSDSpec", "StorageTimeline", "coalesce_lines",
+    "model_burst", "required_accesses", "simulate_burst",
     "ConstantBufferTier", "DeviceCacheTier", "GatherPlan", "KVSlotTier",
     "StorageTier", "Tier", "build_plan",
 ]

@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from .storage_sim import SSDSpec, required_accesses
 
 
@@ -29,6 +31,74 @@ class AccumulatorConfig:
     max_merge_iters: int = 16       # buffer-memory guard (paper: "excessive
                                     # buffer memory usage" bound)
     ema: float = 0.9                # smoothing for the redirection estimate
+
+
+@dataclasses.dataclass
+class MergedWindow:
+    """The §3.2 merge made concrete: the union of `n_batches` consecutive
+    mini-batch request lists, deduplicated so each unique row is fetched
+    from storage exactly once.
+
+    unique_nodes: (U,) sorted unique node ids across the window
+    inverse:      (sum_i B_i,) index into `unique_nodes`; batch i's slice
+                  reconstructs its request list in original order
+                  (`unique_nodes[inverse[offsets[i]:offsets[i+1]]]`) and is
+                  the scatter index that expands unique feature rows back to
+                  per-batch feature arrays
+    offsets:      (n_batches + 1,) slice boundaries into `inverse`
+    """
+
+    unique_nodes: np.ndarray
+    inverse: np.ndarray
+    offsets: np.ndarray
+
+    @property
+    def n_batches(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def n_requests(self) -> int:
+        return int(self.offsets[-1])
+
+    @property
+    def n_unique(self) -> int:
+        return len(self.unique_nodes)
+
+    @property
+    def n_duplicate(self) -> int:
+        """Rows the per-batch path would have fetched again."""
+        return self.n_requests - self.n_unique
+
+    @property
+    def dedup_factor(self) -> float:
+        return self.n_requests / max(self.n_unique, 1)
+
+    def batch_inverse(self, i: int) -> np.ndarray:
+        return self.inverse[self.offsets[i]:self.offsets[i + 1]]
+
+    def batch_multiplicity(self) -> np.ndarray:
+        """Per-unique-node count of merged batches requesting it (each
+        batch's request list is already deduplicated, so occurrences in the
+        inverse == batches).  Windowed tiers consume this many reuse
+        reservations in one merged access."""
+        return np.bincount(self.inverse, minlength=self.n_unique)
+
+
+def merge_window(node_lists) -> MergedWindow:
+    """Merge consecutive batches' request lists into one deduplicated burst:
+    `np.unique(..., return_inverse=True)` over the concatenation gives the
+    unique set (gathered once) and the inverse index (scatters rows back to
+    each batch).  This is the accumulator's merge *executed*, not just its
+    depth computed."""
+    lists = [np.asarray(x) for x in node_lists]
+    if not lists:
+        raise ValueError("merge_window needs at least one batch")
+    offsets = np.zeros(len(lists) + 1, np.int64)
+    np.cumsum([len(x) for x in lists], out=offsets[1:])
+    unique, inverse = np.unique(np.concatenate(lists), return_inverse=True)
+    return MergedWindow(unique_nodes=unique,
+                        inverse=inverse.astype(np.int64),
+                        offsets=offsets)
 
 
 class DynamicAccessAccumulator:
@@ -80,3 +150,10 @@ class DynamicAccessAccumulator:
     def outstanding(self, requests_per_iter: int) -> int:
         d = self.merge_depth(requests_per_iter)
         return int(d * requests_per_iter * self.storage_fraction())
+
+    # -- merge execution ------------------------------------------------------
+    def merge(self, node_lists) -> MergedWindow:
+        """Execute the merge the depth policy only *sizes*: union the staged
+        batches' request lists into one deduplicated window whose unique set
+        is gathered once and issued as a single storage burst."""
+        return merge_window(node_lists)

@@ -167,6 +167,17 @@ class DataPlaneSpec:
                prefetching plane prices *exposed* prep time — the portion of
                the modelled prep that the previous batch's model compute
                did not hide (`StorageTimeline.price_batch_overlapped`).
+    merge_execute: execute whole merged windows instead of single batches
+               (`GIDSDataLoader.execute_window`): the accumulator's staged
+               lookahead is deduplicated across batches (`MergedWindow`),
+               the tier stack folds once over the unique set, storage-bound
+               rows sharing a 4 KB line coalesce into single IOs, and the
+               window is priced as one burst
+               (`StorageTimeline.price_merged_burst`, amortized per batch).
+               Per-batch features stay bit-identical to the per-batch path;
+               only modelled time and tier telemetry change.  Requires
+               "overlapped" pricing (a page-fault plane has no burst to
+               merge).
     """
 
     name: str
@@ -174,7 +185,15 @@ class DataPlaneSpec:
     pricing: str = "overlapped"
     lookahead: bool = True
     prefetch: int = 0
+    merge_execute: bool = False
     description: str = ""
+
+    def __post_init__(self) -> None:
+        if self.merge_execute and self.pricing != "overlapped":
+            raise ValueError(
+                f"spec {self.name!r}: merge_execute requires 'overlapped' "
+                f"pricing (got {self.pricing!r}) — a serially-faulting "
+                "plane has no merged burst to price")
 
     def with_(self, **overrides) -> "DataPlaneSpec":
         return dataclasses.replace(self, **overrides)
@@ -268,6 +287,10 @@ class DataPlane:
     def prefetch_depth(self) -> int:
         return self.spec.prefetch
 
+    @property
+    def merge_execute(self) -> bool:
+        return self.spec.merge_execute
+
     def price(self, timeline: StorageTimeline, report,
               outstanding: int) -> float:
         return timeline.price_batch(report, outstanding=outstanding,
@@ -317,6 +340,25 @@ DataPlaneSpec.register(DataPlaneSpec(
                 "gather/staging executes while batch k trains, so only "
                 "prep time in excess of the compute time is exposed "
                 "(§3.2 decoupling, Fig. 13 overlap)."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="gids-merged",
+    tiers=(tier("window_cache"), tier("constant_buffer"), tier("storage")),
+    pricing="overlapped", lookahead=True, merge_execute=True,
+    description="GIDS with the accumulator's merge EXECUTED, not just "
+                "sized: the staged lookahead window is deduplicated across "
+                "batches, each unique row gathered once, 4 KB-line-sharing "
+                "storage rows coalesced into single IOs, and the window "
+                "priced as one burst amortized per batch (§3.2)."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="gids-merged-async",
+    tiers=(tier("window_cache"), tier("constant_buffer"), tier("storage")),
+    pricing="overlapped", lookahead=True, prefetch=2, merge_execute=True,
+    description="Merged-window execution combined with the prefetch "
+                "engine: whole deduplicated windows are staged ahead of "
+                "consumption and each batch's amortized burst share is "
+                "discounted by the compute it overlapped."))
 
 DataPlaneSpec.register(DataPlaneSpec(
     name="pinned-host",

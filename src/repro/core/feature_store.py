@@ -32,8 +32,9 @@ import numpy as np
 
 from .constant_buffer import ConstantBuffer
 from .software_cache import WindowBufferedCache
+from .storage_sim import IO_BYTES, coalesce_lines
 from .tiers import (ConstantBufferTier, DeviceCacheTier, GatherPlan,
-                    StorageTier, Tier, build_plan)
+                    StorageTier, Tier, build_plan, build_plan_merged)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +87,44 @@ class GatherReport:
             tier_classes=tuple(t.latency_class for t in plan.tiers),
             tier_counts=tuple(int(c) for c in plan.counts()),
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class CoalescedReport(GatherReport):
+    """`GatherReport` for a gather executed inside a merged window.
+
+    The base fields keep their per-scope meaning (`n_requests` /
+    `tier_counts` cover whatever request set this report describes — one
+    batch's requests for the per-batch reports the loader attaches to each
+    `Batch`, the unique set for the window-level report that prices the
+    burst).  The extra fields carry the window-wide merge telemetry, shared
+    by every report of the same window:
+
+    window_batches:   batches merged into this window
+    window_requests:  total requests across the window (duplicates included)
+    n_unique:         unique rows in the window (gathered exactly once)
+    n_duplicate:      window_requests - n_unique — storage fetches the
+                      per-batch path would have re-issued
+    n_storage_unique: unique rows the fold assigned to the storage tier
+    n_storage_lines:  4 KB IOs after coalescing storage rows that share a
+                      line (< n_storage_unique when rows are narrower than
+                      one line and neighbours were both requested)
+    """
+
+    window_batches: int = 1
+    window_requests: int = 0
+    n_unique: int = 0
+    n_duplicate: int = 0
+    n_storage_unique: int = 0
+    n_storage_lines: int = 0
+
+    @property
+    def dedup_factor(self) -> float:
+        return self.window_requests / max(self.n_unique, 1)
+
+    @property
+    def coalesce_factor(self) -> float:
+        return self.n_storage_unique / max(self.n_storage_lines, 1)
 
 
 class TieredFeatureStore:
@@ -170,10 +209,86 @@ class TieredFeatureStore:
         self.last_plan = plan
         return rows, report
 
+    def gather_merged(self, merged, io_bytes: int = IO_BYTES):
+        """Dedup-aware fold: gather a whole merged window through ONE tier
+        fold over its unique request set.
+
+        `merged` is an `accumulator.MergedWindow` (unique_nodes + inverse +
+        per-batch offsets).  The tier stack is folded once over the unique
+        set, each unique row is fetched exactly once (from the device tier's
+        probe rows when the top tier is a device store, else from the
+        backstop), and rows are scattered back to per-batch feature arrays
+        via the inverse index — so per-batch features are bit-identical to
+        `gather()` called per batch, while storage never re-fetches a row
+        two in-flight batches share.  Storage-bound unique rows that share a
+        4 KB IO line coalesce into single IOs (`coalesce_lines`).
+
+        Returns `(rows_list, reports, window_report)`: per-batch feature
+        arrays, per-batch `CoalescedReport`s (batch-local tier split +
+        window-wide merge telemetry), and the window-level report over the
+        unique set that `StorageTimeline.price_merged_burst` prices."""
+        unique = merged.unique_nodes
+        plan = build_plan_merged(self.tiers, unique,
+                                 merged.batch_multiplicity())
+        rows = getattr(plan.tiers[0], "last_rows", None)
+        if rows is None or len(rows) != len(unique):
+            rows = np.asarray(self.features[unique])
+        bytes_per_row = self.feature_dim * self.itemsize
+
+        storage_tiers = [i for i, t in enumerate(plan.tiers)
+                         if t.latency_class == "storage"]
+        storage_mask = np.isin(plan.assignment, storage_tiers)
+        n_storage_unique = int(storage_mask.sum())
+        n_storage_lines = coalesce_lines(unique[storage_mask], bytes_per_row,
+                                         io_bytes)
+        window_stats = dict(
+            window_batches=merged.n_batches,
+            window_requests=merged.n_requests,
+            n_unique=merged.n_unique,
+            n_duplicate=merged.n_duplicate,
+            n_storage_unique=n_storage_unique,
+            n_storage_lines=n_storage_lines,
+        )
+        tier_meta = dict(
+            bytes_per_row=bytes_per_row,
+            tier_names=tuple(t.name for t in plan.tiers),
+            tier_classes=tuple(t.latency_class for t in plan.tiers),
+        )
+        window_report = CoalescedReport(
+            n_requests=merged.n_unique,
+            tier_counts=tuple(int(c) for c in plan.counts()),
+            **tier_meta, **window_stats)
+
+        rows_list, reports = [], []
+        for i in range(merged.n_batches):
+            inv = merged.batch_inverse(i)
+            rows_list.append(rows[inv])
+            counts = np.bincount(plan.assignment[inv],
+                                 minlength=len(plan.tiers))
+            reports.append(CoalescedReport(
+                n_requests=len(inv),
+                tier_counts=tuple(int(c) for c in counts),
+                **tier_meta, **window_stats))
+        self.last_plan = plan
+        return rows_list, reports, window_report
+
     def push_window(self, future_nodes: np.ndarray) -> None:
         """Announce a future batch to every tier (window pinning etc.)."""
         for t in self.tiers:
             t.admit(future_nodes)
+
+    def retire_window(self, n_batches: int) -> None:
+        """Drop the windowed tier's look-ahead entries for `n_batches`
+        consumed batches.  The merged executor calls this (then re-syncs the
+        window) BEFORE `gather_merged`, so the one merged access both
+        consumes the current window's reuse reservations (the multiplicity
+        decrements) and pins fills by the NEXT window's — mirroring what
+        `n_batches` per-batch accesses would have done one at a time."""
+        wt = self.windowed_tier
+        if wt is None or wt.window_depth == 0:
+            return
+        for _ in range(min(n_batches, len(wt.window))):
+            wt.window.popleft()
 
     def reset(self) -> None:
         for t in self.tiers:

@@ -22,6 +22,23 @@ consumption, and `next_batch(compute_s=...)` re-prices the batch's
 (`Batch.exposed_prep_s = max(0, prep - compute)`); the raw `prep_time_s`
 and every other `Batch` field stay bit-identical to the sync plane.
 
+On a *merged* plane (`DataPlaneSpec.merge_execute`, e.g. the `gids-merged`
+preset) stage 2 runs over a whole WINDOW of plans at once
+(`plan_window()` / `execute_window()`): the accumulator's merge depth stops
+being a pricing assumption and becomes the executed unit.  The window's
+request lists are deduplicated into a `MergedWindow`
+(`np.unique(..., return_inverse=True)`), the tier stack folds ONCE over the
+unique set, each unique row is gathered exactly once, storage-bound rows
+sharing a 4 KB IO line coalesce into single IOs, and the window is priced
+as one storage burst (`StorageTimeline.price_merged_burst`) amortized
+equally across its batches.  Per-batch features are bit-identical to the
+per-batch path (the inverse index scatters unique rows back); each `Batch`
+carries a `CoalescedReport` — the per-batch tier split plus the window-wide
+merge telemetry (`window_batches`, `window_requests`, `n_unique`,
+`n_duplicate`, `n_storage_unique`, `n_storage_lines`).  With
+`prefetch > 0` as well (`gids-merged-async`) the prefetch engine stages
+whole merged windows ahead of consumption.
+
 Other orchestration, common to both stages:
 
   * the accumulator recomputes the merge depth from live telemetry
@@ -163,6 +180,9 @@ class GIDSDataLoader:
         self.timeline = StorageTimeline(ssd, cfg.n_ssd)
         self._lookahead: deque[tuple[dict, SampledBlocks]] = deque()
         self._win_idx = 0   # lookahead entries already pushed to cache window
+        # merged-window planes stage whole executed windows here (snapshot
+        # kept per batch so a checkpoint mid-window resumes that batch)
+        self._merged_ready: deque[tuple[dict, Batch]] = deque()
         self._requests_per_iter = 0
         self.prefetch = (PrefetchEngine(self, self.plane.prefetch_depth)
                          if self.plane.prefetch_depth > 0 else None)
@@ -182,14 +202,20 @@ class GIDSDataLoader:
     def _refill_lookahead(self) -> int:
         """Run sampling ahead until the accumulator's merge depth is covered.
         Planes without lookahead (mmap) sample synchronously, depth 1; a
-        windowed tier floors the depth at its window size."""
+        windowed tier floors the depth at its window size.  A merged plane
+        samples one cache-window PAST the merge window, so the merged access
+        can pin its fills by the NEXT window's reuse (the per-batch path
+        gets the same look-ahead one batch at a time)."""
         if not self.plane.lookahead:
             depth = 1
         else:
             depth = self.accumulator.merge_depth(
                 max(self._requests_per_iter, 1))
             depth = max(depth, self.plane.min_lookahead)
-        while len(self._lookahead) < depth:
+        sample_ahead = depth
+        if self.plane.merge_execute:
+            sample_ahead = depth + self.plane.min_lookahead
+        while len(self._lookahead) < sample_ahead:
             # snapshot the sampler PRNG before sampling so a checkpoint
             # resumes at the logical consumption point, not the sampling
             # frontier (the lookahead queue is rebuilt deterministically)
@@ -235,6 +261,48 @@ class GIDSDataLoader:
         return Batch(blocks=blocks, features=rows, report=report,
                      prep_time_s=t, merge_depth=plan.merge_depth)
 
+    # -- merged-window execution ------------------------------------------------
+    def plan_window(self) -> list[BatchPlan]:
+        """Stage 1 for a whole merged window: plan `merge_depth` consecutive
+        batches (the depth the first plan's accumulator decision reports —
+        the lookahead already holds that many staged samples).  Each plan
+        keeps its own resume snapshot, so a checkpoint mid-window restores
+        the exact unconsumed batch."""
+        plans = [self.plan_next()]
+        if self.plane.merge_execute:
+            while len(plans) < plans[0].merge_depth:
+                plans.append(self.plan_next())
+        return plans
+
+    def execute_window(self, plans: Sequence[BatchPlan]) -> list[Batch]:
+        """Stage 2 for a merged window: dedupe the plans' request lists into
+        one `MergedWindow`, fold the tier stack once over the unique set,
+        gather each unique row exactly once, scatter rows back per batch via
+        the inverse index, and price the whole window as one line-coalesced
+        storage burst amortized equally across its batches.
+
+        Features are bit-identical to `execute()` run per plan; the reports
+        (tier telemetry) and modelled times differ — that difference IS the
+        modelled speedup of the §3.2 merge."""
+        merged = self.accumulator.merge(
+            [p.blocks.all_nodes for p in plans])
+        # retire the consumed window entries and stage the NEXT window's
+        # into the freed slots: the one merged access then consumes this
+        # window's reuse reservations (multiplicity decrements) while its
+        # fills pin lines the upcoming window will reuse
+        self.store.retire_window(len(plans))
+        self._sync_window()
+        rows_list, reports, window_report = self.store.gather_merged(merged)
+        # one telemetry update per window: the merged burst's unique split
+        # (what actually reached storage), not per-batch raw counts
+        self.accumulator.update(window_report.n_requests,
+                                window_report.redirected)
+        prep = (self.timeline.price_merged_burst(window_report)
+                / len(plans))
+        return [Batch(blocks=p.blocks, features=rows, report=rep,
+                      prep_time_s=prep, merge_depth=len(plans))
+                for p, rows, rep in zip(plans, rows_list, reports)]
+
     # -- iteration -------------------------------------------------------------
     def __iter__(self) -> Iterator[Batch]:
         while True:
@@ -247,6 +315,12 @@ class GIDSDataLoader:
         exposes the full prep and ignores it)."""
         if self.prefetch is not None:
             return self.prefetch.next(compute_s)
+        if self.plane.merge_execute:
+            if not self._merged_ready:
+                plans = self.plan_window()
+                for p, b in zip(plans, self.execute_window(plans)):
+                    self._merged_ready.append((p.snapshot, b))
+            return self._merged_ready.popleft()[1]
         return self.execute(self.plan_next())
 
     # -- state for checkpoint/restart (fault tolerance) -----------------------
@@ -255,6 +329,9 @@ class GIDSDataLoader:
             snap = self.prefetch.oldest_snapshot()
             if snap is not None:
                 return dict(snap)
+        if self._merged_ready:
+            # mid-window: the oldest executed-but-unconsumed batch's snapshot
+            return dict(self._merged_ready[0][0])
         if self._lookahead:
             return dict(self._lookahead[0][0])
         return {"rng": self.rng.bit_generator.state,
@@ -270,5 +347,6 @@ class GIDSDataLoader:
         # (and any batches the prefetch engine staged past the resume point)
         if self.prefetch is not None:
             self.prefetch.reset()
+        self._merged_ready.clear()
         self.plane.reset()
         self.accumulator.reset_telemetry()

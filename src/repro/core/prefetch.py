@@ -20,6 +20,12 @@ differs.  `tests/test_prefetch.py` pins this, including across
 PyTorch-Direct (arXiv:2101.07956) applies the same overlap to pinned-host
 access; here it is a property of the *plane* — any `DataPlaneSpec` with
 `prefetch > 0` (e.g. the `gids-async` preset) runs through this engine.
+
+On a merged plane (`merge_execute`, e.g. `gids-merged-async`) the engine's
+staging unit is the whole merged window: `plan_window()` /
+`execute_window()` dedupe and price a window of batches as one burst, and
+every batch of the window enters the ready queue together, each with its
+own resume snapshot.
 """
 from __future__ import annotations
 
@@ -73,10 +79,20 @@ class PrefetchEngine:
 
     def _stage(self) -> None:
         while len(self._ready) < self.depth:
-            plan: "BatchPlan" = self.loader.plan_next()
-            batch = self.loader.execute(plan)
-            self._ready.append((plan.snapshot, batch))
-            self.stats.staged_batches += 1
+            if self.loader.plane.merge_execute:
+                # a merged plane's executable unit is the whole window: the
+                # engine stages it atomically (the queue may transiently
+                # exceed `depth` by window-1 batches — the same bound the
+                # accumulator's max_merge_iters already imposes on staging
+                # memory), each batch keeping its own resume snapshot
+                plans = self.loader.plan_window()
+                batches = self.loader.execute_window(plans)
+            else:
+                plan: "BatchPlan" = self.loader.plan_next()
+                plans, batches = [plan], [self.loader.execute(plan)]
+            for p, b in zip(plans, batches):
+                self._ready.append((p.snapshot, b))
+                self.stats.staged_batches += 1
 
     def next(self, compute_s: float = 0.0) -> "Batch":
         self._stage()

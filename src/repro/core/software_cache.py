@@ -107,7 +107,8 @@ class WindowBufferedCache:
         return sum(int((w == node).sum()) for w in self.window)
 
     # -- access path -----------------------------------------------------------
-    def access(self, nodes: np.ndarray) -> np.ndarray:
+    def access(self, nodes: np.ndarray,
+               multiplicity: np.ndarray | None = None) -> np.ndarray:
         """Process one mini-batch's (deduplicated) feature requests.
 
         Invariant: on entry the window's front is this very batch (it was
@@ -115,8 +116,13 @@ class WindowBufferedCache:
         counter contributions are consumed by the per-node decrements below
         ("the counter value is decreased each time the node is reused during
         the feature aggregation stage"), so the pop does not bulk-decrement.
-        Returns the hit mask."""
-        if self.window_depth > 0 and self.window:
+        Returns the hit mask.
+
+        `multiplicity` switches to merged-window semantics (see
+        `access_merged`): no window pop here — the caller already retired
+        the consumed entries — and each resident node's counter consumes
+        its full multiplicity instead of one reuse."""
+        if multiplicity is None and self.window_depth > 0 and self.window:
             self.window.popleft()
         sets = _hash_ids(nodes, self.num_sets)
         hits = np.zeros(len(nodes), dtype=bool)
@@ -127,11 +133,29 @@ class WindowBufferedCache:
                 hits[i] = True
                 self.stats.hits += 1
                 j = int(w[0])
-                self.reuse[s, j] = max(0, int(self.reuse[s, j]) - 1)
+                dec = 1 if multiplicity is None else int(multiplicity[i])
+                self.reuse[s, j] = max(0, int(self.reuse[s, j]) - dec)
                 continue
             self.stats.misses += 1
             self._fill(s, int(n))
         return hits
+
+    def access_merged(self, nodes: np.ndarray,
+                      multiplicity: np.ndarray) -> np.ndarray:
+        """Merged-window access: ONE deduplicated probe standing in for a
+        whole window of consecutive batches' accesses (the merged-window
+        executor gathers the window in one aggregation pass).
+
+        Each resident node's counter consumes its full window
+        `multiplicity` (the number of merged batches requesting it) at once
+        — every reuse the pushes reserved happens inside this single pass,
+        so deferring the decrements would leave lines pinned forever and
+        silently shrink capacity.  The caller retires the consumed window
+        entries and pushes the NEXT window's BEFORE this access
+        (`TieredFeatureStore.retire_window` + the loader's window sync), so
+        fills pin lines by the upcoming window's reuse, exactly like the
+        per-batch path's look-ahead.  Returns the hit mask over `nodes`."""
+        return self.access(nodes, multiplicity=multiplicity)
 
     def _fill(self, s: int, node: int) -> None:
         ways = self.tags[s]

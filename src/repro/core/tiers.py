@@ -111,6 +111,14 @@ class DeviceCacheTier(_TierBase):
     def probe(self, node_ids: np.ndarray) -> np.ndarray:
         return self.cache.access(node_ids)
 
+    def probe_merged(self, node_ids: np.ndarray,
+                     multiplicity: np.ndarray) -> np.ndarray:
+        """One deduplicated probe for a whole merged window: each node
+        consumes its full reuse multiplicity at once (see
+        `WindowBufferedCache.access_merged`; the caller has already retired
+        the consumed window entries and pushed the next window's)."""
+        return self.cache.access_merged(node_ids, multiplicity)
+
     def admit(self, node_ids: np.ndarray) -> None:
         self.cache.push_window(node_ids)
 
@@ -155,14 +163,35 @@ class DeviceStoreTier(_TierBase):
         return int(self.store.rows.nbytes)
 
     def _future_counts(self, ids: np.ndarray) -> np.ndarray:
-        fc = np.zeros(len(ids), np.int32)
-        for w in self.window:
-            fc += np.isin(ids, w).astype(np.int32)
-        return fc
+        """Per-id count of future window batches containing it, in one
+        concatenated membership pass: each window entry contributes its
+        unique ids once, the sorted concatenation is binary-searched from
+        both sides, and the span width is the count."""
+        if not self.window:
+            return np.zeros(len(ids), np.int32)
+        cat = np.sort(np.concatenate(
+            [np.unique(np.asarray(w)) for w in self.window]))
+        lo = np.searchsorted(cat, ids, side="left")
+        hi = np.searchsorted(cat, ids, side="right")
+        return (hi - lo).astype(np.int32)
 
     def probe(self, node_ids: np.ndarray) -> np.ndarray:
         if self.window_depth > 0 and self.window:
             self.window.popleft()
+        return self._probe_rows(node_ids)
+
+    def probe_merged(self, node_ids: np.ndarray,
+                     multiplicity: np.ndarray) -> np.ndarray:
+        """Merged-window probe: one deduplicated device gather for the whole
+        window (the caller has already retired the consumed look-ahead
+        entries).  The jittable cache metadata decrements one reservation
+        per hit, not the full multiplicity — surplus reservations keep
+        lines pinned a little longer than the reference cache would
+        (conservative: capacity, not correctness)."""
+        del multiplicity
+        return self._probe_rows(node_ids)
+
+    def _probe_rows(self, node_ids: np.ndarray) -> np.ndarray:
         n = len(node_ids)
         pad = max(8, 1 << (n - 1).bit_length())      # shape bucket for jit
         ids = np.full(pad, -1, np.int32)
@@ -190,13 +219,12 @@ class DeviceStoreTier(_TierBase):
         from .software_cache import _hash_ids   # the shared Fibonacci hash —
         tags = np.asarray(self.store.cache.tags)  # must match cache_jax
         slots = np.asarray(self.store.cache.slots)  # bit-exactly
-        sets = _hash_ids(np.asarray(node_ids), tags.shape[0])
-        out = np.full(len(node_ids), -1, np.int32)
-        for i, (s, n) in enumerate(zip(sets, node_ids)):
-            w = np.nonzero(tags[s] == n)[0]
-            if len(w):
-                out[i] = slots[s, w[0]]
-        return out
+        ids = np.asarray(node_ids)
+        sets = _hash_ids(ids, tags.shape[0])
+        match = tags[sets] == ids[:, None]        # (n, ways) tag compare
+        way = match.argmax(axis=1)                # first matching way
+        return np.where(match.any(axis=1),
+                        slots[sets, way], -1).astype(np.int32)
 
     def device_rows(self) -> np.ndarray:
         """The resident HBM row store (already materialized on device)."""
@@ -282,8 +310,9 @@ class KVSlotTier(_TierBase):
         return len(self._held) / self.num_slots if self.num_slots else 0.0
 
     def probe(self, request_ids: np.ndarray) -> np.ndarray:
-        return np.array([int(r) in self._held for r in request_ids],
-                        dtype=bool)
+        held = np.fromiter(self._held.keys(), dtype=np.int64,
+                           count=len(self._held))
+        return np.isin(np.asarray(request_ids, dtype=np.int64), held)
 
     def admit(self, request_ids: np.ndarray) -> None:
         """Best-effort bulk admission: ids beyond the free capacity are NOT
@@ -355,10 +384,16 @@ class GatherPlan:
         return slots
 
 
-def build_plan(tiers: Sequence[Tier], node_ids: np.ndarray) -> GatherPlan:
+def build_plan(tiers: Sequence[Tier], node_ids: np.ndarray,
+               multiplicity: np.ndarray | None = None) -> GatherPlan:
     """Fold the ordered tier stack over one batch: each tier is offered the
     requests every faster tier declined; its hits are claimed.  The last tier
-    must be a backstop (probe everything True), else the fold fails loudly."""
+    must be a backstop (probe everything True), else the fold fails loudly.
+
+    With `multiplicity` the fold is a merged-window one: `node_ids` is a
+    window's UNIQUE request set, and tiers that understand merged windows
+    (`probe_merged`) consume each node's full reuse multiplicity in the one
+    pass; stateless tiers see a plain probe of the union either way."""
     node_ids = np.asarray(node_ids)
     n = len(node_ids)
     assignment = np.full(n, -1, np.int8)
@@ -367,7 +402,11 @@ def build_plan(tiers: Sequence[Tier], node_ids: np.ndarray) -> GatherPlan:
         idx = np.nonzero(unclaimed)[0]
         if len(idx) == 0:
             break
-        hits = np.asarray(tier.probe(node_ids[idx]), dtype=bool)
+        if multiplicity is not None and hasattr(tier, "probe_merged"):
+            hits = np.asarray(tier.probe_merged(
+                node_ids[idx], multiplicity[idx]), dtype=bool)
+        else:
+            hits = np.asarray(tier.probe(node_ids[idx]), dtype=bool)
         took = idx[hits]
         assignment[took] = ti
         unclaimed[took] = False
@@ -378,3 +417,10 @@ def build_plan(tiers: Sequence[Tier], node_ids: np.ndarray) -> GatherPlan:
             "must end in a storage backstop")
     return GatherPlan(node_ids=node_ids, assignment=assignment,
                       tiers=tuple(tiers))
+
+
+def build_plan_merged(tiers: Sequence[Tier], unique_nodes: np.ndarray,
+                      multiplicity: np.ndarray) -> GatherPlan:
+    """Dedup-aware fold for a merged window — `build_plan` over the unique
+    set with the window multiplicity.  Same partition guarantee."""
+    return build_plan(tiers, unique_nodes, multiplicity=multiplicity)

@@ -11,11 +11,13 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention as _flash
 from .segment_mean import segment_mean as _segmean
 from .tiered_gather import tiered_gather as _tgather
+from .tiered_gather import tiered_gather_unique as _tgather_unique
 
 _ON_TPU = jax.default_backend() == "tpu"
 _INTERPRET = not _ON_TPU
@@ -31,6 +33,22 @@ def tiered_gather(slots, cache, staged, use_pallas: bool = True,
         return ref.tiered_gather_ref(slots, cache, staged)
     return _tgather(slots, cache, staged, block_b=block_b, block_d=block_d,
                     interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_pallas", "block_b", "block_d"))
+def tiered_gather_unique(slots, cache, staged, inverse,
+                         use_pallas: bool = True,
+                         block_b: int | None = None, block_d: int = 512):
+    """Deduped tiered gather + inverse expansion: `slots`/`staged` cover the
+    merged window's unique requests, `inverse` scatters the gathered rows
+    back to request order (see the merged-window executor,
+    core/pipeline.py)."""
+    if not use_pallas:
+        return jnp.take(ref.tiered_gather_ref(slots, cache, staged),
+                        inverse, axis=0)
+    return _tgather_unique(slots, cache, staged, inverse, block_b=block_b,
+                           block_d=block_d, interpret=_INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

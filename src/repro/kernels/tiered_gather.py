@@ -79,6 +79,12 @@ def _single_row_kernel(slots_pf, cache_blk, staged_blk, out_ref):
     out_ref[...] = jnp.where(use_cache, cache_blk[...], staged_blk[...])
 
 
+def _unique_row_kernel(inv_pf, slots_pf, cache_blk, staged_blk, out_ref):
+    i = pl.program_id(0)
+    use_cache = slots_pf[inv_pf[i]] >= 0
+    out_ref[...] = jnp.where(use_cache, cache_blk[...], staged_blk[...])
+
+
 def _single_row_call(slots, cache, staged, bd, interpret):
     """The original one-request-per-step layout (`block_b=1`): the BlockSpec
     `index_map` itself selects which cache row to DMA, so the automatic
@@ -189,4 +195,85 @@ def tiered_gather(slots: jax.Array, cache: jax.Array, staged: jax.Array,
     return out
 
 
+def _unique_single_row_call(inverse, slots, cache, staged_u, bd, interpret):
+    """Expanded one-row-per-step layout over DEDUPED inputs: the scalar-
+    prefetched inverse index redirects both the cache-row DMA and the staged
+    tile to the output row's *unique* request, so the kernel consumes (U, bd)
+    staged tiles while writing the (N, bd) expanded output."""
+    N, = inverse.shape
+    _, D = cache.shape
+
+    def cache_index(i, j, inv_pf, slots_pf):
+        return (jnp.maximum(slots_pf[inv_pf[i]], 0), j)
+
+    def staged_index(i, j, inv_pf, slots_pf):
+        del slots_pf
+        return (inv_pf[i], j)
+
+    def out_index(i, j, inv_pf, slots_pf):
+        del inv_pf, slots_pf
+        return (i, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N, D // bd),
+        in_specs=[
+            pl.BlockSpec((1, bd), cache_index),
+            pl.BlockSpec((1, bd), staged_index),
+        ],
+        out_specs=pl.BlockSpec((1, bd), out_index),
+    )
+    return pl.pallas_call(
+        _unique_row_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, D), staged_u.dtype),
+        interpret=interpret,
+        name="tiered_gather_unique",
+    )(inverse, slots, cache, staged_u)
+
+
+def tiered_gather_unique(slots: jax.Array, cache: jax.Array,
+                         staged: jax.Array, inverse: jax.Array,
+                         *, block_b: int | None = None, block_d: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """Gather-from-unique-rows indirection for the merged-window executor.
+
+    `slots`/`staged` cover the window's U *unique* requests (each unique row
+    staged once — the storage dedup carried onto the device); `inverse` (N,)
+    maps every original request to its unique row.  Returns the (N, D)
+    expanded gather, bit-identical to
+    `tiered_gather(slots[inverse], cache, staged[inverse])` without ever
+    materializing the duplicated staged buffer.
+
+    The single-row layout threads `inverse` through the BlockSpec index maps
+    (the expansion is pure DMA scheduling); the row-blocked layout gathers
+    the unique rows once through the blocked kernel and expands with one
+    HBM-local take."""
+    U, = slots.shape
+    L, D = cache.shape
+    assert staged.shape == (U, D), (staged.shape, U, D)
+    if block_b is None:
+        compiled_tpu = not interpret and jax.default_backend() == "tpu"
+        block_b = 1 if compiled_tpu else 8
+    if min(block_b, U) > 1:
+        uniq = tiered_gather(slots, cache, staged, block_b=block_b,
+                             block_d=block_d, interpret=interpret)
+        return jnp.take(uniq, inverse, axis=0)
+
+    bd = min(block_d, D)
+    if D % bd != 0:
+        div = next(d for d in range(bd, 0, -1) if D % d == 0)
+        if div >= min(128, D):
+            bd = div
+    Dp = -(-D // bd) * bd
+    out = _unique_single_row_call(
+        jnp.asarray(inverse, jnp.int32), jnp.asarray(slots, jnp.int32),
+        _pad_to(cache, 1, Dp), _pad_to(staged, 1, Dp), bd, interpret)
+    if Dp != D:
+        out = out[:, :D]
+    return out
+
+
 tiered_gather_cpu = functools.partial(tiered_gather, interpret=True)
+tiered_gather_unique_cpu = functools.partial(tiered_gather_unique,
+                                             interpret=True)

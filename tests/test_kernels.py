@@ -62,6 +62,35 @@ def test_tiered_gather_ragged_shapes(B, D, block_b, block_d):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
 
 
+@pytest.mark.parametrize("U,L,D,N,block_b",
+                         [(16, 32, 128, 40, 1),   # index-map indirection
+                          (16, 32, 128, 40, 8),   # blocked gather + take
+                          (7, 8, 200, 19, 1),     # ragged D, legacy path
+                          (7, 8, 200, 19, 4)])    # ragged D, blocked path
+def test_tiered_gather_unique_indirection(U, L, D, N, block_b):
+    """The deduped-gather entry consumes (U, D) staged tiles and an (N,)
+    inverse index; output must equal the plain gather on expanded inputs
+    (what the merged-window executor replaces), on every layout."""
+    from repro.kernels.tiered_gather import tiered_gather_unique_cpu
+    slots = jnp.asarray(RNG.integers(-1, L, U), jnp.int32)
+    cache = _arr((L, D), jnp.float32)
+    staged = _arr((U, D), jnp.float32)
+    inverse = jnp.asarray(RNG.integers(0, U, N), jnp.int32)
+    exp = ref.tiered_gather_ref(slots, cache, staged)[inverse]
+    out = tiered_gather_unique_cpu(slots, cache, staged, inverse,
+                                   block_b=block_b)
+    assert out.shape == (N, D)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    # the jit'd public entry and its oracle fallback agree too
+    np.testing.assert_array_equal(
+        np.asarray(ops.tiered_gather_unique(slots, cache, staged, inverse)),
+        np.asarray(exp))
+    np.testing.assert_array_equal(
+        np.asarray(ops.tiered_gather_unique(slots, cache, staged, inverse,
+                                            use_pallas=False)),
+        np.asarray(exp))
+
+
 def test_tiered_gather_all_hits_all_misses():
     cache = _arr((16, 128), jnp.float32)
     staged = _arr((8, 128), jnp.float32)

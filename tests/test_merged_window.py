@@ -1,0 +1,325 @@
+"""Merged-window gather executor: cross-batch dedup, 4KB-line coalescing,
+bit-identical features vs the per-batch path, merged-burst pricing, and the
+vectorized tier fast paths that feed it."""
+import numpy as np
+import pytest
+
+from repro.core import (CoalescedReport, DataPlaneSpec, GIDSDataLoader,
+                        INTEL_OPTANE, KVSlotTier, LoaderConfig,
+                        SAMSUNG_980PRO, StorageTimeline, coalesce_lines,
+                        merge_window)
+from repro.core.storage_sim import IO_BYTES
+from repro.graph.synthetic import rmat_graph
+
+
+@pytest.fixture(scope="module")
+def graph_and_feats():
+    g = rmat_graph(10_000, 12, 16, seed=1)
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 16)).astype(np.float32)
+    return g, feats
+
+
+def _mk(g, feats, plane, seed=7, **kw):
+    cfg = dict(batch_size=128, fanouts=(4, 4), cache_lines=2048,
+               window_depth=4, seed=seed)
+    cfg.update(kw)
+    return GIDSDataLoader(g, feats, LoaderConfig(data_plane=plane, **cfg))
+
+
+# -- merge_window mechanics ----------------------------------------------------
+
+def test_merge_window_roundtrip():
+    lists = [np.array([3, 1, 7]), np.array([1, 9]), np.array([7, 7, 2])]
+    m = merge_window(lists)
+    assert m.n_batches == 3 and m.n_requests == 8
+    assert m.n_unique == 5 and m.n_duplicate == 3
+    np.testing.assert_array_equal(m.unique_nodes, [1, 2, 3, 7, 9])
+    for i, lst in enumerate(lists):
+        np.testing.assert_array_equal(
+            m.unique_nodes[m.batch_inverse(i)], lst)
+
+
+def test_merge_window_multiplicity():
+    m = merge_window([np.array([1, 2]), np.array([2, 3]), np.array([2])])
+    # node 2 appears in all three batches, 1 and 3 in one each
+    by_node = dict(zip(m.unique_nodes.tolist(),
+                       m.batch_multiplicity().tolist()))
+    assert by_node == {1: 1, 2: 3, 3: 1}
+
+
+# -- line coalescing -----------------------------------------------------------
+
+def test_coalesce_lines_below_line_size():
+    # 1 KB rows: 4 rows per 4 KB line
+    assert coalesce_lines(np.array([0, 1, 2, 3]), 1024) == 1
+    assert coalesce_lines(np.array([0, 4, 8]), 1024) == 3
+    assert coalesce_lines(np.array([0, 1, 4, 5, 8]), 1024) == 3
+    # duplicates inside a line never add IOs
+    assert coalesce_lines(np.array([0, 0, 1]), 1024) == 1
+
+
+def test_coalesce_lines_at_line_size():
+    # 4 KB rows: one IO per row, nothing coalesces
+    assert coalesce_lines(np.array([0, 1, 2]), IO_BYTES) == 3
+
+
+def test_coalesce_lines_above_line_size():
+    # 8 KB rows: two IOs per row
+    assert coalesce_lines(np.array([0, 1, 2]), 2 * IO_BYTES) == 6
+    # a non-multiple width rounds up per row (9 KB -> 3 lines)
+    assert coalesce_lines(np.array([0, 1]), 9 * 1024) == 6
+
+
+def test_coalesce_lines_edge_cases():
+    assert coalesce_lines(np.array([], dtype=np.int64), 1024) == 0
+    # row wider than half a line but below it: floor says 1 row/line
+    assert coalesce_lines(np.array([0, 1, 2]), 3000) == 3
+
+
+# -- merged executor: bit-identity + telemetry ---------------------------------
+
+def _assert_same_data(ba, bb):
+    np.testing.assert_array_equal(ba.blocks.seeds, bb.blocks.seeds)
+    np.testing.assert_array_equal(ba.blocks.all_nodes, bb.blocks.all_nodes)
+    np.testing.assert_array_equal(ba.features, bb.features)
+
+
+def test_merged_features_bit_identical_to_per_batch(graph_and_feats):
+    g, feats = graph_and_feats
+    a, b = _mk(g, feats, "gids"), _mk(g, feats, "gids-merged")
+    for _ in range(12):
+        _assert_same_data(a.next_batch(), b.next_batch())
+
+
+def test_merged_async_bit_identical_and_overlap(graph_and_feats):
+    g, feats = graph_and_feats
+    a, b = _mk(g, feats, "gids-merged"), _mk(g, feats, "gids-merged-async")
+    assert b.prefetch is not None
+    for _ in range(10):
+        ba, bb = a.next_batch(), b.next_batch(compute_s=1e-3)
+        _assert_same_data(ba, bb)
+        assert ba.report == bb.report
+        assert ba.prep_time_s == bb.prep_time_s
+        assert bb.exposed_prep_s == pytest.approx(
+            max(0.0, bb.prep_time_s - 1e-3))
+
+
+def test_merged_report_telemetry(graph_and_feats):
+    g, feats = graph_and_feats
+    dl = _mk(g, feats, "gids-merged")
+    batches = [dl.next_batch() for _ in range(8)]
+    for b in batches:
+        r = b.report
+        assert isinstance(r, CoalescedReport)
+        assert r.window_batches == b.merge_depth >= 1
+        assert r.n_unique + r.n_duplicate == r.window_requests
+        assert r.n_unique <= r.window_requests
+        assert r.n_storage_unique <= r.n_unique
+        # 64-byte rows (16-dim float32): many rows per 4 KB line, so the
+        # coalesced IO count must undercut the unique storage row count
+        assert r.n_storage_lines <= r.n_storage_unique
+    steady = batches[-1].report
+    assert steady.n_storage_lines < steady.n_storage_unique
+    assert steady.dedup_factor > 1.0
+
+
+def test_merged_window_amortizes_one_burst(graph_and_feats):
+    """Every batch of one window shares the burst price and telemetry."""
+    g, feats = graph_and_feats
+    dl = _mk(g, feats, "gids-merged")
+    first = dl.next_batch()
+    window = [first] + [dl.next_batch()
+                        for _ in range(first.merge_depth - 1)]
+    assert len({b.prep_time_s for b in window}) == 1
+    assert len({b.report.n_unique for b in window}) == 1
+    assert len({b.report.window_requests for b in window}) == 1
+    # per-batch tier counts still cover each batch's own requests
+    for b in window:
+        assert sum(b.report.tier_counts) == len(b.blocks.all_nodes)
+
+
+def test_merged_prep_beats_per_batch(graph_and_feats):
+    """The point of the PR: dedup + coalescing + one amortized burst make
+    the merged plane's modelled prep cheaper than the per-batch plane's."""
+    g, feats = graph_and_feats
+    a, b = _mk(g, feats, "gids"), _mk(g, feats, "gids-merged")
+    pa = [a.next_batch().prep_time_s for _ in range(20)]
+    pb = [b.next_batch().prep_time_s for _ in range(20)]
+    assert np.mean(pb[4:]) < np.mean(pa[4:])
+
+
+def test_merged_resume_mid_window(graph_and_feats):
+    """A checkpoint taken with executed-but-unconsumed batches staged
+    resumes bit-identically on merged, per-batch, and async-merged
+    loaders."""
+    g, feats = graph_and_feats
+    src = _mk(g, feats, "gids-merged")
+    for _ in range(3):                      # stops mid-window (window >= 4)
+        src.next_batch()
+    st = src.state_dict()
+    cont = [src.next_batch() for _ in range(6)]
+
+    for plane in ("gids-merged", "gids", "gids-merged-async"):
+        fresh = _mk(g, feats, plane)
+        fresh.load_state_dict(st)
+        for exp in cont:
+            got = fresh.next_batch()
+            np.testing.assert_array_equal(exp.blocks.seeds, got.blocks.seeds)
+            np.testing.assert_array_equal(exp.features, got.features)
+
+
+def test_merge_execute_requires_overlapped_pricing():
+    with pytest.raises(ValueError, match="merge_execute"):
+        DataPlaneSpec.preset("mmap").with_(name="mmap-merged",
+                                           merge_execute=True)
+
+
+def test_merged_presets_registered():
+    for name in ("gids-merged", "gids-merged-async"):
+        spec = DataPlaneSpec.preset(name)
+        assert spec.merge_execute
+        assert [t.kind for t in spec.tiers] == [
+            t.kind for t in DataPlaneSpec.preset("gids").tiers]
+    assert DataPlaneSpec.preset("gids-merged-async").prefetch > 0
+
+
+# -- hypothesis: bit-identity across presets, depths, mid-window resume --------
+
+def test_merged_bit_identity_property(graph_and_feats):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    g, feats = graph_and_feats
+    base_presets = ["gids", "bam", "pinned-host"]
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        base=st.sampled_from(base_presets),
+        prefetch=st.sampled_from([0, 2]),
+        window_depth=st.integers(1, 4),
+        batch_size=st.sampled_from([16, 64]),
+        resume_after=st.integers(0, 5),
+        seed=st.integers(0, 3),
+    )
+    def check(base, prefetch, window_depth, batch_size, resume_after, seed):
+        spec = DataPlaneSpec.preset(base)
+        merged_spec = spec.with_(name=f"{base}-merged-test",
+                                 merge_execute=True, prefetch=prefetch)
+        kw = dict(batch_size=batch_size, window_depth=window_depth,
+                  seed=seed)
+        a = _mk(g, feats, spec, **kw)
+        b = _mk(g, feats, merged_spec, **kw)
+        for _ in range(6):
+            _assert_same_data(a.next_batch(), b.next_batch())
+        # checkpoint the merged loader mid-stream (possibly mid-window),
+        # resume a fresh per-batch loader from it: identical continuation
+        for _ in range(resume_after):
+            b.next_batch()
+        st_b = b.state_dict()
+        cont = [b.next_batch() for _ in range(4)]
+        fresh = _mk(g, feats, spec, **kw)
+        fresh.load_state_dict(st_b)
+        for exp in cont:
+            got = fresh.next_batch()
+            np.testing.assert_array_equal(exp.blocks.seeds, got.blocks.seeds)
+            np.testing.assert_array_equal(exp.features, got.features)
+
+    check()
+
+
+# -- merged-burst pricing ------------------------------------------------------
+
+def _rep(**kw):
+    base = dict(n_requests=kw.pop("n_unique_req", 100),
+                bytes_per_row=kw.pop("bytes_per_row", 256),
+                tier_names=("hbm-cache", "host-cbuf", "storage"),
+                tier_classes=("hbm", "host", "storage"),
+                tier_counts=kw.pop("tier_counts", (0, 0, 100)))
+    return CoalescedReport(**base, **kw)
+
+
+def test_price_merged_burst_monotone_in_rows():
+    tl = StorageTimeline(SAMSUNG_980PRO)
+    t_small = tl.price_merged_burst(_rep(
+        tier_counts=(0, 0, 100), n_storage_unique=100, n_storage_lines=50))
+    t_big = tl.price_merged_burst(_rep(
+        tier_counts=(0, 0, 1000), n_storage_unique=1000,
+        n_storage_lines=500))
+    assert 0 < t_small < t_big
+
+
+def test_price_merged_burst_coalescing_caps_wide_rows():
+    """At 4 KB rows the line transfer equals the row transfer; coalesced
+    line counts below the row count must price cheaper."""
+    tl = StorageTimeline(INTEL_OPTANE)
+    dense = tl.price_merged_burst(_rep(
+        bytes_per_row=IO_BYTES, tier_counts=(0, 0, 64),
+        n_storage_unique=64, n_storage_lines=32))
+    sparse = tl.price_merged_burst(_rep(
+        bytes_per_row=IO_BYTES, tier_counts=(0, 0, 64),
+        n_storage_unique=64, n_storage_lines=64))
+    assert dense < sparse
+
+
+def test_price_merged_burst_zero_storage():
+    tl = StorageTimeline(INTEL_OPTANE)
+    t = tl.price_merged_burst(_rep(
+        tier_counts=(100, 0, 0), n_storage_unique=0, n_storage_lines=0))
+    assert t >= 0.0
+
+
+# -- vectorized tier fast paths ------------------------------------------------
+
+def test_kv_slot_probe_vectorized_matches_membership():
+    tier = KVSlotTier(slots=4)
+    for rid in (3, 5, 9):
+        tier.acquire(rid)
+    ids = np.array([1, 3, 5, 7, 9, 11])
+    np.testing.assert_array_equal(
+        tier.probe(ids), [int(r) in tier._held for r in ids])
+    tier.release(5)
+    np.testing.assert_array_equal(
+        tier.probe(np.array([5, 9])), [False, True])
+    assert tier.probe(np.array([], dtype=np.int64)).shape == (0,)
+
+
+def test_device_store_future_counts_vectorized():
+    pytest.importorskip("jax")
+    from repro.core.tiers import DeviceStoreTier
+    feats = np.random.default_rng(0).standard_normal((64, 8)) \
+        .astype(np.float32)
+    tier = DeviceStoreTier(feats, num_lines=32, ways=8, window_depth=4)
+    windows = [np.array([1, 2, 3]), np.array([2, 3, 4, 2]),
+               np.array([3, 9])]
+    tier.window.extend(windows)
+    ids = np.array([1, 2, 3, 4, 9, 50])
+    got = tier._future_counts(ids)
+    expect = np.zeros(len(ids), np.int32)
+    for w in windows:                      # the pre-vectorization oracle
+        expect += np.isin(ids, w).astype(np.int32)
+    np.testing.assert_array_equal(got, expect)
+    tier.window.clear()
+    np.testing.assert_array_equal(tier._future_counts(ids),
+                                  np.zeros(len(ids), np.int32))
+
+
+def test_device_store_lookup_slots_vectorized():
+    pytest.importorskip("jax")
+    from repro.core.software_cache import _hash_ids
+    from repro.core.tiers import DeviceStoreTier
+    feats = np.random.default_rng(1).standard_normal((256, 8)) \
+        .astype(np.float32)
+    tier = DeviceStoreTier(feats, num_lines=64, ways=8)
+    tier.probe(np.arange(40))              # fill some lines
+    ids = np.arange(60)
+    got = tier.lookup_slots(ids)
+    tags = np.asarray(tier.store.cache.tags)
+    slots = np.asarray(tier.store.cache.slots)
+    sets = _hash_ids(ids, tags.shape[0])
+    expect = np.full(len(ids), -1, np.int32)   # per-node reference loop
+    for i, (s, n) in enumerate(zip(sets, ids)):
+        w = np.nonzero(tags[s] == n)[0]
+        if len(w):
+            expect[i] = slots[s, w[0]]
+    np.testing.assert_array_equal(got, expect)
