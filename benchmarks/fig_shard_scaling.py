@@ -1,0 +1,133 @@
+"""Shard scaling — the paper's multi-SSD story (§4.2) with real per-shard
+queues instead of the analytic ``n_ssd`` multiplier.
+
+Sweeps the sharded merged plane (`gids-merged-sharded`) over
+``n_shards ∈ {1, 2, 4, 8}`` × placement policy (hash / range / degree /
+skewed, see core/sharding.py) and pins three claims:
+
+  * features are bit-identical to the UNSHARDED plane at every point —
+    sharding changes pricing and telemetry, never bytes;
+  * under balanced placement, modelled exposed prep is monotonically
+    non-increasing in shard count (each shard drains its own queue, the
+    batch completes at the slowest one);
+  * a deliberately skewed hash degrades gracefully: slower than balanced
+    placement at the same shard count, still no slower than one shard.
+
+Also prices a heterogeneous array (one 980Pro straggler among Optanes) to
+exercise the straggler telemetry end to end.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import (GIDSDataLoader, INTEL_OPTANE, LoaderConfig,
+                        SAMSUNG_980PRO)
+from repro.graph.synthetic import rmat_graph
+
+SHARD_COUNTS = (1, 2, 4, 8)
+PLACEMENTS = ("hash", "range", "degree", "skewed")
+BALANCED = ("hash", "range", "degree")
+
+
+def _make_loader(g, feats, plane: str, n_shards: int,
+                 placement: str) -> GIDSDataLoader:
+    return GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=256, fanouts=(6, 4), data_plane=plane, cache_lines=2048,
+        window_depth=4, n_shards=n_shards, placement=placement, seed=3),
+        ssd=SAMSUNG_980PRO)
+
+
+def _run(g, feats, plane, n_shards, placement, iters, warmup):
+    dl = _make_loader(g, feats, plane, n_shards, placement)
+    batches = [dl.next_batch() for _ in range(iters)]
+    prep = float(np.mean([b.exposed_prep_s for b in batches[warmup:]]))
+    return prep, batches, dl
+
+
+def sweep(num_nodes: int = 20_000, iters: int = 16, warmup: int = 6) -> dict:
+    g = rmat_graph(num_nodes, 12, 64, seed=1)
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 64)).astype(np.float32)
+
+    # the unsharded reference every sharded point must match bit-for-bit
+    _, ref_batches, _ = _run(g, feats, "gids-merged", 1, "hash",
+                             iters, warmup)
+
+    points = []
+    for placement in PLACEMENTS:
+        for n in SHARD_COUNTS:
+            prep, batches, dl = _run(g, feats, "gids-merged-sharded", n,
+                                     placement, iters, warmup)
+            for br, bs in zip(ref_batches, batches):
+                np.testing.assert_array_equal(br.features, bs.features)
+                assert br.report.tier_counts == bs.report.tier_counts
+            burst = dl.timeline.last_shard_burst
+            points.append({
+                "placement": placement, "n_shards": n,
+                "exposed_prep_s": prep,
+                "imbalance": burst.imbalance if burst else 1.0,
+                "straggler": burst.straggler if burst else 0,
+            })
+
+    by = {(p["placement"], p["n_shards"]): p for p in points}
+    for placement in BALANCED:            # monotone non-increasing scaling
+        preps = [by[(placement, n)]["exposed_prep_s"] for n in SHARD_COUNTS]
+        assert all(b <= a * 1.001 for a, b in zip(preps, preps[1:])), \
+            f"{placement}: prep not monotone over shards: {preps}"
+    # graceful degradation: skewed is worse than hash at 4 shards, but the
+    # straggler queue still only holds ~half the namespace — no cliff
+    assert by[("skewed", 4)]["exposed_prep_s"] \
+        >= by[("hash", 4)]["exposed_prep_s"]
+    assert by[("skewed", 4)]["exposed_prep_s"] \
+        <= by[("hash", 1)]["exposed_prep_s"] * 1.001
+
+    # heterogeneous array: one 980Pro among Optanes sets the critical path
+    dl = GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=256, fanouts=(6, 4),
+        data_plane="gids-merged-sharded", cache_lines=2048, window_depth=4,
+        n_shards=4, placement="hash", seed=3), ssd=INTEL_OPTANE)
+    dl.timeline.shard_specs = (SAMSUNG_980PRO, INTEL_OPTANE, INTEL_OPTANE,
+                               INTEL_OPTANE)
+    for _ in range(iters):
+        dl.next_batch()
+    het = dl.timeline.last_shard_burst
+    return {"points": points, "hetero": {
+        "straggler": het.straggler, "straggler_spec": het.straggler_spec,
+        "imbalance": het.imbalance}}
+
+
+def headline(num_nodes: int = 20_000, iters: int = 16) -> dict:
+    """Smoke numbers for BENCH_*.json + the CI shard-scaling gate."""
+    res = sweep(num_nodes, iters)
+    by = {(p["placement"], p["n_shards"]): p for p in res["points"]}
+    out = {}
+    for n in SHARD_COUNTS:
+        out[f"hash_{n}shard_exposed_prep_us"] = \
+            by[("hash", n)]["exposed_prep_s"] * 1e6
+    out["prep_speedup_4shard_vs_1shard"] = (
+        by[("hash", 1)]["exposed_prep_s"]
+        / max(by[("hash", 4)]["exposed_prep_s"], 1e-12))
+    out["skewed_4shard_exposed_prep_us"] = \
+        by[("skewed", 4)]["exposed_prep_s"] * 1e6
+    out["skewed_4shard_imbalance"] = by[("skewed", 4)]["imbalance"]
+    out["hetero_straggler_shard"] = res["hetero"]["straggler"]
+    out["hetero_straggler_spec"] = res["hetero"]["straggler_spec"]
+    out["hetero_imbalance"] = res["hetero"]["imbalance"]
+    return out
+
+
+def main():
+    res = sweep()
+    for p in res["points"]:
+        row(f"fig_shard_scaling_{p['placement']}_{p['n_shards']}ssd",
+            p["exposed_prep_s"] * 1e6,
+            f"imbalance={p['imbalance']:.3f}_straggler={p['straggler']}")
+    het = res["hetero"]
+    row("fig_shard_scaling_hetero_1x980pro_3xoptane", 0.0,
+        f"straggler_shard={het['straggler']}"
+        f"_spec={het['straggler_spec']}_imbalance={het['imbalance']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,10 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows; `python -m benchmarks.run [--quick]`.  `--json [path]` is the CI
-# smoke mode: fig13 + fig14 headline numbers as JSON (default BENCH_pr3.json)
-# so the perf trajectory is recorded per PR.  `--baseline PATH` compares the
-# fresh numbers against a committed earlier BENCH_*.json and exits non-zero
-# if the `gids` preset's e2e regressed (the model is deterministic, so the
-# tolerance only absorbs float/env noise).
+# smoke mode: fig13 + fig14 + shard-scaling headline numbers as JSON
+# (default BENCH_pr4.json) so the perf trajectory is recorded per PR.
+# `--baseline PATH` compares the fresh numbers against a committed earlier
+# BENCH_*.json and exits non-zero if the `gids` preset's e2e regressed (the
+# model is deterministic, so the tolerance only absorbs float/env noise).
 from __future__ import annotations
 
 import argparse
@@ -35,10 +35,11 @@ def check_baseline(payload: dict, baseline_path: str) -> None:
 
 
 def write_json_smoke(path: str, baseline: str | None = None) -> None:
-    from benchmarks import fig13_e2e, fig14_overlap
+    from benchmarks import fig13_e2e, fig14_overlap, fig_shard_scaling
     payload = {
         "fig13_e2e": fig13_e2e.headline(),
         "fig14_overlap": fig14_overlap.headline(),
+        "fig_shard_scaling": fig_shard_scaling.headline(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -50,6 +51,12 @@ def write_json_smoke(path: str, baseline: str | None = None) -> None:
         raise SystemExit(
             "MERGED REGRESSION: the gids-merged preset must beat gids e2e "
             f"(got {merged['e2e_speedup_gids_merged_vs_gids']:.4f}x)")
+    shards = payload["fig_shard_scaling"]
+    if shards["prep_speedup_4shard_vs_1shard"] <= 1.0:
+        raise SystemExit(
+            "SHARD-SCALING REGRESSION: 4-shard exposed prep must be "
+            "strictly below 1-shard (got "
+            f"{shards['prep_speedup_4shard_vs_1shard']:.4f}x speedup)")
     if baseline:
         check_baseline(payload, baseline)
 
@@ -59,10 +66,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow E2E figures")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", nargs="?", const="BENCH_pr3.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr4.json",
                     default=None, metavar="PATH",
-                    help="smoke mode: write fig13/fig14 headline numbers to "
-                         "PATH (default BENCH_pr3.json) and exit")
+                    help="smoke mode: write fig13/fig14/shard-scaling "
+                         "headline numbers to PATH (default BENCH_pr4.json) "
+                         "and exit")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="with --json: fail if the gids preset's e2e "
                          "regressed vs this earlier BENCH_*.json")
@@ -76,7 +84,8 @@ def main() -> None:
                             fig8_bandwidth_model, fig9_accumulator,
                             fig10_constant_buffer, fig11_window_buffering,
                             fig12_cache_size, fig13_e2e, fig14_overlap,
-                            fig15_ladies, roofline, tables)
+                            fig15_ladies, fig_shard_scaling, roofline,
+                            tables)
     suites = [
         ("tables", tables.main),
         ("fig3", fig3_request_rates.main),
@@ -89,6 +98,7 @@ def main() -> None:
         ("fig13_14", fig13_e2e.main),
         ("fig14_overlap", fig14_overlap.main),
         ("fig15", fig15_ladies.main),
+        ("fig_shard_scaling", fig_shard_scaling.main),
         ("roofline", roofline.main),
     ]
     if args.quick:

@@ -12,12 +12,17 @@ from .feature_store import (CoalescedReport, FeatureStore, GatherReport,
                             TieredFeatureStore)
 from .pipeline import Batch, BatchPlan, GIDSDataLoader, LoaderConfig
 from .prefetch import PrefetchEngine, PrefetchStats
+from .sharding import (PlacementPolicy, make_placement, placement_names,
+                       register_placement)
 from .software_cache import CacheStats, WindowBufferedCache, run_trace
 from .storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO, SSDSpec,
-                          StorageTimeline, coalesce_lines, model_burst,
+                          ShardedBurstResult, StorageTimeline,
+                          coalesce_lines, coalesce_lines_by_shard,
+                          model_burst, price_sharded_burst,
                           required_accesses, simulate_burst)
 from .tiers import (ConstantBufferTier, DeviceCacheTier, GatherPlan,
-                    KVSlotTier, StorageTier, Tier, build_plan)
+                    KVSlotTier, ShardedStorageTier, StorageTier, Tier,
+                    build_plan)
 
 __all__ = [
     "AccumulatorConfig", "DynamicAccessAccumulator", "MergedWindow",
@@ -27,9 +32,12 @@ __all__ = [
     "CoalescedReport", "FeatureStore", "GatherReport", "TieredFeatureStore",
     "Batch", "BatchPlan", "GIDSDataLoader", "LoaderConfig",
     "PrefetchEngine", "PrefetchStats",
+    "PlacementPolicy", "make_placement", "placement_names",
+    "register_placement",
     "CacheStats", "WindowBufferedCache", "run_trace", "INTEL_OPTANE",
-    "SAMSUNG_980PRO", "SSDSpec", "StorageTimeline", "coalesce_lines",
-    "model_burst", "required_accesses", "simulate_burst",
+    "SAMSUNG_980PRO", "SSDSpec", "ShardedBurstResult", "StorageTimeline",
+    "coalesce_lines", "coalesce_lines_by_shard", "model_burst",
+    "price_sharded_burst", "required_accesses", "simulate_burst",
     "ConstantBufferTier", "DeviceCacheTier", "GatherPlan", "KVSlotTier",
-    "StorageTier", "Tier", "build_plan",
+    "ShardedStorageTier", "StorageTier", "Tier", "build_plan",
 ]

@@ -20,7 +20,9 @@ The paper's three baselines are presets; new stacks register alongside them:
         tiers=(tier("constant_buffer", fraction=0.5), tier("storage"))))
 
 Tier kinds themselves are also open — `register_tier_kind` admits user
-factories, which is the seam sharded tiers / async prefetch plug into.
+factories; the `sharded_storage` kind (a `ShardedStorageTier` over a
+registered placement policy, see core/sharding.py) and the prefetching
+presets both arrived through this seam.
 """
 from __future__ import annotations
 
@@ -63,12 +65,16 @@ class BuildContext:
     cbuf_fraction: float = 0.1
     cbuf_selection: str = "pagerank"
     seed: int = 0
+    # sharded-storage knobs (multi-SSD namespace)
+    n_shards: int = 1
+    placement: str = "hash"
+    shard_specs: Any = None           # per-shard SSDSpecs (heterogeneous)
     # serve-engine knobs (KV slot pool)
     slots: int = 0
     bytes_per_slot: int = 0
 
     _KNOBS = ("cache_lines", "cache_ways", "window_depth", "cbuf_fraction",
-              "cbuf_selection", "seed")
+              "cbuf_selection", "seed", "n_shards", "placement")
 
     def absorb(self, config: Any) -> "BuildContext":
         for k in self._KNOBS:
@@ -138,6 +144,30 @@ def _make_storage(ctx: BuildContext) -> Tier:
     if ctx.features is None:
         raise ValueError("storage tier needs features in the BuildContext")
     return StorageTier(ctx.features)
+
+
+@register_tier_kind("sharded_storage")
+def _make_sharded_storage(ctx: BuildContext, n_shards=None, placement=None,
+                          specs=None) -> Tier:
+    """The storage backstop partitioned across `n_shards` SSD queues by a
+    registered placement policy (core/sharding.py: hash / range / degree /
+    skewed, plus user registrations).  `specs` may be a single SSDSpec or
+    one per shard (heterogeneous arrays)."""
+    from .sharding import make_placement
+    from .tiers import ShardedStorageTier
+    if ctx.features is None:
+        raise ValueError("sharded_storage tier needs features in the "
+                         "BuildContext")
+    n_shards = ctx.n_shards if n_shards is None else n_shards
+    placement = ctx.placement if placement is None else placement
+    degrees = None
+    if ctx.graph is not None and hasattr(ctx.graph, "degrees"):
+        degrees = ctx.graph.degrees()
+    policy = make_placement(placement, n_shards,
+                            num_nodes=len(ctx.features), degrees=degrees,
+                            seed=ctx.seed)
+    specs = ctx.shard_specs if specs is None else specs
+    return ShardedStorageTier(ctx.features, policy, specs=specs)
 
 
 @register_tier_kind("kv_slots")
@@ -359,6 +389,28 @@ DataPlaneSpec.register(DataPlaneSpec(
                 "engine: whole deduplicated windows are staged ahead of "
                 "consumption and each batch's amortized burst share is "
                 "discounted by the compute it overlapped."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="gids-sharded",
+    tiers=(tier("window_cache"), tier("constant_buffer"),
+           tier("sharded_storage")),
+    pricing="overlapped", lookahead=True,
+    description="GIDS over a storage namespace partitioned across n_shards "
+                "SSD queues (BuildContext.n_shards / LoaderConfig.n_shards; "
+                "placement policy from core/sharding.py): each shard drains "
+                "its own queue at its own spec and the batch completes at "
+                "the slowest shard (§4.2 multi-SSD scaling, per-queue)."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="gids-merged-sharded",
+    tiers=(tier("window_cache"), tier("constant_buffer"),
+           tier("sharded_storage")),
+    pricing="overlapped", lookahead=True, merge_execute=True,
+    description="Merged-window execution over the sharded namespace: the "
+                "deduplicated window's storage rows split per shard, 4 KB-"
+                "line coalescing is shard-local ((shard, line) keys), and "
+                "the window prices as per-shard bursts completing at the "
+                "max over shards (straggler telemetry included)."))
 
 DataPlaneSpec.register(DataPlaneSpec(
     name="pinned-host",

@@ -25,14 +25,13 @@ classic cache/cbuf/storage stack from keyword components.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Sequence
 
 import numpy as np
 
 from .constant_buffer import ConstantBuffer
 from .software_cache import WindowBufferedCache
-from .storage_sim import IO_BYTES, coalesce_lines
+from .storage_sim import IO_BYTES, coalesce_lines, coalesce_lines_by_shard
 from .tiers import (ConstantBufferTier, DeviceCacheTier, GatherPlan,
                     StorageTier, Tier, build_plan, build_plan_merged)
 
@@ -42,13 +41,20 @@ class GatherReport:
     """Per-batch tier split.  `bytes_per_row` is the size of ONE feature row
     (dim * itemsize) — multiply by a count to get transfer bytes.  The
     `n_hbm_hits` / `n_host_hits` / `n_storage` views aggregate tiers by
-    latency class so pricing and telemetry are stack-shape-agnostic."""
+    latency class so pricing and telemetry are stack-shape-agnostic.
+
+    On a sharded storage namespace `shard_rows` carries the per-shard split
+    of this report's storage-bound requests (`n_shards` entries summing to
+    `n_storage`); empty on an unsharded plane.  Per-shard pricing and the
+    straggler/imbalance telemetry key off it."""
 
     n_requests: int
     bytes_per_row: int
     tier_names: tuple[str, ...]
     tier_classes: tuple[str, ...]
     tier_counts: tuple[int, ...]
+    n_shards: int = 1
+    shard_rows: tuple[int, ...] = ()
 
     def _class_count(self, latency_class: str) -> int:
         return sum(n for c, n in zip(self.tier_classes, self.tier_counts)
@@ -71,21 +77,28 @@ class GatherReport:
         return self.n_requests - self.n_storage
 
     @property
-    def feat_bytes(self) -> int:
-        warnings.warn(
-            "GatherReport.feat_bytes is deprecated (it was always bytes per "
-            "ROW, not per batch); use GatherReport.bytes_per_row",
-            DeprecationWarning, stacklevel=2)
-        return self.bytes_per_row
+    def shard_imbalance(self) -> float:
+        """Max-over-mean of the per-shard storage row counts; 1.0 when
+        balanced (or unsharded).  Row-count imbalance — the time-domain
+        version (device-aware) lives on `ShardedBurstResult`."""
+        if not self.shard_rows or sum(self.shard_rows) == 0:
+            return 1.0
+        return max(self.shard_rows) / (sum(self.shard_rows)
+                                       / len(self.shard_rows))
 
     @classmethod
     def from_plan(cls, plan: GatherPlan, bytes_per_row: int) -> "GatherReport":
+        ns = plan.n_shards
+        shard_rows = ()
+        if ns > 1:
+            shard_rows = tuple(int(c) for c in plan.shard_counts())
         return cls(
             n_requests=len(plan.node_ids),
             bytes_per_row=bytes_per_row,
             tier_names=tuple(t.name for t in plan.tiers),
             tier_classes=tuple(t.latency_class for t in plan.tiers),
             tier_counts=tuple(int(c) for c in plan.counts()),
+            n_shards=ns, shard_rows=shard_rows,
         )
 
 
@@ -108,7 +121,14 @@ class CoalescedReport(GatherReport):
     n_storage_unique: unique rows the fold assigned to the storage tier
     n_storage_lines:  4 KB IOs after coalescing storage rows that share a
                       line (< n_storage_unique when rows are narrower than
-                      one line and neighbours were both requested)
+                      one line and neighbours were both requested).
+                      Coalescing is SHARD-LOCAL on a sharded namespace —
+                      rows sharing a logical line but living on different
+                      shards are separate IOs
+    shard_lines:      per-shard coalesced IO counts (sums to
+                      n_storage_lines); empty on an unsharded plane.
+                      Pairs with the inherited `shard_rows` to drive the
+                      max-over-shards burst pricing
     """
 
     window_batches: int = 1
@@ -117,6 +137,7 @@ class CoalescedReport(GatherReport):
     n_duplicate: int = 0
     n_storage_unique: int = 0
     n_storage_lines: int = 0
+    shard_lines: tuple[int, ...] = ()
 
     @property
     def dedup_factor(self) -> float:
@@ -235,12 +256,25 @@ class TieredFeatureStore:
             rows = np.asarray(self.features[unique])
         bytes_per_row = self.feature_dim * self.itemsize
 
-        storage_tiers = [i for i, t in enumerate(plan.tiers)
-                         if t.latency_class == "storage"]
-        storage_mask = np.isin(plan.assignment, storage_tiers)
+        storage_mask = plan.storage_mask()
         n_storage_unique = int(storage_mask.sum())
-        n_storage_lines = coalesce_lines(unique[storage_mask], bytes_per_row,
-                                         io_bytes)
+        n_shards = plan.n_shards
+        # shard-local coalescing: the line key is (shard, line) — rows on
+        # the same logical 4 KB line but different devices are separate IOs
+        shard = plan.shard if plan.shard is not None \
+            else np.where(storage_mask, 0, -1).astype(np.int16)
+        shard_rows, shard_lines = (), ()
+        if n_shards > 1:
+            shard_rows = tuple(int(c) for c in np.bincount(
+                shard[storage_mask], minlength=n_shards))
+            per_shard = coalesce_lines_by_shard(
+                unique[storage_mask], shard[storage_mask], n_shards,
+                bytes_per_row, io_bytes)
+            shard_lines = tuple(int(c) for c in per_shard)
+            n_storage_lines = int(per_shard.sum())
+        else:
+            n_storage_lines = coalesce_lines(unique[storage_mask],
+                                             bytes_per_row, io_bytes)
         window_stats = dict(
             window_batches=merged.n_batches,
             window_requests=merged.n_requests,
@@ -248,15 +282,18 @@ class TieredFeatureStore:
             n_duplicate=merged.n_duplicate,
             n_storage_unique=n_storage_unique,
             n_storage_lines=n_storage_lines,
+            shard_lines=shard_lines,
         )
         tier_meta = dict(
             bytes_per_row=bytes_per_row,
             tier_names=tuple(t.name for t in plan.tiers),
             tier_classes=tuple(t.latency_class for t in plan.tiers),
+            n_shards=n_shards,
         )
         window_report = CoalescedReport(
             n_requests=merged.n_unique,
             tier_counts=tuple(int(c) for c in plan.counts()),
+            shard_rows=shard_rows,
             **tier_meta, **window_stats)
 
         rows_list, reports = [], []
@@ -265,9 +302,15 @@ class TieredFeatureStore:
             rows_list.append(rows[inv])
             counts = np.bincount(plan.assignment[inv],
                                  minlength=len(plan.tiers))
+            batch_shard_rows = ()
+            if n_shards > 1:
+                bsm = shard[inv] >= 0
+                batch_shard_rows = tuple(int(c) for c in np.bincount(
+                    shard[inv][bsm], minlength=n_shards))
             reports.append(CoalescedReport(
                 n_requests=len(inv),
                 tier_counts=tuple(int(c) for c in counts),
+                shard_rows=batch_shard_rows,
                 **tier_meta, **window_stats))
         self.last_plan = plan
         return rows_list, reports, window_report
@@ -293,6 +336,26 @@ class TieredFeatureStore:
     def reset(self) -> None:
         for t in self.tiers:
             t.reset()
+
+    # -- checkpoint ------------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Durable per-tier state, keyed by tier name.  Only tiers exposing
+        `state_dict` contribute (today: the sharded backstop's placement
+        assignment — cache contents are deliberately NOT checkpointed, they
+        rebuild deterministically on resume)."""
+        return {t.name: t.state_dict() for t in self.tiers
+                if hasattr(t, "state_dict")}
+
+    def load_state_dict(self, state: dict) -> None:
+        by_name = {t.name: t for t in self.tiers}
+        for name, tier_state in state.items():
+            tier = by_name.get(name)
+            if tier is None or not hasattr(tier, "load_state_dict"):
+                raise ValueError(
+                    f"checkpoint carries state for tier {name!r} but the "
+                    f"stack has no such stateful tier "
+                    f"({sorted(by_name)}) — plane/checkpoint mismatch")
+            tier.load_state_dict(tier_state)
 
     def device_rows(self, tier_index: int = 0) -> np.ndarray:
         """The HBM row store of a device tier, as the `tiered_gather` Pallas

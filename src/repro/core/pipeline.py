@@ -39,6 +39,18 @@ merge telemetry (`window_batches`, `window_requests`, `n_unique`,
 `prefetch > 0` as well (`gids-merged-async`) the prefetch engine stages
 whole merged windows ahead of consumption.
 
+On a *sharded* plane (`gids-sharded`, `gids-merged-sharded`) the storage
+backstop is a `ShardedStorageTier`: the feature namespace is partitioned
+across `LoaderConfig.n_shards` SSD queues by a registered placement policy
+(`LoaderConfig.placement`; core/sharding.py), every storage-bound request
+carries its shard id through the `GatherPlan`, 4 KB-line coalescing is
+shard-local, and pricing completes each burst at the MAX over per-shard
+queue drains (`storage_sim.price_sharded_burst` — the loader wires the
+tier's per-shard `SSDSpec`s into `StorageTimeline.shard_specs`, and
+`timeline.last_shard_burst` reports the straggler shard and queue
+imbalance).  Features, blocks, and per-tier counts are bit-identical to the
+unsharded plane — only the storage pricing and shard telemetry change.
+
 Other orchestration, common to both stages:
 
   * the accumulator recomputes the merge depth from live telemetry
@@ -98,6 +110,11 @@ class LoaderConfig:
     cbuf_selection: str = "pagerank"
     target_efficiency: float = 0.95
     n_ssd: int = 1
+    # sharded-storage planes (gids-sharded / gids-merged-sharded): how many
+    # SSD shards partition the feature namespace, and which registered
+    # placement policy (core/sharding.py) decides node -> shard
+    n_shards: int = 1
+    placement: str = "hash"
     seed: int = 0
     # deprecated spelling of data_plane; kept so old call sites keep running
     mode: dataclasses.InitVar[str | None] = None
@@ -178,6 +195,19 @@ class GIDSDataLoader:
                                    n_ssd=cfg.n_ssd,
                                    max_merge_iters=max(cfg.window_depth, 8)))
         self.timeline = StorageTimeline(ssd, cfg.n_ssd)
+        # a sharded backstop prices per shard queue: hand the timeline the
+        # per-shard device specs (heterogeneous arrays keep their own; a
+        # spec-less tier inherits this loader's device on every shard)
+        backstop = self.store.tiers[-1]
+        if hasattr(backstop, "resolve_shard_specs"):
+            if getattr(backstop, "n_shards", 1) > 1 and cfg.n_ssd > 1:
+                raise ValueError(
+                    f"n_ssd={cfg.n_ssd} with a {backstop.n_shards}-shard "
+                    "storage tier: the legacy pooled-queue multiplier and "
+                    "per-shard queues model the same devices twice — on a "
+                    "sharded plane set n_shards (one queue per SSD) and "
+                    "leave n_ssd=1")
+            self.timeline.shard_specs = backstop.resolve_shard_specs(ssd)
         self._lookahead: deque[tuple[dict, SampledBlocks]] = deque()
         self._win_idx = 0   # lookahead entries already pushed to cache window
         # merged-window planes stage whole executed windows here (snapshot
@@ -328,14 +358,33 @@ class GIDSDataLoader:
         if self.prefetch is not None:
             snap = self.prefetch.oldest_snapshot()
             if snap is not None:
-                return dict(snap)
+                return self._with_tier_state(dict(snap))
         if self._merged_ready:
             # mid-window: the oldest executed-but-unconsumed batch's snapshot
-            return dict(self._merged_ready[0][0])
+            return self._with_tier_state(dict(self._merged_ready[0][0]))
         if self._lookahead:
-            return dict(self._lookahead[0][0])
-        return {"rng": self.rng.bit_generator.state,
-                "requests_per_iter": self._requests_per_iter}
+            return self._with_tier_state(dict(self._lookahead[0][0]))
+        return self._with_tier_state(
+            {"rng": self.rng.bit_generator.state,
+             "requests_per_iter": self._requests_per_iter})
+
+    def _with_tier_state(self, state: dict) -> dict:
+        """Attach durable tier state (shard placement assignment) to a
+        sampler snapshot.  Cache contents rebuild deterministically on
+        resume and are deliberately absent; placement is namespace layout
+        and must round-trip.
+
+        Capture happens at CHECKPOINT time, not when the snapshot's batch
+        was staged (a per-snapshot copy would clone the whole placement
+        table for every staged batch — prohibitive at real node counts).
+        Contract for a future mutable placement: quiesce staged batches
+        (drain the prefetch queue / finish the merged window) before
+        mutating, else resume replays staged work under the post-mutation
+        assignment."""
+        tier_state = self.store.state_dict()
+        if tier_state:
+            state["tier_state"] = tier_state
+        return state
 
     def load_state_dict(self, state: dict) -> None:
         self.rng.bit_generator.state = state["rng"]
@@ -349,4 +398,6 @@ class GIDSDataLoader:
             self.prefetch.reset()
         self._merged_ready.clear()
         self.plane.reset()
+        if "tier_state" in state:
+            self.store.load_state_dict(state["tier_state"])
         self.accumulator.reset_telemetry()

@@ -26,6 +26,12 @@ staging unit is the whole merged window: `plan_window()` /
 `execute_window()` dedupe and price a window of batches as one burst, and
 every batch of the window enters the ready queue together, each with its
 own resume snapshot.
+
+Sharded planes (`gids-sharded`, `gids-merged-sharded`) need nothing extra
+here: shard awareness rides inside the loader's execute stages — the plans
+the engine stages already carry per-request shard ids through their
+`GatherPlan`s, and the prep times it discounts were already priced at the
+max over per-shard queue drains.
 """
 from __future__ import annotations
 

@@ -1,0 +1,242 @@
+"""Sharded storage namespace — placement policies for multi-SSD planes.
+
+The paper's throughput headline scales with the number of SSDs (§4.2's burst
+model is parameterised by ``n_ssd``), and the BaM lineage behind GIDS treats
+the storage namespace as a *striped array of independent queues*: each shard
+drains at its own device's rate and the batch completes when the slowest
+shard does.  This module owns the question "which shard holds node i" — a
+pluggable `PlacementPolicy` resolved through a registry, so the
+`ShardedStorageTier` (core/tiers.py), the per-shard burst pricing
+(`storage_sim.price_sharded_burst`), and a future across-hosts variant all
+share one placement vocabulary:
+
+  hash    — Fibonacci-hash striping; balanced in expectation for any id
+            distribution (the default)
+  range   — contiguous id blocks, one per shard; preserves the namespace's
+            physical row order (coalescing-friendly, skew-prone on power-law
+            access patterns)
+  degree  — degree-aware striping: nodes sorted by degree, dealt round-robin
+            across shards so the hot high-degree head of a power-law graph
+            never lands on one queue
+  skewed  — a deliberately imbalanced hash (shard 0 oversubscribed) used by
+            `benchmarks/fig_shard_scaling.py` to show the modelled plane
+            degrades gracefully, not cliff-like, under bad placement
+
+Policies are pure functions of the node id namespace (plus static graph
+metadata for `degree`), so shard assignment is deterministic and
+checkpoint-stable; `state_dict`/`load_state_dict` round-trip the assignment
+anyway so a future *mutable* policy (online rebalancing) inherits resume
+support for free.
+"""
+from __future__ import annotations
+
+from typing import Callable, Protocol, runtime_checkable
+
+import numpy as np
+
+#: Fibonacci multiplier shared with the software cache's set hash — a
+#: different shift keeps shard striping decorrelated from set indexing.
+_FIB = np.uint64(0x9E3779B97F4A7C15)
+
+
+def _mix(ids: np.ndarray) -> np.ndarray:
+    """The shared Fibonacci mix both hash-family policies stripe with —
+    one definition so their bit recipes can never silently diverge."""
+    return (ids.astype(np.uint64) * _FIB) >> np.uint64(40)
+
+
+@runtime_checkable
+class PlacementPolicy(Protocol):
+    """Maps node ids onto storage shards.  `shard_of` must be deterministic
+    between calls (the merged executor and the pricing model both resolve the
+    same ids) and total over the id namespace."""
+
+    name: str
+    n_shards: int
+
+    def shard_of(self, node_ids: np.ndarray) -> np.ndarray: ...
+
+    def state_dict(self) -> dict: ...
+
+    def load_state_dict(self, state: dict) -> None: ...
+
+
+class _PolicyBase:
+    """Shared shape checks + default (parameter-only) checkpoint state."""
+
+    name = "placement"
+
+    def __init__(self, n_shards: int):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = int(n_shards)
+
+    def _ids(self, node_ids: np.ndarray) -> np.ndarray:
+        return np.asarray(node_ids, dtype=np.int64)
+
+    def state_dict(self) -> dict:
+        return {"name": self.name, "n_shards": self.n_shards}
+
+    def load_state_dict(self, state: dict) -> None:
+        if state.get("name", self.name) != self.name \
+                or state.get("n_shards", self.n_shards) != self.n_shards:
+            raise ValueError(
+                f"placement state {state.get('name')!r}/"
+                f"{state.get('n_shards')} does not match policy "
+                f"{self.name!r}/{self.n_shards}")
+
+
+# -- registry ------------------------------------------------------------------
+
+PlacementFactory = Callable[..., PlacementPolicy]
+_PLACEMENTS: dict[str, PlacementFactory] = {}
+
+
+def register_placement(name: str) -> Callable[[PlacementFactory],
+                                              PlacementFactory]:
+    """Register a factory ``(n_shards, *, num_nodes, degrees, seed) ->
+    PlacementPolicy`` under `name`.  The factory receives every context
+    keyword and ignores what it does not need, so new policies (locality-,
+    score-, or host-topology-aware) slot in without touching callers."""
+    def deco(fn: PlacementFactory) -> PlacementFactory:
+        _PLACEMENTS[name] = fn
+        return fn
+    return deco
+
+
+def placement_names() -> tuple[str, ...]:
+    return tuple(sorted(_PLACEMENTS))
+
+
+def make_placement(name: str, n_shards: int, *, num_nodes: int | None = None,
+                   degrees: np.ndarray | None = None,
+                   seed: int = 0) -> PlacementPolicy:
+    try:
+        factory = _PLACEMENTS[name]
+    except KeyError:
+        raise KeyError(f"unknown placement policy {name!r}; registered: "
+                       f"{placement_names()}") from None
+    return factory(n_shards, num_nodes=num_nodes, degrees=degrees, seed=seed)
+
+
+# -- the built-in policies -----------------------------------------------------
+
+class HashPlacement(_PolicyBase):
+    """Fibonacci-hash striping: balanced in expectation regardless of the id
+    distribution, no per-node state."""
+
+    name = "hash"
+
+    def shard_of(self, node_ids: np.ndarray) -> np.ndarray:
+        mixed = _mix(self._ids(node_ids))
+        return (mixed % np.uint64(self.n_shards)).astype(np.int16)
+
+
+@register_placement("hash")
+def _make_hash(n_shards: int, **_ctx) -> HashPlacement:
+    return HashPlacement(n_shards)
+
+
+class RangePlacement(_PolicyBase):
+    """Contiguous id blocks: shard s owns rows
+    ``[s * rows_per_shard, (s+1) * rows_per_shard)``.  Keeps each shard's
+    rows physically adjacent (a range shard is one file / one namespace),
+    at the cost of skew when hot ids cluster."""
+
+    name = "range"
+
+    def __init__(self, n_shards: int, num_nodes: int):
+        super().__init__(n_shards)
+        if num_nodes is None or num_nodes < 1:
+            raise ValueError("range placement needs the namespace size "
+                             "(num_nodes)")
+        self.num_nodes = int(num_nodes)
+        self.rows_per_shard = -(-self.num_nodes // self.n_shards)  # ceil
+
+    def shard_of(self, node_ids: np.ndarray) -> np.ndarray:
+        shard = self._ids(node_ids) // self.rows_per_shard
+        return np.clip(shard, 0, self.n_shards - 1).astype(np.int16)
+
+    def state_dict(self) -> dict:
+        return {**super().state_dict(), "num_nodes": self.num_nodes}
+
+    def load_state_dict(self, state: dict) -> None:
+        super().load_state_dict(state)
+        # shard boundaries derive from the namespace size: restoring against
+        # a different-size feature array would silently shift every boundary
+        if state.get("num_nodes", self.num_nodes) != self.num_nodes:
+            raise ValueError(
+                f"range placement checkpointed over {state.get('num_nodes')} "
+                f"nodes, namespace has {self.num_nodes} — shard boundaries "
+                "would shift")
+
+
+@register_placement("range")
+def _make_range(n_shards: int, *, num_nodes=None, **_ctx) -> RangePlacement:
+    return RangePlacement(n_shards, num_nodes)
+
+
+class DegreePlacement(_PolicyBase):
+    """Degree-aware striping: nodes sorted by degree (descending, stable)
+    are dealt round-robin across shards, so the hot high-degree head of a
+    power-law graph spreads over every queue instead of hammering one.  The
+    assignment is a materialized per-node table — the part a checkpoint must
+    round-trip, and the seam an online rebalancer would mutate."""
+
+    name = "degree"
+
+    def __init__(self, n_shards: int, degrees: np.ndarray):
+        super().__init__(n_shards)
+        if degrees is None:
+            raise ValueError("degree placement needs per-node degrees "
+                             "(pass a graph to the tier factory)")
+        degrees = np.asarray(degrees)
+        order = np.argsort(-degrees, kind="stable")
+        table = np.empty(len(degrees), np.int16)
+        table[order] = np.arange(len(degrees), dtype=np.int64) % self.n_shards
+        self.table = table
+
+    def shard_of(self, node_ids: np.ndarray) -> np.ndarray:
+        return self.table[self._ids(node_ids)]
+
+    def state_dict(self) -> dict:
+        return {**super().state_dict(), "table": self.table.copy()}
+
+    def load_state_dict(self, state: dict) -> None:
+        super().load_state_dict(state)
+        table = np.asarray(state["table"], np.int16)
+        if table.shape != self.table.shape:
+            raise ValueError(
+                f"degree placement table shape {table.shape} does not match "
+                f"namespace {self.table.shape}")
+        self.table = table.copy()
+
+
+@register_placement("degree")
+def _make_degree(n_shards: int, *, degrees=None, **_ctx) -> DegreePlacement:
+    return DegreePlacement(n_shards, degrees)
+
+
+class SkewedPlacement(_PolicyBase):
+    """A deliberately bad hash for the degradation benchmark: shard 0 gets
+    `n_shards` weight slots to every other shard's one, so it owns
+    ``n / (2n - 1)`` of the namespace (half, in the large-n limit) and the
+    max-over-shards pricing exposes the straggler queue."""
+
+    name = "skewed"
+
+    def __init__(self, n_shards: int):
+        super().__init__(n_shards)
+        weights = np.ones(self.n_shards, np.int64)
+        weights[0] = self.n_shards
+        self.slots = np.repeat(np.arange(self.n_shards, dtype=np.int16),
+                               weights)
+
+    def shard_of(self, node_ids: np.ndarray) -> np.ndarray:
+        mixed = _mix(self._ids(node_ids))
+        return self.slots[mixed % np.uint64(len(self.slots))]
+
+
+@register_placement("skewed")
+def _make_skewed(n_shards: int, **_ctx) -> SkewedPlacement:
+    return SkewedPlacement(n_shards)

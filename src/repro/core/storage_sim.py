@@ -103,7 +103,8 @@ def simulate_burst(spec: SSDSpec, n_requests: int, n_ssd: int = 1,
 
 
 def coalesce_lines(node_ids: np.ndarray, bytes_per_row: int,
-                   io_bytes: int = IO_BYTES) -> int:
+                   io_bytes: int = IO_BYTES,
+                   shard: np.ndarray | None = None) -> int:
     """Number of `io_bytes`-granule IOs needed to fetch the given storage
     rows, assuming rows are laid out contiguously by node id (the storage
     namespace is the feature array itself).
@@ -113,7 +114,13 @@ def coalesce_lines(node_ids: np.ndarray, bytes_per_row: int,
     a single IO for all of them (`rows_per_line = io_bytes // bytes_per_row`,
     row-aligned — a row never straddles two lines in this model).  Rows at
     or above the line size cost `ceil(bytes_per_row / io_bytes)` IOs each
-    and nothing coalesces."""
+    and nothing coalesces.
+
+    With `shard` (per-row shard ids from a sharded storage tier) coalescing
+    is SHARD-LOCAL: the line key is the `(shard, line)` tuple, because two
+    rows that share a logical 4 KB line but live on different devices are
+    two physical IOs — one per queue — and merging them would under-price
+    every sharded plane."""
     n = len(node_ids)
     if n == 0 or bytes_per_row <= 0:
         return 0
@@ -122,7 +129,116 @@ def coalesce_lines(node_ids: np.ndarray, bytes_per_row: int,
     rows_per_line = io_bytes // bytes_per_row
     if rows_per_line <= 1:
         return n
-    return len(np.unique(np.asarray(node_ids) // rows_per_line))
+    lines = np.asarray(node_ids, np.int64) // rows_per_line
+    if shard is None:
+        return len(np.unique(lines))
+    key = np.asarray(shard, np.int64) * (int(lines.max()) + 1) + lines
+    return len(np.unique(key))
+
+
+def coalesce_lines_by_shard(node_ids: np.ndarray, shard: np.ndarray,
+                            n_shards: int, bytes_per_row: int,
+                            io_bytes: int = IO_BYTES) -> np.ndarray:
+    """Per-shard 4 KB IO counts after shard-local coalescing, (n_shards,).
+    Sums to `coalesce_lines(..., shard=shard)`; feeds the per-shard queue
+    drain in `price_sharded_burst`.  One vectorized (shard, line) unique +
+    bincount pass — no per-shard rescans."""
+    shard = np.asarray(shard)
+    node_ids = np.asarray(node_ids, np.int64)
+    n = len(node_ids)
+    if n == 0 or bytes_per_row <= 0:
+        return np.zeros(n_shards, np.int64)
+    if bytes_per_row >= io_bytes:
+        per_row = int(-(-bytes_per_row // io_bytes))
+        return np.bincount(shard, minlength=n_shards).astype(np.int64) \
+            * per_row
+    rows_per_line = io_bytes // bytes_per_row
+    if rows_per_line <= 1:
+        return np.bincount(shard, minlength=n_shards).astype(np.int64)
+    lines = node_ids // rows_per_line
+    stride = int(lines.max()) + 1
+    key = shard.astype(np.int64) * stride + lines
+    uniq = np.unique(key)
+    return np.bincount(uniq // stride, minlength=n_shards).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBurstResult:
+    """Per-shard drain telemetry for one storage burst over a sharded
+    namespace.  `elapsed_s` is the max over shards — the slowest queue sets
+    the critical path — and `straggler` names which shard that was, so
+    placement skew and heterogeneous devices are measurable, not just
+    modelled."""
+
+    per_shard_s: tuple[float, ...]
+    per_shard_rows: tuple[int, ...]
+    per_shard_lines: tuple[int, ...]
+    spec_names: tuple[str, ...]
+    ssd_bytes: int                    # total line-capped transfer bytes
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.per_shard_s)
+
+    @property
+    def elapsed_s(self) -> float:
+        return max(self.per_shard_s) if self.per_shard_s else 0.0
+
+    @property
+    def straggler(self) -> int:
+        """Index of the shard whose queue drained last."""
+        return int(np.argmax(self.per_shard_s)) if self.per_shard_s else 0
+
+    @property
+    def straggler_spec(self) -> str:
+        return self.spec_names[self.straggler] if self.spec_names else ""
+
+    @property
+    def imbalance(self) -> float:
+        """Queue imbalance: slowest shard's drain over the mean drain.  1.0
+        = perfectly balanced; the modelled speedup lost to placement skew or
+        a straggler device."""
+        mean = float(np.mean(self.per_shard_s)) if self.per_shard_s else 0.0
+        return self.elapsed_s / mean if mean > 0 else 1.0
+
+
+def price_sharded_burst(specs, shard_rows, shard_lines, bytes_per_row: int,
+                        io_bytes: int = IO_BYTES,
+                        shard_outstanding=None) -> ShardedBurstResult:
+    """Price one storage burst over a sharded namespace: each shard drains
+    its OWN queue at its OWN `SSDSpec` (Eq. 2-3 efficiency from that queue's
+    concurrency alone — outstanding requests on shard a do not help shard b
+    ramp), and the burst completes at the max over shards.
+
+    `shard_rows` / `shard_lines` are per-shard unique storage row and
+    coalesced 4 KB IO counts (`coalesce_lines_by_shard`); per-shard transfer
+    is capped at line granularity exactly like the unsharded
+    `price_merged_burst` accounting.  `shard_outstanding` overrides the
+    per-shard queue depth used for the efficiency ramp (defaults to each
+    shard's actual row count — the burst's real concurrency)."""
+    specs = tuple(specs)
+    shard_rows = tuple(int(r) for r in shard_rows)
+    shard_lines = tuple(int(l) for l in shard_lines)
+    if not (len(specs) == len(shard_rows) == len(shard_lines)):
+        raise ValueError(
+            f"shard arity mismatch: {len(specs)} specs, {len(shard_rows)} "
+            f"row counts, {len(shard_lines)} line counts")
+    if shard_outstanding is None:
+        shard_outstanding = shard_rows
+    per_shard_s, total_bytes = [], 0
+    for spec, rows, lines, out in zip(specs, shard_rows, shard_lines,
+                                      shard_outstanding):
+        if rows <= 0:
+            per_shard_s.append(0.0)
+            continue
+        eff = model_burst(spec, max(int(out), 1), n_ssd=1).efficiency
+        ssd_bytes = min(rows * bytes_per_row, lines * io_bytes)
+        total_bytes += ssd_bytes
+        per_shard_s.append(ssd_bytes / (spec.peak_bw * eff))
+    return ShardedBurstResult(
+        per_shard_s=tuple(per_shard_s), per_shard_rows=shard_rows,
+        per_shard_lines=shard_lines,
+        spec_names=tuple(s.name for s in specs), ssd_bytes=total_bytes)
 
 
 def overlap_exposed(prep_s: float, compute_s: float) -> float:
@@ -139,10 +255,18 @@ class StorageTimeline:
     Serves batches of requests split across tiers; returns elapsed time for
     the storage portion assuming perfect overlap within a batch (GIDS) or
     serial page-fault handling (mmap baseline).
+
+    With `shard_specs` set (the loader wires it from a `ShardedStorageTier`
+    backstop) the storage portion is priced per shard — each shard drains
+    its own queue at its own device and the batch completes at the max over
+    shards — and `last_shard_burst` keeps the most recent per-shard drain
+    telemetry (`ShardedBurstResult`: straggler shard, queue imbalance).
     """
 
-    def __init__(self, spec: SSDSpec, n_ssd: int = 1):
+    def __init__(self, spec: SSDSpec, n_ssd: int = 1, shard_specs=None):
         self.spec, self.n_ssd = spec, n_ssd
+        self.shard_specs = tuple(shard_specs) if shard_specs else None
+        self.last_shard_burst: ShardedBurstResult | None = None
 
     def price_batch(self, report, outstanding: int,
                     policy: str = "overlapped") -> float:
@@ -158,6 +282,11 @@ class StorageTimeline:
             return self.mmap_batch_time(n_storage=report.n_requests,
                                         n_page_cache=0, feat_bytes=bpr)
         if policy == "overlapped":
+            if self.shard_specs and getattr(report, "shard_rows", ()):
+                return self.gids_batch_time_sharded(
+                    shard_rows=report.shard_rows, n_host=report.n_host_hits,
+                    n_hbm=report.n_hbm_hits, feat_bytes=bpr,
+                    outstanding=outstanding)
             return self.gids_batch_time(
                 n_storage=report.n_storage, n_host=report.n_host_hits,
                 n_hbm=report.n_hbm_hits, feat_bytes=bpr,
@@ -196,17 +325,31 @@ class StorageTimeline:
         — not the accumulator's modelled outstanding; the Eq. 2-3 ramp is
         paid once per window instead of once per batch.
 
+        On a sharded namespace (`shard_specs` set and the report carrying
+        per-shard row/line counts) the SSD term is the max over per-shard
+        queue drains (`price_sharded_burst`) instead of one pooled burst;
+        PCIe still caps the combined ingress.
+
         Returns TOTAL window seconds; the caller amortizes per batch."""
         bpr = report.bytes_per_row
         n_rows = report.n_storage
-        lines = getattr(report, "n_storage_lines", n_rows)
-        if outstanding is None:
-            outstanding = max(n_rows, 1)
-        eff = model_burst(self.spec, max(outstanding, 1),
-                          self.n_ssd).efficiency
-        ssd_bytes = min(n_rows * bpr, lines * io_bytes) if n_rows else 0
-        t_ssd = ssd_bytes / (self.spec.peak_bw * self.n_ssd * eff) \
-            if n_rows else 0.0
+        if self.shard_specs and getattr(report, "shard_rows", ()):
+            shard_lines = (report.shard_lines if
+                           getattr(report, "shard_lines", ())
+                           else report.shard_rows)
+            burst = price_sharded_burst(self.shard_specs, report.shard_rows,
+                                        shard_lines, bpr, io_bytes)
+            self.last_shard_burst = burst
+            t_ssd, ssd_bytes = burst.elapsed_s, burst.ssd_bytes
+        else:
+            lines = getattr(report, "n_storage_lines", n_rows)
+            if outstanding is None:
+                outstanding = max(n_rows, 1)
+            eff = model_burst(self.spec, max(outstanding, 1),
+                              self.n_ssd).efficiency
+            ssd_bytes = min(n_rows * bpr, lines * io_bytes) if n_rows else 0
+            t_ssd = ssd_bytes / (self.spec.peak_bw * self.n_ssd * eff) \
+                if n_rows else 0.0
         n_host, n_hbm = report.n_host_hits, report.n_hbm_hits
         t_host = n_host * bpr / HOST_DRAM_BW if n_host else 0.0
         t_hbm = n_hbm * bpr / HBM_BW if n_hbm else 0.0
@@ -227,6 +370,33 @@ class StorageTimeline:
         pcie_bytes = (n_storage + n_host) * feat_bytes
         t_pcie = pcie_bytes / PCIE_GEN4_BW
         return max(t_ssd, t_host, t_hbm, t_pcie)
+
+    def gids_batch_time_sharded(self, shard_rows, n_host: int, n_hbm: int,
+                                feat_bytes: int, outstanding: int) -> float:
+        """GIDS batch pricing over a sharded namespace: the accumulator's
+        maintained outstanding count splits across shard queues in
+        proportion to each shard's share of the batch's storage rows, each
+        shard drains at its own spec with the efficiency of ITS queue alone,
+        and the storage term is the slowest shard's drain.  Host/HBM links
+        and the PCIe ingress cap match `gids_batch_time` exactly, so a
+        1-shard plane prices identically to the unsharded one."""
+        shard_rows = tuple(int(r) for r in shard_rows)
+        total = sum(shard_rows)
+        shard_out = tuple(
+            max(int(round(outstanding * r / total)), 1) if r else 0
+            for r in shard_rows) if total else shard_rows
+        specs = self.shard_specs or (self.spec,) * len(shard_rows)
+        # per-batch pricing is row-granular (no merged-window coalescing):
+        # lines = rows keeps the line cap at exactly the row bytes
+        burst = price_sharded_burst(
+            specs, shard_rows,
+            tuple(-(-r * feat_bytes // IO_BYTES) for r in shard_rows),
+            feat_bytes, shard_outstanding=shard_out)
+        self.last_shard_burst = burst
+        t_host = n_host * feat_bytes / HOST_DRAM_BW if n_host else 0.0
+        t_hbm = n_hbm * feat_bytes / HBM_BW if n_hbm else 0.0
+        t_pcie = (total + n_host) * feat_bytes / PCIE_GEN4_BW
+        return max(burst.elapsed_s, t_host, t_hbm, t_pcie)
 
     def mmap_batch_time(self, n_storage: int, n_page_cache: int,
                         feat_bytes: int, cpu_threads: int = 16) -> float:

@@ -12,6 +12,10 @@ existing components:
                        Pallas `tiered_gather`)
   ConstantBufferTier — wraps `ConstantBuffer` (pinned host memory)
   StorageTier        — the memmap/array storage backstop (always hits)
+  ShardedStorageTier — the backstop partitioned across `n_shards` SSD queues
+                       by a pluggable `PlacementPolicy` (core/sharding.py);
+                       per-request shard ids feed the per-shard burst
+                       pricing (`storage_sim.price_sharded_burst`)
   KVSlotTier         — a KV-cache slot pool for the serve engine (a request
                        "hits" while it holds a slot; retirement = evictable)
 
@@ -19,7 +23,10 @@ existing components:
 `GatherPlan`: a per-request tier-assignment array that is, by construction, a
 partition — every request is served by exactly one tier.  The plan feeds both
 the `tiered_gather` Pallas kernel (slot array) and the storage-timeline
-pricing (per-tier counts).
+pricing (per-tier counts).  Requests a storage-class tier claims additionally
+carry a shard id (`GatherPlan.shard`): the serving tier's placement decision
+for a sharded backstop, 0 for a single-queue one, -1 for requests faster
+tiers redirected off storage entirely.
 """
 from __future__ import annotations
 
@@ -282,6 +289,71 @@ class StorageTier(_TierBase):
         return np.asarray(self.features[node_ids])
 
 
+class ShardedStorageTier(StorageTier):
+    """The storage backstop partitioned across `n_shards` independent SSD
+    queues by a `PlacementPolicy` (core/sharding.py).
+
+    The *bytes* are unchanged — one logical feature namespace, every probe
+    hits — but each storage-bound request now carries the shard whose queue
+    it drains through (`shard_of`, threaded into `GatherPlan.shard` by
+    `build_plan`).  Pricing then completes the batch at the MAX over shards
+    (`storage_sim.price_sharded_burst`), which is what makes multi-SSD
+    scaling and placement skew measurable.
+
+    `specs` may be one `SSDSpec` (homogeneous array), a sequence of
+    `n_shards` specs (heterogeneous — e.g. one Optane + three 980Pros, the
+    straggler story), or None (every shard inherits the loader's device
+    spec).
+    """
+
+    def __init__(self, features: np.ndarray, placement,
+                 specs=None, name: str = "sharded-storage"):
+        super().__init__(features, name=name)
+        self.placement = placement
+        if specs is not None and not isinstance(specs, (list, tuple)):
+            specs = (specs,) * placement.n_shards
+        if specs is not None:
+            specs = tuple(specs)
+            if len(specs) != placement.n_shards:
+                raise ValueError(
+                    f"{len(specs)} shard specs for {placement.n_shards} "
+                    "shards — pass one spec per shard (or a single spec "
+                    "to replicate)")
+        self.specs = specs
+
+    @property
+    def n_shards(self) -> int:
+        return self.placement.n_shards
+
+    def shard_of(self, node_ids: np.ndarray) -> np.ndarray:
+        """Per-request shard id (the placement decision), (B,) int16."""
+        return np.asarray(self.placement.shard_of(node_ids), np.int16)
+
+    def resolve_shard_specs(self, default_spec) -> tuple:
+        """Per-shard `SSDSpec`s, falling back to `default_spec` (the
+        loader's device) when the tier was built spec-less."""
+        if self.specs is not None:
+            return self.specs
+        return (default_spec,) * self.n_shards
+
+    # -- checkpoint -----------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Shard-assignment state for checkpoint round-trip.  Built-in
+        policies are deterministic, but the table-based ones (`degree`) are
+        exactly what an online rebalancer would mutate — resume restores the
+        assignment rather than trusting reconstruction."""
+        return {"n_shards": self.n_shards,
+                "placement": self.placement.state_dict()}
+
+    def load_state_dict(self, state: dict) -> None:
+        if state.get("n_shards", self.n_shards) != self.n_shards:
+            raise ValueError(
+                f"checkpoint has {state.get('n_shards')} shards, tier has "
+                f"{self.n_shards} — shard count is namespace layout, not "
+                "runtime state")
+        self.placement.load_state_dict(state["placement"])
+
+
 class KVSlotTier(_TierBase):
     """KV-cache slot pool as a data-plane tier (serve engine).
 
@@ -349,11 +421,18 @@ class GatherPlan:
     """Per-request tier assignment for one batch: `assignment[i]` indexes the
     tier stack entry that serves request i.  Folding guarantees a partition
     (`is_partition`); `kernel_slots` renders the device-tier portion as the
-    slot array the `tiered_gather` Pallas kernel consumes."""
+    slot array the `tiered_gather` Pallas kernel consumes.
+
+    `shard[i]` is the storage shard serving request i: the placement
+    decision of a `ShardedStorageTier`, 0 for a single-queue storage tier,
+    and -1 iff the serving tier is not storage-class (`shard_consistent`
+    pins that invariant).  Shard ids drive shard-local 4 KB-line coalescing
+    and the max-over-shards burst pricing."""
 
     node_ids: np.ndarray
     assignment: np.ndarray          # (B,) int8 index into `tiers`
     tiers: tuple
+    shard: np.ndarray | None = None  # (B,) int16; -1 = not storage-bound
 
     def counts(self) -> np.ndarray:
         return np.bincount(self.assignment, minlength=len(self.tiers))
@@ -365,6 +444,33 @@ class GatherPlan:
         a = self.assignment
         return bool(((a >= 0) & (a < len(self.tiers))).all()
                     and int(self.counts().sum()) == len(self.node_ids))
+
+    def storage_mask(self) -> np.ndarray:
+        """Requests whose serving tier is storage-class."""
+        classes = np.array([t.latency_class == "storage" for t in self.tiers])
+        return classes[self.assignment]
+
+    @property
+    def n_shards(self) -> int:
+        """Shard count of the stack's storage namespace (1 when unsharded)."""
+        return max((getattr(t, "n_shards", 1) for t in self.tiers), default=1)
+
+    def shard_consistent(self) -> bool:
+        """Shard ids are defined exactly where the serving tier is
+        storage-class, and always index a real shard."""
+        if self.shard is None:
+            return not self.storage_mask().any()
+        sm = self.storage_mask()
+        s = self.shard
+        return bool(((s[sm] >= 0) & (s[sm] < self.n_shards)).all()
+                    and (s[~sm] == -1).all())
+
+    def shard_counts(self) -> np.ndarray:
+        """Storage-bound requests per shard, (n_shards,)."""
+        if self.shard is None:
+            return np.zeros(self.n_shards, np.int64)
+        sm = self.shard >= 0
+        return np.bincount(self.shard[sm], minlength=self.n_shards)
 
     def kernel_slots(self, tier_index: int = 0) -> np.ndarray:
         """Slot array for `ops.tiered_gather`: requests served by the device
@@ -415,8 +521,21 @@ def build_plan(tiers: Sequence[Tier], node_ids: np.ndarray,
             f"tier stack {[t.name for t in tiers]} left "
             f"{int(unclaimed.sum())} of {n} requests unserved — the stack "
             "must end in a storage backstop")
+    # storage-bound requests carry the serving tier's shard decision; a
+    # single-queue storage tier is shard 0, redirected requests stay -1
+    shard = np.full(n, -1, np.int16)
+    for ti, tier in enumerate(tiers):
+        if tier.latency_class != "storage":
+            continue
+        m = assignment == ti
+        if not m.any():
+            continue
+        if hasattr(tier, "shard_of"):
+            shard[m] = tier.shard_of(node_ids[m])
+        else:
+            shard[m] = 0
     return GatherPlan(node_ids=node_ids, assignment=assignment,
-                      tiers=tuple(tiers))
+                      tiers=tuple(tiers), shard=shard)
 
 
 def build_plan_merged(tiers: Sequence[Tier], unique_nodes: np.ndarray,

@@ -166,6 +166,18 @@ def test_custom_preset_registration(graph_and_feats):
 
 # -- report semantics ----------------------------------------------------------
 
+@pytest.mark.parametrize("mode", ["gids", "bam", "mmap", "gids-merged",
+                                  "gids-sharded"])
+def test_mode_shim_emits_deprecation_and_resolves(mode):
+    """The PR 1 shim's contract, pinned directly: LoaderConfig(mode=...)
+    warns exactly once and resolves to the preset of the same name."""
+    with pytest.warns(DeprecationWarning, match="data_plane"):
+        cfg = LoaderConfig(mode=mode)
+    assert cfg.data_plane == mode
+    assert DataPlaneSpec.resolve(cfg.data_plane).name == mode
+    assert cfg.mode == mode                    # read shim agrees
+
+
 def test_mode_shim_is_readable_and_typoed_knobs_rejected(graph_and_feats):
     import dataclasses
 
@@ -192,15 +204,17 @@ def test_mode_shim_is_readable_and_typoed_knobs_rejected(graph_and_feats):
     assert LoaderConfig(data_plane="gids", mode="mmap").data_plane == "gids"
 
 
-def test_report_bytes_per_row_and_deprecated_alias(graph_and_feats):
+def test_report_bytes_per_row_and_alias_removed(graph_and_feats):
     g, feats = graph_and_feats
     dl = GIDSDataLoader(g, feats, LoaderConfig(
         batch_size=64, fanouts=(3,), data_plane="gids", cache_lines=1024,
         window_depth=2))
     r = dl.next_batch().report
     assert r.bytes_per_row == feats.shape[1] * feats.dtype.itemsize
-    with pytest.warns(DeprecationWarning):
-        assert r.feat_bytes == r.bytes_per_row
+    # the deprecated feat_bytes alias (PR 1) completed its cycle: nothing
+    # imported it, so it is gone rather than warning forever
+    with pytest.raises(AttributeError):
+        r.feat_bytes
 
 
 # -- plan -> Pallas kernel wiring ----------------------------------------------

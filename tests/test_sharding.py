@@ -1,0 +1,404 @@
+"""Sharded storage data plane: placement policies, shard-carrying gather
+plans, shard-local 4 KB-line coalescing, per-shard burst pricing (straggler +
+imbalance telemetry, heterogeneous specs), bit-identity of the n_shards=1
+plane vs gids, and checkpoint round-trip of shard assignment state."""
+import numpy as np
+import pytest
+
+from repro.core import (DataPlaneSpec, GIDSDataLoader, INTEL_OPTANE,
+                        LoaderConfig, SAMSUNG_980PRO, ShardedStorageTier,
+                        StorageTimeline, coalesce_lines,
+                        coalesce_lines_by_shard, make_placement,
+                        placement_names, price_sharded_burst)
+from repro.core.sharding import (DegreePlacement, HashPlacement,
+                                 RangePlacement, SkewedPlacement)
+from repro.core.storage_sim import IO_BYTES
+from repro.core.tiers import StorageTier, build_plan
+from repro.graph.synthetic import rmat_graph
+
+
+@pytest.fixture(scope="module")
+def graph_and_feats():
+    g = rmat_graph(10_000, 12, 16, seed=1)
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 16)).astype(np.float32)
+    return g, feats
+
+
+def _mk(g, feats, plane, seed=7, **kw):
+    cfg = dict(batch_size=128, fanouts=(4, 4), cache_lines=2048,
+               window_depth=4, seed=seed)
+    cfg.update(kw)
+    return GIDSDataLoader(g, feats, LoaderConfig(data_plane=plane, **cfg))
+
+
+# -- placement policies --------------------------------------------------------
+
+def test_placement_registry():
+    for name in ("hash", "range", "degree", "skewed"):
+        assert name in placement_names()
+    with pytest.raises(KeyError, match="unknown placement"):
+        make_placement("no-such-policy", 4)
+
+
+@pytest.mark.parametrize("name", ["hash", "range", "degree", "skewed"])
+def test_placements_total_and_deterministic(name):
+    rng = np.random.default_rng(3)
+    degrees = rng.integers(0, 50, 5000)
+    pol = make_placement(name, 4, num_nodes=5000, degrees=degrees)
+    ids = np.arange(5000)
+    s1, s2 = pol.shard_of(ids), pol.shard_of(ids)
+    np.testing.assert_array_equal(s1, s2)          # deterministic
+    assert ((s1 >= 0) & (s1 < 4)).all()            # total over the namespace
+    if name != "skewed":                           # balanced-ish policies
+        counts = np.bincount(s1, minlength=4)
+        assert counts.max() < 2 * counts.min()
+
+
+def test_single_shard_is_all_zero():
+    for name in ("hash", "range", "degree", "skewed"):
+        pol = make_placement(name, 1, num_nodes=100,
+                             degrees=np.ones(100, np.int64))
+        np.testing.assert_array_equal(pol.shard_of(np.arange(100)), 0)
+
+
+def test_range_placement_contiguous():
+    pol = RangePlacement(4, num_nodes=100)
+    shard = pol.shard_of(np.arange(100))
+    # contiguous blocks, non-decreasing over the id space
+    assert (np.diff(shard) >= 0).all()
+    assert set(shard.tolist()) == {0, 1, 2, 3}
+
+
+def test_degree_placement_stripes_hot_nodes():
+    """The top-n_shards hottest nodes must land on n_shards DIFFERENT
+    shards — the policy's whole point is that the power-law head never
+    hammers one queue."""
+    rng = np.random.default_rng(0)
+    degrees = rng.zipf(1.5, 4096).astype(np.int64)
+    pol = DegreePlacement(4, degrees)
+    hot = np.argsort(-degrees, kind="stable")[:4]
+    assert set(pol.shard_of(hot).tolist()) == {0, 1, 2, 3}
+    # and each round of 4 in degree order is a full stripe
+    order = np.argsort(-degrees, kind="stable")
+    shards = pol.shard_of(order)
+    assert (shards.reshape(-1, 4) == np.arange(4)).all() \
+        or sorted(shards[:4].tolist()) == [0, 1, 2, 3]
+
+
+def test_skewed_placement_overloads_shard_zero():
+    pol = SkewedPlacement(4)
+    counts = np.bincount(pol.shard_of(np.arange(40_000)), minlength=4)
+    assert counts[0] > 2 * counts[1:].max()        # deliberately imbalanced
+
+
+def test_hash_placement_invalid_shards():
+    with pytest.raises(ValueError, match="n_shards"):
+        HashPlacement(0)
+    with pytest.raises(ValueError, match="num_nodes"):
+        RangePlacement(2, num_nodes=None)
+    with pytest.raises(ValueError, match="degrees"):
+        DegreePlacement(2, None)
+
+
+def test_range_placement_rejects_resized_namespace():
+    """Restoring range boundaries against a different-size feature array
+    would silently shift every shard boundary — fail loudly instead."""
+    pol = RangePlacement(4, num_nodes=1000)
+    pol.load_state_dict(pol.state_dict())           # round-trips
+    bigger = RangePlacement(4, num_nodes=2000)
+    with pytest.raises(ValueError, match="boundaries would shift"):
+        bigger.load_state_dict(pol.state_dict())
+
+
+def test_sharded_plane_rejects_legacy_n_ssd(graph_and_feats):
+    """n_ssd is the legacy pooled-queue multiplier; a sharded plane models
+    the same devices as per-shard queues — combining both double-counts."""
+    g, feats = graph_and_feats
+    with pytest.raises(ValueError, match="n_ssd"):
+        _mk(g, feats, "gids-sharded", n_shards=4, n_ssd=4)
+    # n_shards=1 keeps the legacy multiplier working
+    _mk(g, feats, "gids-sharded", n_shards=1, n_ssd=4).next_batch()
+
+
+# -- shard-local line coalescing (satellite regression) ------------------------
+
+def test_coalesce_lines_shard_boundary_regression():
+    """Two rows on the SAME 4 KB line but DIFFERENT shards are two IOs —
+    one per device queue.  Before shard-local keys this silently merged
+    rows living on different devices."""
+    ids = np.array([0, 1])                          # 1 KB rows: same line
+    assert coalesce_lines(ids, 1024) == 1
+    assert coalesce_lines(ids, 1024, shard=np.array([0, 1])) == 2
+    assert coalesce_lines(ids, 1024, shard=np.array([1, 1])) == 1
+
+
+def test_coalesce_lines_sharded_matches_per_shard_sum():
+    rng = np.random.default_rng(2)
+    ids = np.unique(rng.integers(0, 4000, 600))
+    shard = (ids % 4).astype(np.int16)
+    total = coalesce_lines(ids, 1024, shard=shard)
+    per = coalesce_lines_by_shard(ids, shard, 4, 1024)
+    assert per.sum() == total
+    assert total >= coalesce_lines(ids, 1024)       # never fewer IOs
+    # wide rows never coalesce, sharded or not
+    assert coalesce_lines(ids, IO_BYTES, shard=shard) == len(ids)
+    # the vectorized pass agrees with the per-shard oracle everywhere
+    for bpr in (256, 1024, 3000, IO_BYTES, 2 * IO_BYTES):
+        expect = np.array([coalesce_lines(ids[shard == s], bpr)
+                           for s in range(4)])
+        np.testing.assert_array_equal(
+            coalesce_lines_by_shard(ids, shard, 4, bpr), expect)
+    np.testing.assert_array_equal(
+        coalesce_lines_by_shard(np.array([], np.int64),
+                                np.array([], np.int16), 4, 1024),
+        np.zeros(4, np.int64))
+
+
+# -- ShardedStorageTier --------------------------------------------------------
+
+def test_sharded_tier_is_backstop_with_shard_of():
+    feats = np.zeros((256, 4), np.float32)
+    tier = ShardedStorageTier(feats, make_placement("hash", 4))
+    assert tier.latency_class == "storage"
+    assert tier.probe(np.arange(32)).all()
+    assert tier.n_shards == 4
+    s = tier.shard_of(np.arange(32))
+    assert s.dtype == np.int16 and ((s >= 0) & (s < 4)).all()
+
+
+def test_sharded_tier_heterogeneous_specs():
+    feats = np.zeros((64, 4), np.float32)
+    specs = (SAMSUNG_980PRO, INTEL_OPTANE, INTEL_OPTANE, INTEL_OPTANE)
+    tier = ShardedStorageTier(feats, make_placement("hash", 4), specs=specs)
+    assert tier.resolve_shard_specs(INTEL_OPTANE) == specs
+    # a single spec replicates; None inherits the loader's device
+    t2 = ShardedStorageTier(feats, make_placement("hash", 2),
+                            specs=SAMSUNG_980PRO)
+    assert t2.resolve_shard_specs(INTEL_OPTANE) == (SAMSUNG_980PRO,) * 2
+    t3 = ShardedStorageTier(feats, make_placement("hash", 2))
+    assert t3.resolve_shard_specs(INTEL_OPTANE) == (INTEL_OPTANE,) * 2
+    with pytest.raises(ValueError, match="shard specs"):
+        ShardedStorageTier(feats, make_placement("hash", 4),
+                           specs=[SAMSUNG_980PRO] * 3)
+
+
+# -- shard ids through the gather plan -----------------------------------------
+
+def test_build_plan_carries_shard_ids():
+    feats = np.zeros((512, 4), np.float32)
+    tier = ShardedStorageTier(feats, make_placement("hash", 4))
+    ids = np.arange(100)
+    plan = build_plan([tier], ids)
+    assert plan.is_partition() and plan.shard_consistent()
+    assert plan.n_shards == 4
+    np.testing.assert_array_equal(plan.shard, tier.shard_of(ids))
+    np.testing.assert_array_equal(plan.shard_counts(),
+                                  np.bincount(plan.shard, minlength=4))
+
+
+def test_build_plan_unsharded_storage_is_shard_zero():
+    feats = np.zeros((512, 4), np.float32)
+    plan = build_plan([StorageTier(feats)], np.arange(50))
+    assert plan.n_shards == 1
+    np.testing.assert_array_equal(plan.shard, 0)
+    assert plan.shard_consistent()
+
+
+# -- per-shard burst pricing ---------------------------------------------------
+
+def test_price_sharded_burst_max_over_shards():
+    specs = (INTEL_OPTANE,) * 4
+    res = price_sharded_burst(specs, (100, 200, 50, 0), (25, 50, 13, 0),
+                              1024)
+    assert res.n_shards == 4
+    assert res.elapsed_s == max(res.per_shard_s)
+    assert res.straggler == 1                      # the 200-row queue
+    assert res.per_shard_s[3] == 0.0               # empty queue costs nothing
+    assert res.imbalance > 1.0
+
+
+def test_price_sharded_burst_balanced_beats_one_queue():
+    """The multi-SSD story: 4 balanced shards drain strictly faster than
+    the same rows through one queue."""
+    tl = StorageTimeline(SAMSUNG_980PRO)
+    one = price_sharded_burst((SAMSUNG_980PRO,), (4000,), (1000,), 256)
+    four = price_sharded_burst((SAMSUNG_980PRO,) * 4, (1000,) * 4,
+                               (250,) * 4, 256)
+    assert four.elapsed_s < one.elapsed_s
+    assert four.imbalance == pytest.approx(1.0)
+    del tl
+
+
+def test_price_sharded_burst_heterogeneous_straggler():
+    """One 980Pro among Optanes: the slow device's queue sets the critical
+    path and is named in the telemetry."""
+    specs = (SAMSUNG_980PRO, INTEL_OPTANE, INTEL_OPTANE, INTEL_OPTANE)
+    res = price_sharded_burst(specs, (100,) * 4, (25,) * 4, 1024)
+    assert res.straggler == 0
+    assert res.straggler_spec == "samsung-980pro"
+    assert res.imbalance > 1.5
+    with pytest.raises(ValueError, match="arity"):
+        price_sharded_burst(specs, (1, 2), (1, 2), 64)
+
+
+def test_loader_surfaces_straggler_telemetry(graph_and_feats):
+    g, feats = graph_and_feats
+    dl = _mk(g, feats, "gids-merged-sharded", n_shards=4)
+    for _ in range(6):
+        b = dl.next_batch()
+    burst = dl.timeline.last_shard_burst
+    assert burst is not None and burst.n_shards == 4
+    assert 0 <= burst.straggler < 4
+    assert burst.imbalance >= 1.0
+    assert b.report.shard_rows and len(b.report.shard_rows) == 4
+    assert sum(b.report.shard_lines) == b.report.n_storage_lines
+
+
+# -- bit-identity of the sharded plane -----------------------------------------
+
+def test_one_shard_plane_bit_identical_to_gids(graph_and_feats):
+    """Acceptance: n_shards=1 sharded plane == gids in features, blocks,
+    per-tier counts — and (n_ssd=1) even in modelled prep."""
+    g, feats = graph_and_feats
+    a, b = _mk(g, feats, "gids"), _mk(g, feats, "gids-sharded", n_shards=1)
+    for _ in range(8):
+        ba, bb = a.next_batch(), b.next_batch()
+        np.testing.assert_array_equal(ba.blocks.seeds, bb.blocks.seeds)
+        np.testing.assert_array_equal(ba.blocks.all_nodes,
+                                      bb.blocks.all_nodes)
+        np.testing.assert_array_equal(ba.features, bb.features)
+        assert ba.report.tier_counts == bb.report.tier_counts
+        assert ba.prep_time_s == bb.prep_time_s
+
+
+def test_sharded_merged_features_match_unsharded(graph_and_feats):
+    """Sharding changes pricing and telemetry, never bytes: the 4-shard
+    merged plane returns bit-identical features to gids-merged."""
+    g, feats = graph_and_feats
+    a = _mk(g, feats, "gids-merged")
+    b = _mk(g, feats, "gids-merged-sharded", n_shards=4)
+    for _ in range(10):
+        ba, bb = a.next_batch(), b.next_batch()
+        np.testing.assert_array_equal(ba.features, bb.features)
+        assert ba.report.tier_counts == bb.report.tier_counts
+        assert ba.report.n_storage_unique == bb.report.n_storage_unique
+        # shard-local coalescing can only split lines, never merge more
+        assert bb.report.n_storage_lines >= ba.report.n_storage_lines
+
+
+def test_sharded_prep_drops_with_shard_count(graph_and_feats):
+    """The point of the PR: per-shard queues drain concurrently, so
+    modelled prep is monotonically non-increasing in shard count."""
+    g, feats = graph_and_feats
+    means = {}
+    for n in (1, 2, 4):
+        dl = _mk(g, feats, "gids-merged-sharded", n_shards=n)
+        ps = [dl.next_batch().prep_time_s for _ in range(16)]
+        means[n] = float(np.mean(ps[6:]))
+    assert means[2] <= means[1]
+    assert means[4] <= means[2]
+    assert means[4] < means[1]                     # strict across the sweep
+
+
+# -- hypothesis property: every preset's plan partitions + shard rule ----------
+
+def _storage_backed_presets():
+    out = []
+    for name in DataPlaneSpec.names():
+        spec = DataPlaneSpec.preset(name)
+        if spec.tiers and spec.tiers[-1].kind in ("storage",
+                                                  "sharded_storage"):
+            out.append(name)
+    return out
+
+
+def test_plan_partition_property_over_presets(graph_and_feats):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    g, feats = graph_and_feats
+    presets = [p for p in _storage_backed_presets() if p != "gids-device"]
+    assert {"gids", "gids-sharded", "gids-merged-sharded"} <= set(presets)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        preset=st.sampled_from(presets),
+        n_shards=st.sampled_from([1, 2, 4]),
+        placement=st.sampled_from(["hash", "range", "degree", "skewed"]),
+        seed=st.integers(0, 3),
+    )
+    def check(preset, n_shards, placement, seed):
+        dl = _mk(g, feats, preset, seed=seed, batch_size=32,
+                 n_shards=n_shards, placement=placement)
+        for _ in range(3):
+            dl.next_batch()
+            plan = dl.store.last_plan
+            # every request claimed by exactly one tier...
+            assert plan.is_partition()
+            masks = [plan.mask(i) for i in range(len(plan.tiers))]
+            assert (np.sum(masks, axis=0) == 1).all()
+            # ...and shard ids defined iff the serving tier is storage-class
+            assert plan.shard_consistent()
+            sm = plan.storage_mask()
+            assert (plan.shard[sm] >= 0).all()
+            assert (plan.shard[~sm] == -1).all()
+        # checkpoint save/restore round-trips shard assignment state
+        state = dl.state_dict()
+        fresh = _mk(g, feats, preset, seed=seed, batch_size=32,
+                    n_shards=n_shards, placement=placement)
+        fresh.load_state_dict(state)
+        probe = np.arange(0, g.num_nodes, 97)
+        old_tier, new_tier = dl.store.tiers[-1], fresh.store.tiers[-1]
+        if hasattr(old_tier, "shard_of"):
+            np.testing.assert_array_equal(old_tier.shard_of(probe),
+                                          new_tier.shard_of(probe))
+        b_old, b_new = dl.next_batch(), fresh.next_batch()
+        np.testing.assert_array_equal(b_old.blocks.seeds, b_new.blocks.seeds)
+        np.testing.assert_array_equal(b_old.features, b_new.features)
+
+    check()
+
+
+# -- checkpoint round-trip of shard assignment ---------------------------------
+
+def test_sharded_checkpoint_roundtrips_assignment(graph_and_feats):
+    g, feats = graph_and_feats
+    dl = _mk(g, feats, "gids-sharded", n_shards=4, placement="degree")
+    for _ in range(3):
+        dl.next_batch()
+    state = dl.state_dict()
+    assert "tier_state" in state
+    tier_state = state["tier_state"]["sharded-storage"]
+    assert tier_state["n_shards"] == 4
+    assert tier_state["placement"]["name"] == "degree"
+
+    # resumed loaders agree with each other bit-for-bit (resume resets tier
+    # contents, so the comparison is resumed-vs-resumed)
+    r1 = _mk(g, feats, "gids-sharded", n_shards=4, placement="degree")
+    r2 = _mk(g, feats, "gids-sharded", n_shards=4, placement="degree")
+    r1.load_state_dict(state)
+    r2.load_state_dict(state)
+    probe = np.arange(0, g.num_nodes, 37)
+    np.testing.assert_array_equal(
+        r1.store.tiers[-1].shard_of(probe),
+        dl.store.tiers[-1].shard_of(probe))
+    for _ in range(4):
+        b1, b2 = r1.next_batch(), r2.next_batch()
+        np.testing.assert_array_equal(b1.features, b2.features)
+        assert b1.report == b2.report
+        assert b1.prep_time_s == b2.prep_time_s
+
+    # a mutated assignment (what an online rebalancer would do) round-trips
+    dtier = dl.store.tiers[-1]
+    dtier.placement.table[:100] = 2
+    st2 = dl.state_dict()
+    r3 = _mk(g, feats, "gids-sharded", n_shards=4, placement="degree")
+    r3.load_state_dict(st2)
+    np.testing.assert_array_equal(
+        r3.store.tiers[-1].shard_of(np.arange(100)), 2)
+
+    # shard-count mismatch fails loudly, not silently
+    r4 = _mk(g, feats, "gids-sharded", n_shards=2, placement="degree")
+    with pytest.raises(ValueError, match="shards"):
+        r4.load_state_dict(state)
