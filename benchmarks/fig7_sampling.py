@@ -1,5 +1,18 @@
-"""Fig. 7 — graph sampling time, host vs device path, across graph scales
-(IGB tiny/small/medium stand-ins)."""
+"""Fig. 7 — graph sampling throughput: host (CPU) vs device (GPU/TPU jit)
+vs the tiered topology plane (core/topology.py), with degree skew on/off.
+
+Two claim families:
+
+* measured wall-clock: the jitted device sampler vs the numpy host sampler
+  across graph scales (the original Fig. 7 shape);
+* modelled sampling time: the tiered topology store prices every hop's
+  edge-page reads (GPU hot adjacency / pinned host / storage-backed CSR
+  pages) against the CPU-sampling baseline
+  (`storage_sim.host_sampling_hop_time`) on IDENTICAL hops, and the
+  modelled time must be MONOTONE non-increasing in the GPU-tier budget
+  (degree-aware admission assigns nested prefixes — asserted here, gated
+  in `run.py --json` via `headline()`).
+"""
 from __future__ import annotations
 
 import jax
@@ -7,11 +20,84 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, timeit
+from repro.core import INTEL_OPTANE, TieredTopologyStore, host_sampling_time
 from repro.graph.datasets import IGB_MEDIUM, IGB_SMALL, IGB_TINY
-from repro.sampling.neighbor import device_sample_blocks, host_sample_blocks
+from repro.graph.synthetic import rmat_graph, uniform_graph
+from repro.sampling.neighbor import (device_sample_blocks,
+                                     host_sample_blocks, run_sample_hops)
+
+GPU_BUDGET_SWEEP = (0.0, 0.1, 0.25, 0.5, 1.0)
+
+
+def sample_hops(g, batch, fanouts, seed=0):
+    """Sample once (through the samplers' shared driver); return the
+    per-hop (read positions, frontier size) pairs.  Re-pricing those hops
+    against different stores is then pure page accounting — no re-sampling
+    per sweep point."""
+    rng = np.random.default_rng(seed)
+    seeds = rng.integers(0, g.num_nodes, batch)
+    hops = []
+    run_sample_hops(g, seeds, fanouts, rng,
+                    hop_cb=lambda hop, pos, nf: hops.append((pos, nf)))
+    return hops
+
+
+def price_hops(topo, hops):
+    return [topo.hop_report(pos, hop=i, n_frontier=nf)
+            for i, (pos, nf) in enumerate(hops)]
+
+
+def budget_sweep(g, hops):
+    """Modelled tiered time per GPU budget over the SAME sampled hops —
+    only the page placement changes between points, so the asserted
+    monotonicity is exactly the nested-admission-prefix claim."""
+    times = []
+    for f in GPU_BUDGET_SWEEP:
+        topo = TieredTopologyStore.from_graph(
+            g, admission="degree", gpu_fraction=f, host_fraction=0.5,
+            ssd=INTEL_OPTANE)
+        times.append(sum(r.time_s for r in price_hops(topo, hops)))
+    assert all(b <= a * 1.0001 + 1e-12 for a, b in zip(times, times[1:])), \
+        f"tiered sampling time not monotone in GPU budget: {times}"
+    return times
+
+
+def headline(num_nodes: int = 50_000, batch: int = 4096,
+             fanouts=(10, 5)) -> dict:
+    """Smoke numbers for BENCH_*.json + the CI topo-beats-host gate:
+    modelled tiered sampling (default budgets, degree admission) must beat
+    the modelled CPU-sampling baseline on the degree-SKEWED config."""
+    out = {}
+    skewed_g = rmat_graph(num_nodes, 12, 0, seed=1)
+    uniform_g = uniform_graph(num_nodes, 12, 0, seed=1)
+    skewed_hops = sample_hops(skewed_g, batch, fanouts)
+    for tag, g, hops in (
+            ("skewed", skewed_g, skewed_hops),
+            ("uniform", uniform_g, sample_hops(uniform_g, batch, fanouts))):
+        topo = TieredTopologyStore.from_graph(
+            g, admission="degree", gpu_fraction=0.25, host_fraction=0.5,
+            ssd=INTEL_OPTANE)
+        reports = price_hops(topo, hops)
+        t_host = host_sampling_time(reports)
+        t_tiered = sum(r.time_s for r in reports)
+        out[f"{tag}_host_sample_us"] = t_host * 1e6
+        out[f"{tag}_tiered_sample_us"] = t_tiered * 1e6
+        out[f"{tag}_sample_speedup_tiered_vs_host"] = t_host / t_tiered
+        last = reports[-1]
+        out[f"{tag}_last_hop_pages_hbm"] = last.pages_by_tier[0]
+        out[f"{tag}_last_hop_pages_host"] = last.pages_by_tier[1]
+        out[f"{tag}_last_hop_pages_storage"] = last.pages_by_tier[2]
+        out[f"{tag}_last_hop_coalesce_factor"] = last.coalesce_factor
+    sweep = budget_sweep(skewed_g, skewed_hops)
+    for f, t in zip(GPU_BUDGET_SWEEP, sweep):
+        out[f"tiered_sample_us_gpu{f:g}"] = t * 1e6
+    out["sample_speedup_tiered_vs_host"] = \
+        out["skewed_sample_speedup_tiered_vs_host"]
+    return out
 
 
 def main(batch=512, fanouts=(10, 5)):
+    # measured wall-clock across scales (original Fig. 7)
     for spec in (IGB_TINY, IGB_SMALL, IGB_MEDIUM):
         g = spec.materialize()
         rng = np.random.default_rng(0)
@@ -28,6 +114,19 @@ def main(batch=512, fanouts=(10, 5)):
         row(f"fig7_sampling_{spec.name}", t_host * 1e6,
             f"host_ms={t_host*1e3:.2f}_device_ms={t_dev*1e3:.2f}"
             f"_speedup={t_host/t_dev:.2f}x_nodes={g.num_nodes}")
+
+    # modelled tiered-topology sampling, degree skew on/off + budget sweep
+    res = headline()
+    for tag in ("skewed", "uniform"):
+        row(f"fig7_tiered_{tag}", res[f"{tag}_tiered_sample_us"],
+            f"host_us={res[f'{tag}_host_sample_us']:.1f}"
+            f"_speedup={res[f'{tag}_sample_speedup_tiered_vs_host']:.2f}x"
+            f"_lasthop_pages_hbm={res[f'{tag}_last_hop_pages_hbm']}"
+            f"_host={res[f'{tag}_last_hop_pages_host']}"
+            f"_storage={res[f'{tag}_last_hop_pages_storage']}")
+    for f in GPU_BUDGET_SWEEP:
+        row(f"fig7_tiered_budget_gpu{f:g}",
+            res[f"tiered_sample_us_gpu{f:g}"], "monotone_in_gpu_budget")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows; `python -m benchmarks.run [--quick]`.  `--json [path]` is the CI
-# smoke mode: fig13 + fig14 + shard-scaling headline numbers as JSON
-# (default BENCH_pr4.json) so the perf trajectory is recorded per PR.
+# smoke mode: fig13 + fig14 + shard-scaling + fig7-sampling headline numbers
+# as JSON (default BENCH_pr5.json) so the perf trajectory is recorded per PR.
 # `--baseline PATH` compares the fresh numbers against a committed earlier
 # BENCH_*.json and exits non-zero if the `gids` preset's e2e regressed (the
 # model is deterministic, so the tolerance only absorbs float/env noise).
@@ -35,11 +35,13 @@ def check_baseline(payload: dict, baseline_path: str) -> None:
 
 
 def write_json_smoke(path: str, baseline: str | None = None) -> None:
-    from benchmarks import fig13_e2e, fig14_overlap, fig_shard_scaling
+    from benchmarks import (fig7_sampling, fig13_e2e, fig14_overlap,
+                            fig_shard_scaling)
     payload = {
         "fig13_e2e": fig13_e2e.headline(),
         "fig14_overlap": fig14_overlap.headline(),
         "fig_shard_scaling": fig_shard_scaling.headline(),
+        "fig7_sampling": fig7_sampling.headline(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -57,6 +59,12 @@ def write_json_smoke(path: str, baseline: str | None = None) -> None:
             "SHARD-SCALING REGRESSION: 4-shard exposed prep must be "
             "strictly below 1-shard (got "
             f"{shards['prep_speedup_4shard_vs_1shard']:.4f}x speedup)")
+    sampling = payload["fig7_sampling"]
+    if sampling["sample_speedup_tiered_vs_host"] <= 1.0:
+        raise SystemExit(
+            "TOPOLOGY REGRESSION: tiered sampling must beat the CPU-"
+            "sampling baseline on the degree-skewed smoke config (got "
+            f"{sampling['sample_speedup_tiered_vs_host']:.4f}x)")
     if baseline:
         check_baseline(payload, baseline)
 
@@ -66,11 +74,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow E2E figures")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", nargs="?", const="BENCH_pr4.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr5.json",
                     default=None, metavar="PATH",
-                    help="smoke mode: write fig13/fig14/shard-scaling "
-                         "headline numbers to PATH (default BENCH_pr4.json) "
-                         "and exit")
+                    help="smoke mode: write fig13/fig14/shard-scaling/"
+                         "fig7-sampling headline numbers to PATH (default "
+                         "BENCH_pr5.json) and exit")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="with --json: fail if the gids preset's e2e "
                          "regressed vs this earlier BENCH_*.json")

@@ -77,3 +77,28 @@ for placement in ("hash", "degree"):
           f"ms/iter | rows/shard {r.shard_counts().tolist()} | "
           f"straggler shard {burst.straggler} "
           f"(imbalance {burst.imbalance:.3f})")
+
+# -- topology plane: sampling itself becomes a priced, tiered stage -----------
+# `gids-topo` partitions the CSR adjacency into 4 KB edge pages placed by a
+# degree-aware admission policy: GPU-resident hot adjacency, a pinned-host
+# middle, and storage-backed CSR pages.  Blocks and features are
+# bit-identical to `gids` with the same seed — but plan_next() is now priced
+# like execute(): every hop reports its edge-page tier split and the
+# modelled sampling time folds into prep/exposed prep.
+loader = GIDSDataLoader(
+    graph, features,
+    LoaderConfig(batch_size=1024, fanouts=(10, 5), data_plane="gids-topo",
+                 topo_gpu_fraction=0.25, topo_host_fraction=0.5,
+                 cache_lines=8192, window_depth=8, cbuf_fraction=0.1),
+    ssd=SAMSUNG_980PRO)
+batch = loader.next_batch()
+topo = loader.topo
+print(f"\n[gids-topo] adjacency pages (hbm, host, storage) = "
+      f"{topo.tier_pages()} | prep {batch.prep_time_s*1e6:.1f} us "
+      f"(sampling {batch.sample_time_s*1e6:.1f} us of it)")
+for r in batch.blocks.hop_reports:
+    print(f"  hop {r.hop}: {r.n_edge_reads} edge reads -> "
+          f"pages hbm={r.pages_by_tier[0]} host={r.pages_by_tier[1]} "
+          f"storage={r.pages_by_tier[2]} "
+          f"({r.n_storage_ios} coalesced IOs, "
+          f"{r.coalesce_factor:.0f} reads/IO) | {r.time_s*1e6:.1f} us")

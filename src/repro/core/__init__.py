@@ -23,6 +23,9 @@ from .storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO, SSDSpec,
 from .tiers import (ConstantBufferTier, DeviceCacheTier, GatherPlan,
                     KVSlotTier, ShardedStorageTier, StorageTier, Tier,
                     build_plan)
+from .topology import (TieredTopologyStore, TopologyGatherReport,
+                       admission_names, host_sampling_time, make_admission,
+                       register_admission)
 
 __all__ = [
     "AccumulatorConfig", "DynamicAccessAccumulator", "MergedWindow",
@@ -40,4 +43,6 @@ __all__ = [
     "price_sharded_burst", "required_accesses", "simulate_burst",
     "ConstantBufferTier", "DeviceCacheTier", "GatherPlan", "KVSlotTier",
     "ShardedStorageTier", "StorageTier", "Tier", "build_plan",
+    "TieredTopologyStore", "TopologyGatherReport", "admission_names",
+    "host_sampling_time", "make_admission", "register_admission",
 ]

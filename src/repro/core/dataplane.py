@@ -208,6 +208,14 @@ class DataPlaneSpec:
                only modelled time and tier telemetry change.  Requires
                "overlapped" pricing (a page-fault plane has no burst to
                merge).
+    topology:  sampling runs against a `TieredTopologyStore`
+               (core/topology.py): the CSR adjacency is partitioned into
+               page-granular tiers (GPU hot adjacency / pinned host /
+               storage-backed CSR pages), every hop's edge-page reads are
+               priced, and `Batch.prep_time_s` (hence `exposed_prep_s`)
+               includes the modelled sampling time — `plan_next()` becomes
+               a priced stage symmetrical to `execute()`.  Blocks and
+               features stay bit-identical to the un-tiered plane.
     """
 
     name: str
@@ -216,6 +224,7 @@ class DataPlaneSpec:
     lookahead: bool = True
     prefetch: int = 0
     merge_execute: bool = False
+    topology: bool = False
     description: str = ""
 
     def __post_init__(self) -> None:
@@ -321,6 +330,10 @@ class DataPlane:
     def merge_execute(self) -> bool:
         return self.spec.merge_execute
 
+    @property
+    def topology(self) -> bool:
+        return self.spec.topology
+
     def price(self, timeline: StorageTimeline, report,
               outstanding: int) -> float:
         return timeline.price_batch(report, outstanding=outstanding,
@@ -411,6 +424,25 @@ DataPlaneSpec.register(DataPlaneSpec(
                 "line coalescing is shard-local ((shard, line) keys), and "
                 "the window prices as per-shard bursts completing at the "
                 "max over shards (straggler telemetry included)."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="gids-topo",
+    tiers=(tier("window_cache"), tier("constant_buffer"), tier("storage")),
+    pricing="overlapped", lookahead=True, topology=True,
+    description="GIDS with the topology plane: sampling reads a tiered "
+                "adjacency store (GPU hot pages + pinned host + storage-"
+                "backed CSR pages, degree-aware admission) and is PRICED — "
+                "exposed prep covers sampling and gather, per-hop tier "
+                "splits reported (Fig. 7 sampling-throughput story)."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="gids-topo-merged",
+    tiers=(tier("window_cache"), tier("constant_buffer"), tier("storage")),
+    pricing="overlapped", lookahead=True, merge_execute=True, topology=True,
+    description="Topology-tiered sampling composed with merged-window "
+                "execution: each batch's priced sampling time rides on top "
+                "of its amortized share of the window's coalesced feature "
+                "burst."))
 
 DataPlaneSpec.register(DataPlaneSpec(
     name="pinned-host",

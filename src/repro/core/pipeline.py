@@ -51,6 +51,17 @@ tier's per-shard `SSDSpec`s into `StorageTimeline.shard_specs`, and
 imbalance).  Features, blocks, and per-tier counts are bit-identical to the
 unsharded plane — only the storage pricing and shard telemetry change.
 
+On a *topology* plane (`DataPlaneSpec.topology`, presets `gids-topo` /
+`gids-topo-merged`) stage 1 itself is PRICED: sampling runs against a
+`TieredTopologyStore` (core/topology.py) whose CSR edge pages are placed
+across GPU/host/storage tiers by a registered admission policy, each hop
+emits a `TopologyGatherReport` (edge pages by tier, coalesced page IOs,
+modelled hop time), and the summed sampling time folds into
+`Batch.prep_time_s` — so `exposed_prep_s` finally covers the whole Fig. 1
+prep path, sampling and gather.  Blocks and features stay bit-identical to
+the corresponding un-tiered plane (the tiered sampler shares the host
+sampler's RNG stream and math).
+
 Other orchestration, common to both stages:
 
   * the accumulator recomputes the merge depth from live telemetry
@@ -93,6 +104,12 @@ from .dataplane import DataPlane, DataPlaneSpec
 from .feature_store import GatherReport
 from .prefetch import PrefetchEngine
 from .storage_sim import SSDSpec, StorageTimeline, INTEL_OPTANE
+from .topology import TieredTopologyStore
+
+#: Sampler names the loader knows how to drive.  `LoaderConfig` validates
+#: at construction — an unknown sampler fails when the config is built, not
+#: on the first batch.
+SAMPLERS = ("neighbor", "ladies")
 
 
 @dataclasses.dataclass
@@ -115,11 +132,22 @@ class LoaderConfig:
     # placement policy (core/sharding.py) decides node -> shard
     n_shards: int = 1
     placement: str = "hash"
+    # topology plane (gids-topo / gids-topo-merged): fraction of the CSR
+    # edge pages resident in GPU memory / pinned host memory (remainder is
+    # storage-backed), and which registered admission policy
+    # (core/topology.py) ranks pages into the budgets
+    topo_admission: str = "degree"
+    topo_gpu_fraction: float = 0.25
+    topo_host_fraction: float = 0.5
     seed: int = 0
     # deprecated spelling of data_plane; kept so old call sites keep running
     mode: dataclasses.InitVar[str | None] = None
 
     def __post_init__(self, mode: str | None) -> None:
+        if self.sampler not in SAMPLERS:
+            raise ValueError(
+                f"unknown sampler {self.sampler!r}; known samplers: "
+                f"{SAMPLERS}")
         # an explicitly-set data_plane always wins over the deprecated mode
         # kwarg: dataclasses.replace() re-feeds the shimmed `mode` read back
         # through __init__, and must not revert a data_plane change or
@@ -166,8 +194,12 @@ class Batch:
     blocks: SampledBlocks
     features: np.ndarray          # rows for blocks.all_nodes
     report: GatherReport
-    prep_time_s: float            # modelled data-preparation time
+    prep_time_s: float            # modelled data-preparation time; on a
+                                  # topology plane this INCLUDES sampling
     merge_depth: int
+    # modelled sampling time folded into prep_time_s (0 on planes without a
+    # topology store; per-hop detail lives on blocks.hop_reports)
+    sample_time_s: float = 0.0
     # critical-path prep after prefetch overlap; None at construction
     # resolves to prep_time_s (synchronous planes expose everything)
     exposed_prep_s: float | None = None
@@ -208,6 +240,25 @@ class GIDSDataLoader:
                     "sharded plane set n_shards (one queue per SSD) and "
                     "leave n_ssd=1")
             self.timeline.shard_specs = backstop.resolve_shard_specs(ssd)
+        # topology plane: sampling reads a tiered adjacency store and is
+        # priced per hop (plan_next becomes a priced stage).  The store owns
+        # its own StorageTimeline — the edge-page namespace drains separate
+        # queues from the feature namespace
+        self.topo: TieredTopologyStore | None = None
+        if self.plane.topology:
+            if cfg.sampler != "neighbor":
+                raise ValueError(
+                    f"topology plane {self.spec.name!r} requires the "
+                    f"'neighbor' sampler (got {cfg.sampler!r}): LADIES "
+                    "scores whole frontier columns, not page-local "
+                    "adjacency reads, so its storage traffic is not "
+                    "page-priceable")
+            self.topo = TieredTopologyStore.from_graph(
+                graph, admission=cfg.topo_admission,
+                gpu_fraction=cfg.topo_gpu_fraction,
+                host_fraction=cfg.topo_host_fraction,
+                ssd=ssd, n_ssd=cfg.n_ssd, n_shards=cfg.n_shards,
+                placement=cfg.placement, seed=cfg.seed)
         self._lookahead: deque[tuple[dict, SampledBlocks]] = deque()
         self._win_idx = 0   # lookahead entries already pushed to cache window
         # merged-window planes stage whole executed windows here (snapshot
@@ -223,6 +274,12 @@ class GIDSDataLoader:
         seeds = self.rng.choice(self.train_ids, size=cfg.batch_size,
                                 replace=len(self.train_ids) < cfg.batch_size)
         if cfg.sampler == "neighbor":
+            if self.topo is not None:
+                # same math, same RNG stream — blocks bit-identical to the
+                # host sampler, plus per-hop priced TopologyGatherReports
+                from repro.sampling.tiered import tiered_sample_blocks
+                return tiered_sample_blocks(self.graph, self.topo, seeds,
+                                            cfg.fanouts, self.rng)
             return host_sample_blocks(self.graph, seeds, cfg.fanouts, self.rng)
         elif cfg.sampler == "ladies":
             return ladies_sample_blocks(self.graph, seeds,
@@ -288,8 +345,12 @@ class GIDSDataLoader:
 
         outstanding = self.accumulator.outstanding(blocks.num_requests)
         t = self.plane.price(self.timeline, report, outstanding)
+        # a topology plane priced the sampling stage when the blocks were
+        # drawn (plan_next); prep now covers the full Fig. 1 path
+        sample_s = float(getattr(blocks, "sample_time_s", 0.0))
         return Batch(blocks=blocks, features=rows, report=report,
-                     prep_time_s=t, merge_depth=plan.merge_depth)
+                     prep_time_s=t + sample_s, merge_depth=plan.merge_depth,
+                     sample_time_s=sample_s)
 
     # -- merged-window execution ------------------------------------------------
     def plan_window(self) -> list[BatchPlan]:
@@ -329,9 +390,16 @@ class GIDSDataLoader:
                                 window_report.redirected)
         prep = (self.timeline.price_merged_burst(window_report)
                 / len(plans))
-        return [Batch(blocks=p.blocks, features=rows, report=rep,
-                      prep_time_s=prep, merge_depth=len(plans))
-                for p, rows, rep in zip(plans, rows_list, reports)]
+        # each batch's own priced sampling time rides on top of its
+        # amortized share of the window's feature burst
+        out = []
+        for p, rows, rep in zip(plans, rows_list, reports):
+            sample_s = float(getattr(p.blocks, "sample_time_s", 0.0))
+            out.append(Batch(blocks=p.blocks, features=rows, report=rep,
+                             prep_time_s=prep + sample_s,
+                             merge_depth=len(plans),
+                             sample_time_s=sample_s))
+        return out
 
     # -- iteration -------------------------------------------------------------
     def __iter__(self) -> Iterator[Batch]:

@@ -32,6 +32,13 @@ here: shard awareness rides inside the loader's execute stages — the plans
 the engine stages already carry per-request shard ids through their
 `GatherPlan`s, and the prep times it discounts were already priced at the
 max over per-shard queue drains.
+
+Topology planes (`gids-topo`, `gids-topo-merged`) likewise ride through
+unchanged: the priced sampling stage runs inside `plan_next()` (the blocks
+the engine stages already carry their per-hop `TopologyGatherReport`s and
+summed `sample_time_s`), `Batch.prep_time_s` arrives with sampling folded
+in, and the overlap discount therefore hides sampling time behind model
+compute exactly like gather time — the paper's full prep path, decoupled.
 """
 from __future__ import annotations
 

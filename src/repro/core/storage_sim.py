@@ -42,6 +42,16 @@ HBM_BW = 1555e9              # A100 HBM2 (Table 1); v5e would be 819e9
 # fault plus readahead pollution); calibrated so the mmap baseline reproduces
 # the paper's Fig. 5 stage breakdown shape.
 MMAP_FAULT_OVERHEAD_S = 4e-6
+# -- topology (sampling-stage) constants ---------------------------------------
+# CPU-sampling baseline (paper Fig. 3/7: the "CPU sampling" path): adjacency
+# reads are dependent pointer chases — one random DRAM access each — spread
+# across a thread pool, and every hop ends in a host->device handoff.
+HOST_RANDOM_READ_S = 100e-9  # random DRAM access (row miss + pointer chase)
+CPU_SAMPLE_THREADS = 16
+HOP_SYNC_S = 10e-6           # per-hop CPU->GPU handoff (copy launch + sync)
+# GPU-initiated sampling pays one kernel launch per hop; device reads inside
+# the hop are covered by the tier terms of `price_topology_hop`.
+TOPO_HOP_LAUNCH_S = 5e-6
 
 
 @dataclasses.dataclass
@@ -241,6 +251,23 @@ def price_sharded_burst(specs, shard_rows, shard_lines, bytes_per_row: int,
         spec_names=tuple(s.name for s in specs), ssd_bytes=total_bytes)
 
 
+def host_sampling_hop_time(n_edge_reads: int, n_frontier: int,
+                           id_bytes: int = 8,
+                           threads: int = CPU_SAMPLE_THREADS) -> float:
+    """One hop of the CPU-sampling baseline: `n_edge_reads` sampled
+    adjacency words plus the indptr pair per frontier node, each a random
+    DRAM access amortized over `threads`; the sampled block ships to the
+    device over PCIe and the hop ends in one host->device handoff.  The
+    GPU-tiered counterpart is `StorageTimeline.price_topology_hop` — the
+    fig7 sampling benchmark compares the two on identical hops."""
+    if n_edge_reads <= 0 and n_frontier <= 0:
+        return 0.0
+    reads = n_edge_reads + 2 * n_frontier
+    t_cpu = reads * HOST_RANDOM_READ_S / max(threads, 1)
+    t_xfer = n_edge_reads * id_bytes / PCIE_GEN4_BW
+    return t_cpu + t_xfer + HOP_SYNC_S
+
+
 def overlap_exposed(prep_s: float, compute_s: float) -> float:
     """max(0, prep - compute): the prep time left on the critical path after
     `compute_s` seconds of concurrent model compute hid the rest.  Pure —
@@ -355,6 +382,41 @@ class StorageTimeline:
         t_hbm = n_hbm * bpr / HBM_BW if n_hbm else 0.0
         t_pcie = (ssd_bytes + n_host * bpr) / PCIE_GEN4_BW
         return max(t_ssd, t_host, t_hbm, t_pcie)
+
+    def price_topology_hop(self, report, io_bytes: int = IO_BYTES) -> float:
+        """Price one GPU-initiated sampling hop over a tiered topology store
+        (core/topology.py).  `report` is a `TopologyGatherReport`: unique
+        4 KB edge pages touched, split (hbm, host, storage).
+
+        HBM-resident pages read at HBM bandwidth; pinned-host pages stream
+        zero-copy over PCIe; storage pages are page-granular IOs — one
+        4 KB line each, already deduplicated (the topology twin of
+        `coalesce_lines`) — served as one burst whose elapsed time comes
+        from the Eq. 2-3 model at the burst's own concurrency.  On a
+        sharded topology namespace (`shard_specs` set and the report
+        carrying per-shard page counts) the burst completes at the MAX over
+        per-shard queue drains (`price_sharded_burst`), exactly like the
+        feature plane's merged burst.  Tier reads overlap (GPU threads
+        cover all three paths concurrently); the pinned-host pages' own
+        service link IS PCIe (zero-copy reads), so they appear only inside
+        the combined host+storage PCIe ingress cap — no separate host
+        term; every hop pays one kernel launch."""
+        n_hbm, n_host, n_sto = report.pages_by_tier
+        if report.n_edge_reads <= 0:
+            return 0.0
+        t_hbm = n_hbm * io_bytes / HBM_BW
+        t_sto = 0.0
+        if n_sto:
+            shard_pages = getattr(report, "shard_pages", ())
+            if self.shard_specs and shard_pages:
+                burst = price_sharded_burst(self.shard_specs, shard_pages,
+                                            shard_pages, io_bytes, io_bytes)
+                self.last_shard_burst = burst
+                t_sto = burst.elapsed_s
+            else:
+                t_sto = model_burst(self.spec, n_sto, self.n_ssd).elapsed_s
+        t_pcie = (n_host + n_sto) * io_bytes / PCIE_GEN4_BW
+        return TOPO_HOP_LAUNCH_S + max(t_hbm, t_sto, t_pcie)
 
     def gids_batch_time(self, n_storage: int, n_host: int, n_hbm: int,
                         feat_bytes: int, outstanding: int) -> float:

@@ -19,6 +19,13 @@ existing components:
   KVSlotTier         — a KV-cache slot pool for the serve engine (a request
                        "hits" while it holds a slot; retirement = evictable)
 
+This module owns the *feature-row* namespace.  The *topology* namespace —
+the CSR adjacency partitioned into page-granular GPU/host/storage tiers for
+GPU-initiated sampling — mirrors the same ideas one level down in
+`core/topology.py` (`TieredTopologyStore`, with admission policies
+registered like `core/sharding.py` placements); its tier vocabulary reuses
+`LATENCY_CLASSES` so telemetry reads the same across both planes.
+
 `build_plan` folds an ordered tier stack over one batch of requests into a
 `GatherPlan`: a per-request tier-assignment array that is, by construction, a
 partition — every request is served by exactly one tier.  The plan feeds both

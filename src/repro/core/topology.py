@@ -1,0 +1,407 @@
+"""Tiered graph-topology store — hybrid placement for the *structure*
+namespace (paper §2.3/§3.1: graph topology lives in GPU/CPU memory so GPU
+threads sample without CPU round-trips; FastGL 2024 shows sampling itself is
+a first-order GPU bottleneck; Data Tiering 2021 supplies the degree-aware
+admission signal).
+
+This module mirrors the feature data plane one namespace over: where
+`core/tiers.py` partitions feature *rows* across an ordered tier stack, the
+`TieredTopologyStore` partitions the CSR adjacency (`graph.indices`) into
+4 KB *edge pages* and places each page in exactly one of three tiers —
+
+  hbm      GPU-resident hot adjacency (high-degree head of the graph)
+  host     pinned host memory, read zero-copy over PCIe
+  storage  SSD-backed CSR pages, priced through `StorageTimeline` with the
+           same page-granular IO accounting as the feature plane (a page IS
+           a 4 KB line, so deduplicating a hop's edge reads per page is the
+           topology analogue of `storage_sim.coalesce_lines`; with
+           `n_shards > 1` the pages stripe across independent SSD queues
+           via the SAME placement registry as `core/sharding.py` and price
+           at the max over per-shard drains, `price_sharded_burst`)
+
+Which page goes where is an *admission policy* resolved through a registry
+(`register_admission` / `make_admission`) shaped exactly like the placement
+registry in `core/sharding.py`:
+
+  degree  — Data-Tiering-style expected-touch score: a page is hot in
+            proportion to how often uniform neighbor sampling reads it
+            (Σ over its edge words of (indeg(owner) + 1) / outdeg(owner),
+            up to the shared fanout constant; the +1 smooths zero-indeg
+            owners — see `page_scores`); hottest pages fill the GPU
+            budget, the next-hottest the host budget, the tail sinks to
+            storage
+  range   — naive prefix placement in id order (good when ids are already
+            degree-sorted, a skew-sensitivity baseline otherwise)
+  random  — seeded random placement (the BaM-style no-information baseline)
+
+`indptr` ((N+1) * 8 B — two orders of magnitude smaller than `indices`) is
+modelled as always GPU-resident; only edge-page reads are priced.
+
+The sampling stage consumes this store through
+`repro.sampling.tiered.tiered_sample_blocks`, which emits one
+`TopologyGatherReport` per hop (edge pages by tier, coalesced IOs, modelled
+hop time) — the report that finally makes `GIDSDataLoader.plan_next()` a
+*priced* stage symmetrical to `execute()`.  The device data path is
+`frontier_gather` (kernels/ops.py `tiered_frontier_gather`): resident pages
+are gathered from the HBM hot-page array through the same Pallas
+`tiered_gather` kernel the feature plane uses, non-resident pages ride the
+staged fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .sharding import make_placement
+from .storage_sim import (INTEL_OPTANE, IO_BYTES, SSDSpec, StorageTimeline,
+                          host_sampling_hop_time)
+
+#: Topology tier indices, fastest first — aligned with
+#: `tiers.LATENCY_CLASSES` so telemetry vocabulary matches the feature plane.
+TOPO_TIER_NAMES = ("hbm", "host", "storage")
+TIER_HBM, TIER_HOST, TIER_STORAGE = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyGatherReport:
+    """Per-hop edge-page telemetry from one tiered sampling hop.
+
+    n_frontier:     destination nodes sampled this hop
+    n_edge_reads:   adjacency words actually read (degree-0 destinations
+                    read nothing — their fan-out self-pads)
+    pages_by_tier:  unique 4 KB edge pages touched, split (hbm, host,
+                    storage).  A page is one IO line, so the storage entry
+                    IS the hop's coalesced IO count: reads sharing a page
+                    cost one IO, the topology twin of
+                    `storage_sim.coalesce_lines`
+    reads_by_tier:  the same edge reads split by serving tier
+    shard_pages:    per-shard storage-page counts on a sharded namespace
+                    (sums to `n_storage_ios`); empty when unsharded
+    time_s:         modelled hop time (`StorageTimeline.price_topology_hop`)
+    """
+
+    hop: int
+    n_frontier: int
+    n_edge_reads: int
+    pages_by_tier: tuple[int, int, int]
+    reads_by_tier: tuple[int, int, int]
+    shard_pages: tuple[int, ...] = ()
+    time_s: float = 0.0
+
+    @property
+    def n_pages(self) -> int:
+        return sum(self.pages_by_tier)
+
+    @property
+    def n_storage_ios(self) -> int:
+        """Coalesced storage IOs: one per unique storage-tier page."""
+        return self.pages_by_tier[TIER_STORAGE]
+
+    @property
+    def coalesce_factor(self) -> float:
+        """Storage edge reads folded into each page-granular IO."""
+        return self.reads_by_tier[TIER_STORAGE] / max(self.n_storage_ios, 1)
+
+
+# -- admission-policy registry (same pattern as core/sharding.py) --------------
+
+AdmissionFactory = Callable[..., np.ndarray]
+_ADMISSIONS: dict[str, AdmissionFactory] = {}
+
+
+def register_admission(name: str) -> Callable[[AdmissionFactory],
+                                              AdmissionFactory]:
+    """Register a factory ``(n_pages, *, gpu_pages, host_pages, page_score,
+    seed) -> (n_pages,) int8 assignment`` (values `TIER_*`).  Factories
+    receive every context keyword and ignore what they do not need, so
+    score-, locality-, or feedback-driven policies slot in without touching
+    the store."""
+    def deco(fn: AdmissionFactory) -> AdmissionFactory:
+        _ADMISSIONS[name] = fn
+        return fn
+    return deco
+
+
+def admission_names() -> tuple[str, ...]:
+    return tuple(sorted(_ADMISSIONS))
+
+
+def make_admission(name: str, n_pages: int, *, gpu_pages: int,
+                   host_pages: int, page_score: np.ndarray | None = None,
+                   seed: int = 0) -> np.ndarray:
+    try:
+        factory = _ADMISSIONS[name]
+    except KeyError:
+        raise KeyError(f"unknown admission policy {name!r}; registered: "
+                       f"{admission_names()}") from None
+    assignment = np.asarray(factory(
+        n_pages, gpu_pages=gpu_pages, host_pages=host_pages,
+        page_score=page_score, seed=seed), np.int8)
+    if assignment.shape != (n_pages,):
+        raise ValueError(f"admission {name!r} returned shape "
+                         f"{assignment.shape}, expected ({n_pages},)")
+    return assignment
+
+
+def _fill_by_order(order: np.ndarray, n_pages: int, gpu_pages: int,
+                   host_pages: int) -> np.ndarray:
+    """Assign tiers down a priority order: the first `gpu_pages` of `order`
+    go to HBM, the next `host_pages` to pinned host, the rest to storage.
+    Growing either budget only ever moves a page to a faster tier (nested
+    prefixes), which is what makes modelled sampling time monotone in the
+    GPU budget (benchmarks/fig7_sampling.py pins this)."""
+    assignment = np.full(n_pages, TIER_STORAGE, np.int8)
+    assignment[order[:gpu_pages]] = TIER_HBM
+    assignment[order[gpu_pages:gpu_pages + host_pages]] = TIER_HOST
+    return assignment
+
+
+@register_admission("degree")
+def _degree_admission(n_pages: int, *, gpu_pages: int, host_pages: int,
+                      page_score=None, **_ctx) -> np.ndarray:
+    """Data-Tiering-style: hottest pages (by expected sampled-edge touches)
+    claim the fastest tiers."""
+    if page_score is None:
+        raise ValueError("degree admission needs per-page scores (build the "
+                         "store via TieredTopologyStore.from_graph)")
+    order = np.argsort(-np.asarray(page_score), kind="stable")
+    return _fill_by_order(order, n_pages, gpu_pages, host_pages)
+
+
+@register_admission("range")
+def _range_admission(n_pages: int, *, gpu_pages: int, host_pages: int,
+                     **_ctx) -> np.ndarray:
+    return _fill_by_order(np.arange(n_pages), n_pages, gpu_pages, host_pages)
+
+
+@register_admission("random")
+def _random_admission(n_pages: int, *, gpu_pages: int, host_pages: int,
+                      seed=0, **_ctx) -> np.ndarray:
+    order = np.random.default_rng(seed).permutation(n_pages)
+    return _fill_by_order(order, n_pages, gpu_pages, host_pages)
+
+
+def _page_geometry(indices: np.ndarray, page_bytes: int) -> tuple[int, int]:
+    """(words per page, page count) for one CSR indices array — the single
+    definition every page-id computation derives from."""
+    page_words = max(1, page_bytes // indices.dtype.itemsize)
+    return page_words, _n_pages(len(indices), page_words)
+
+
+def _n_pages(n_words: int, page_words: int) -> int:
+    return max(1, -(-n_words // page_words))
+
+
+def page_scores(indptr: np.ndarray, indices: np.ndarray,
+                page_words: int) -> np.ndarray:
+    """Expected sampled-edge touches per page, up to the shared fanout
+    constant: uniform neighbor sampling reads a word of node v's adjacency
+    when v is in the frontier (frequency ∝ in-degree under neighbor-driven
+    frontiers) and then picks uniformly among its deg(v) words — so each
+    word scores (indeg(owner) + 1) / outdeg(owner), summed per page.  The
+    +1 is Laplace smoothing: seed nodes enter the frontier regardless of
+    in-degree, so a zero-indeg node's pages rank by 1/outdeg instead of
+    collapsing into an arbitrary tie at zero."""
+    n = len(indptr) - 1
+    outdeg = np.diff(indptr)
+    indeg = np.bincount(indices, minlength=n)
+    owner = np.repeat(np.arange(n, dtype=np.int64), outdeg)
+    word_score = (indeg[owner] + 1.0) / np.maximum(outdeg[owner], 1)
+    page = np.arange(len(indices), dtype=np.int64) // page_words
+    return np.bincount(page, weights=word_score,
+                       minlength=_n_pages(len(indices), page_words))
+
+
+# -- the store -----------------------------------------------------------------
+
+class TieredTopologyStore:
+    """Page-granular hybrid placement of one CSR adjacency.
+
+    `assignment[p]` is the tier of edge page `p` (TIER_HBM / TIER_HOST /
+    TIER_STORAGE over `indices[p*page_words : (p+1)*page_words]`);
+    `page_shard[p]` the SSD queue a storage-resident page drains through
+    (all zeros when `n_shards == 1`).  The store owns its own
+    `StorageTimeline` — the topology namespace's queues are distinct from
+    the feature namespace's, even when both model the same device class.
+    """
+
+    def __init__(self, graph, assignment: np.ndarray, *,
+                 page_bytes: int = IO_BYTES, policy: str = "degree",
+                 ssd: SSDSpec = INTEL_OPTANE, n_ssd: int = 1,
+                 page_shard: np.ndarray | None = None,
+                 shard_specs=None):
+        self.graph = graph
+        self.indptr = graph.indptr
+        self.indices = graph.indices
+        self.page_bytes = int(page_bytes)
+        self.page_words, self.n_pages = _page_geometry(self.indices,
+                                                       self.page_bytes)
+        assignment = np.asarray(assignment, np.int8)
+        if assignment.shape != (self.n_pages,):
+            raise ValueError(f"assignment shape {assignment.shape} does not "
+                             f"match {self.n_pages} edge pages")
+        self.assignment = assignment
+        self.policy = policy
+        self.page_shard = (np.zeros(self.n_pages, np.int16)
+                           if page_shard is None
+                           else np.asarray(page_shard, np.int16))
+        self.n_shards = (len(shard_specs) if shard_specs
+                         else int(self.page_shard.max(initial=0)) + 1)
+        self.timeline = StorageTimeline(ssd, n_ssd, shard_specs=shard_specs)
+        # device-side hot adjacency for the tiered-frontier gather kernel:
+        # slot table (page -> row in the compacted hot-page array), rows
+        # materialized lazily — the numpy pricing path never pays for jax
+        gpu_pages = np.nonzero(self.assignment == TIER_HBM)[0]
+        self.page_slot = np.full(self.n_pages, -1, np.int32)
+        self.page_slot[gpu_pages] = np.arange(len(gpu_pages), dtype=np.int32)
+        self._gpu_pages = gpu_pages
+        self._hot_pages_dev = None
+
+    # -- construction ----------------------------------------------------------
+    @classmethod
+    def from_graph(cls, graph, *, admission: str = "degree",
+                   gpu_fraction: float = 0.25, host_fraction: float = 0.5,
+                   page_bytes: int = IO_BYTES, ssd: SSDSpec = INTEL_OPTANE,
+                   n_ssd: int = 1, n_shards: int = 1,
+                   placement: str = "hash", shard_specs=None,
+                   seed: int = 0) -> "TieredTopologyStore":
+        """Budgeted build: `gpu_fraction` / `host_fraction` of the edge pages
+        go to the HBM / pinned-host tiers (clipped to a partition), placed by
+        the registered `admission` policy; the remainder is storage-backed.
+        With `n_shards > 1` the storage pages stripe across SSD queues via
+        the placement registry shared with the feature plane
+        (core/sharding.py) — the `degree` placement reuses the admission
+        page scores as its hotness signal."""
+        page_words, n_pages = _page_geometry(graph.indices, page_bytes)
+        gpu_pages = int(np.clip(round(gpu_fraction * n_pages), 0, n_pages))
+        host_pages = int(np.clip(round(host_fraction * n_pages), 0,
+                                 n_pages - gpu_pages))
+        # the score pass is O(E); skip it when nothing consumes a score —
+        # the built-in score-free policies ('range', 'random') with a
+        # non-degree page placement.  User-registered admissions always get
+        # one (they may rank by it, like 'degree' does).
+        score = None
+        if admission not in ("range", "random") or (
+                n_shards > 1 and placement == "degree"):
+            score = page_scores(graph.indptr, graph.indices, page_words)
+        assignment = make_admission(admission, n_pages, gpu_pages=gpu_pages,
+                                    host_pages=host_pages, page_score=score,
+                                    seed=seed)
+        page_shard = None
+        if n_shards > 1:
+            if n_ssd > 1:
+                raise ValueError(
+                    f"n_ssd={n_ssd} with a {n_shards}-shard topology store: "
+                    "per-shard queues and the pooled multiplier would model "
+                    "the same devices twice — set n_shards only")
+            pol = make_placement(placement, n_shards, num_nodes=n_pages,
+                                 degrees=score, seed=seed)
+            page_shard = np.asarray(pol.shard_of(np.arange(n_pages)),
+                                    np.int16)
+            if shard_specs is None:
+                shard_specs = (ssd,) * n_shards
+        return cls(graph, assignment, page_bytes=page_bytes,
+                   policy=admission, ssd=ssd, n_ssd=n_ssd,
+                   page_shard=page_shard, shard_specs=shard_specs)
+
+    # -- telemetry -------------------------------------------------------------
+    def tier_pages(self) -> tuple[int, int, int]:
+        """Edge pages resident per tier (hbm, host, storage)."""
+        counts = np.bincount(self.assignment, minlength=3)
+        return tuple(int(c) for c in counts[:3])
+
+    def tier_bytes(self) -> tuple[int, int, int]:
+        return tuple(c * self.page_bytes for c in self.tier_pages())
+
+    def hop_report(self, edge_positions: np.ndarray, *, hop: int = 0,
+                   n_frontier: int = 0) -> TopologyGatherReport:
+        """Price one hop's adjacency reads: map each read edge position to
+        its page, dedupe pages (page == 4 KB IO line, so this IS the
+        coalescing step), split by tier/shard, and model the hop time."""
+        pos = np.asarray(edge_positions, np.int64)
+        if len(pos) == 0:
+            return TopologyGatherReport(
+                hop=hop, n_frontier=int(n_frontier), n_edge_reads=0,
+                pages_by_tier=(0, 0, 0), reads_by_tier=(0, 0, 0),
+                shard_pages=(self.n_shards > 1) * (0,) * self.n_shards)
+        pages, read_counts = np.unique(pos // self.page_words,
+                                       return_counts=True)
+        tiers = self.assignment[pages]
+        pages_by_tier = tuple(
+            int(c) for c in np.bincount(tiers, minlength=3)[:3])
+        reads_by_tier = tuple(
+            int(c) for c in np.bincount(tiers, weights=read_counts,
+                                        minlength=3)[:3])
+        shard_pages = ()
+        if self.n_shards > 1:
+            sm = tiers == TIER_STORAGE
+            shard_pages = tuple(int(c) for c in np.bincount(
+                self.page_shard[pages[sm]], minlength=self.n_shards))
+        report = TopologyGatherReport(
+            hop=hop, n_frontier=int(n_frontier), n_edge_reads=len(pos),
+            pages_by_tier=pages_by_tier, reads_by_tier=reads_by_tier,
+            shard_pages=shard_pages)
+        return dataclasses.replace(
+            report, time_s=self.timeline.price_topology_hop(report))
+
+    # -- device data path ------------------------------------------------------
+    def hot_pages(self):
+        """The compacted HBM-resident hot-page array, (H, page_words) in the
+        adjacency dtype — row `page_slot[p]` holds page p's edge words.  A
+        zero-budget store materializes a single dummy row so the kernel's
+        clamped -1 slots stay in bounds."""
+        if self._hot_pages_dev is None:
+            import jax.numpy as jnp                   # deferred: numpy-only
+            rows = (self._page_rows(self._gpu_pages)
+                    if len(self._gpu_pages)
+                    else np.zeros((1, self.page_words), self.indices.dtype))
+            self._hot_pages_dev = jnp.asarray(rows)
+        return self._hot_pages_dev
+
+    def _page_rows(self, pages: np.ndarray) -> np.ndarray:
+        """Materialize whole pages from the host CSR (tail page padded by
+        clamping — offsets never address past the real edge count)."""
+        idx = (np.asarray(pages, np.int64)[:, None] * self.page_words
+               + np.arange(self.page_words, dtype=np.int64)[None, :])
+        return self.indices[np.minimum(idx, len(self.indices) - 1)]
+
+    def frontier_gather(self, edge_positions: np.ndarray,
+                        use_pallas: bool = True) -> np.ndarray:
+        """Gather sampled neighbor words through the tiered page store on
+        device: unique touched pages are fetched once — HBM-resident ones
+        from `hot_pages()` through the `tiered_gather` Pallas kernel,
+        the rest from the staged (host/storage) fallback — then each read
+        extracts its word (`ops.tiered_frontier_gather`).  Bit-identical to
+        `graph.indices[edge_positions]`."""
+        import jax.numpy as jnp
+        from repro.kernels import ops
+        pos = np.asarray(edge_positions, np.int64)
+        pages, inverse = np.unique(pos // self.page_words,
+                                   return_inverse=True)
+        offsets = (pos % self.page_words).astype(np.int32)
+        slots = self.page_slot[pages]
+        # stage only the NON-resident pages' bytes: the kernel reads staged
+        # row i iff slots[i] < 0 — gathering host rows for HBM-resident
+        # pages would be pure wasted copy on the device data path
+        staged = np.zeros((len(pages), self.page_words), self.indices.dtype)
+        miss = slots < 0
+        if miss.any():
+            staged[miss] = self._page_rows(pages[miss])
+        out = ops.tiered_frontier_gather(
+            jnp.asarray(slots), self.hot_pages(), jnp.asarray(staged),
+            jnp.asarray(inverse.astype(np.int32)), jnp.asarray(offsets),
+            use_pallas=use_pallas)
+        return np.asarray(out)
+
+
+def host_sampling_time(reports) -> float:
+    """The CPU-sampling baseline priced over the SAME hops a tiered run
+    reported: per hop, `n_edge_reads` pointer-chasing DRAM reads (plus the
+    indptr pair per frontier node) across `CPU_SAMPLE_THREADS`, the sampled
+    block shipped over PCIe, and one host->device handoff
+    (`storage_sim.host_sampling_hop_time`).  The fig7 benchmark gates
+    tiered-beats-host on this model."""
+    return sum(host_sampling_hop_time(r.n_edge_reads, r.n_frontier)
+               for r in reports)

@@ -18,6 +18,28 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def index_dtype(max_index: int) -> type:
+    """Smallest numpy integer dtype that can index `max_index` items.
+    Shared by the host and device samplers (and `to_device`) so node/edge
+    id handling cannot drift between them: past 2^31 ids everything widens
+    to int64 together instead of one path silently truncating."""
+    return np.int64 if max_index >= 2 ** 31 else np.int32
+
+
+def device_index_dtype(num_nodes: int, num_edges: int):
+    """The jnp dtype device-side sampling must use for this graph's node and
+    edge ids.  Graphs beyond 2^31 nodes/edges need int64, which JAX only
+    provides under `jax_enable_x64` — fail loudly instead of overflowing."""
+    if index_dtype(max(num_nodes, num_edges)) is np.int64:
+        if not jax.config.jax_enable_x64:
+            raise ValueError(
+                f"graph has {num_nodes:,} nodes / {num_edges:,} edges — "
+                "device sampling needs int64 ids; enable jax_enable_x64 "
+                "(int32 would silently wrap past 2^31)")
+        return jnp.int64
+    return jnp.int32
+
+
 @dataclasses.dataclass
 class CSRGraph:
     """Host (numpy) CSR adjacency: out-neighbors of node v are
@@ -55,9 +77,12 @@ class CSRGraph:
                         feature_dim=self.feature_dim, name=self.name + "_rev")
 
     def to_device(self, pad_degree: Optional[int] = None) -> "DeviceCSR":
+        # indptr values run up to num_edges, indices up to num_nodes: one
+        # shared dtype decision (int64-safe, loud past 2^31 without x64)
+        dt = device_index_dtype(self.num_nodes, self.num_edges)
         return DeviceCSR(
-            indptr=jnp.asarray(self.indptr, dtype=jnp.int32),
-            indices=jnp.asarray(self.indices, dtype=jnp.int32),
+            indptr=jnp.asarray(self.indptr, dtype=dt),
+            indices=jnp.asarray(self.indices, dtype=dt),
             num_nodes=self.num_nodes,
         )
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention as _flash
 from .segment_mean import segment_mean as _segmean
+from .tiered_gather import frontier_gather as _frontier_gather
 from .tiered_gather import tiered_gather as _tgather
 from .tiered_gather import tiered_gather_unique as _tgather_unique
 
@@ -49,6 +50,24 @@ def tiered_gather_unique(slots, cache, staged, inverse,
                         inverse, axis=0)
     return _tgather_unique(slots, cache, staged, inverse, block_b=block_b,
                            block_d=block_d, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_pallas", "block_b", "block_d"))
+def tiered_frontier_gather(page_slots, hot_pages, staged_pages, inverse,
+                           offsets, use_pallas: bool = True,
+                           block_b: int | None = None, block_d: int = 512):
+    """Tiered-frontier gather for GPU-initiated sampling: each unique edge
+    page a hop touched is fetched once through the tiered gather kernel
+    (HBM hot pages vs staged fallback), then every sampled read extracts
+    its neighbor word via (inverse, offset) — see `TieredTopologyStore.
+    frontier_gather` (core/topology.py) for the host-side page dedup."""
+    if not use_pallas:
+        pages = ref.tiered_gather_ref(page_slots, hot_pages, staged_pages)
+        return pages[inverse, offsets]
+    return _frontier_gather(page_slots, hot_pages, staged_pages, inverse,
+                            offsets, block_b=block_b, block_d=block_d,
+                            interpret=_INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

@@ -274,6 +274,29 @@ def tiered_gather_unique(slots: jax.Array, cache: jax.Array,
     return out
 
 
+def frontier_gather(page_slots: jax.Array, hot_pages: jax.Array,
+                    staged_pages: jax.Array, inverse: jax.Array,
+                    offsets: jax.Array, *, block_b: int | None = None,
+                    block_d: int = 512, interpret: bool = False) -> jax.Array:
+    """Tiered-frontier gather for GPU-initiated sampling
+    (core/topology.py): fetch each unique 4 KB edge *page* a hop touched
+    exactly once through the tiered row kernel — HBM-resident hot pages via
+    their slot DMA, the rest from the staged (host/storage) fallback — then
+    extract each sampled read's neighbor word.
+
+    `page_slots` (P,) index `hot_pages` (H, W) or -1 for staged row i of
+    `staged_pages` (P, W); `inverse` (N,) maps each of the hop's N edge
+    reads to its page, `offsets` (N,) to its word within the page.  The
+    page fetch IS `tiered_gather` (pages are feature-rows of width W =
+    page_words), so the validated single-row/blocked DMA layouts carry
+    over unchanged; the word extraction is one vectorized take."""
+    pages = tiered_gather(page_slots, hot_pages, staged_pages,
+                          block_b=block_b, block_d=block_d,
+                          interpret=interpret)
+    return pages[inverse, offsets]
+
+
 tiered_gather_cpu = functools.partial(tiered_gather, interpret=True)
 tiered_gather_unique_cpu = functools.partial(tiered_gather_unique,
                                              interpret=True)
+frontier_gather_cpu = functools.partial(frontier_gather, interpret=True)

@@ -1,12 +1,20 @@
 """GraphSAGE uniform neighborhood sampling (paper §2.2.2).
 
-Two implementations with identical semantics:
+Three implementations with identical semantics:
 
 * `host_sample_blocks` — numpy, drives the prefetch pipeline (the paper's
   "CPU sampling" baseline path, Fig. 3/7).
 * `device_sample_blocks` — jittable JAX over a `DeviceCSR` (the paper's
   GPU-sampling path: latency hidden by parallelism).  Fixed fan-out with
   self-padding (absent neighbors repeat the seed), so shapes are static.
+* `repro.sampling.tiered.tiered_sample_blocks` — the host math run against
+  a `TieredTopologyStore` (core/topology.py): bit-identical blocks plus a
+  priced per-hop `TopologyGatherReport`.
+
+All three share `sample_hop` / the `index_dtype` policy (graph/csr.py), so
+the uniform-with-replacement math and the id-width handling cannot drift:
+ids stay int64-safe end to end, and a graph past 2^31 nodes/edges widens
+the device path (or fails loudly without x64) instead of silently wrapping.
 
 A "block" (DGL terminology) for hop ``l`` maps destination nodes (seeds of
 that hop) to their sampled neighbors.  The union of all hops' nodes is the
@@ -22,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graph.csr import CSRGraph, DeviceCSR
+from repro.graph.csr import CSRGraph, DeviceCSR, device_index_dtype
 
 
 @dataclasses.dataclass
@@ -41,27 +49,54 @@ class SampledBlocks:
     num_requests: int
 
 
-def host_sample_blocks(graph: CSRGraph, seeds: np.ndarray,
-                       fanouts: Sequence[int], rng: np.random.Generator
-                       ) -> SampledBlocks:
+def sample_hop(graph: CSRGraph, frontier: np.ndarray, fanout: int,
+               rng: np.random.Generator
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One uniform-with-replacement hop (matches DGL replace=True fast
+    path); degree-0 destinations self-loop.  Shared by `host_sample_blocks`
+    and the tiered sampler so their RNG consumption and neighbor math are
+    bit-identical by construction.
+
+    Returns `(neighbors, positions, deg)`: the flattened (F * fanout,)
+    sampled source ids, the (F, fanout) edge positions read from
+    `graph.indices` (clamped; rows with deg 0 read nothing physically —
+    their entries are self-loop padding), and the (F,) frontier degrees."""
+    start = graph.indptr[frontier]
+    deg = graph.indptr[frontier + 1] - start
+    r = rng.random((frontier.shape[0], fanout))
+    offs = np.floor(r * np.maximum(deg, 1)[:, None]).astype(np.int64)
+    pos = np.minimum(start[:, None] + offs, graph.num_edges - 1)
+    nbr = graph.indices[pos].astype(np.int64)
+    nbr = np.where(deg[:, None] > 0, nbr, frontier[:, None])
+    return nbr.reshape(-1), pos, deg
+
+
+def run_sample_hops(graph: CSRGraph, seeds: np.ndarray,
+                    fanouts: Sequence[int], rng: np.random.Generator,
+                    hop_cb=None) -> tuple[list, np.ndarray, int]:
+    """The ONE multi-hop sampling driver: frontier loop over `sample_hop`,
+    unique-union of all hops, request counting.  `hop_cb(hop, read_pos,
+    n_frontier)` observes each hop's physical adjacency reads (positions of
+    degree>0 rows only) — the tiered sampler prices them, the host sampler
+    passes None.  Sharing the driver makes host/tiered block identity
+    structural, not maintained-by-parallel-edits."""
     frontier = seeds.astype(np.int64)
-    hop_nodes = []
-    for f in fanouts:
-        start = graph.indptr[frontier]
-        deg = graph.indptr[frontier + 1] - start
-        # uniform with replacement (matches DGL replace=True fast path);
-        # degree-0 nodes self-loop.
-        r = rng.random((frontier.shape[0], f))
-        offs = np.floor(r * np.maximum(deg, 1)[:, None]).astype(np.int64)
-        base = start[:, None]
-        nbr = graph.indices[np.minimum(base + offs,
-                                       graph.num_edges - 1)].astype(np.int64)
-        nbr = np.where(deg[:, None] > 0, nbr, frontier[:, None])
-        nbr = nbr.reshape(-1)
+    hop_nodes: list[np.ndarray] = []
+    for hop, f in enumerate(fanouts):
+        nbr, pos, deg = sample_hop(graph, frontier, f, rng)
+        if hop_cb is not None:
+            hop_cb(hop, pos[deg > 0].reshape(-1), len(frontier))
         hop_nodes.append(nbr)
         frontier = nbr
     all_nodes = np.unique(np.concatenate([seeds.astype(np.int64), *hop_nodes]))
     n_req = int(seeds.shape[0] + sum(h.shape[0] for h in hop_nodes))
+    return hop_nodes, all_nodes, n_req
+
+
+def host_sample_blocks(graph: CSRGraph, seeds: np.ndarray,
+                       fanouts: Sequence[int], rng: np.random.Generator
+                       ) -> SampledBlocks:
+    hop_nodes, all_nodes, n_req = run_sample_hops(graph, seeds, fanouts, rng)
     return SampledBlocks(seeds=seeds, hop_nodes=hop_nodes,
                          all_nodes=all_nodes, num_requests=n_req)
 
@@ -69,29 +104,33 @@ def host_sample_blocks(graph: CSRGraph, seeds: np.ndarray,
 def device_sample_blocks(csr: DeviceCSR, seeds: jnp.ndarray,
                          fanouts: Sequence[int], key: jax.Array):
     """Jittable fixed-fanout sampler. Returns (list of per-hop node arrays,
-    flat concatenated node ids). Shapes are static given (|seeds|, fanouts)."""
-    frontier = seeds.astype(jnp.int32)
+    flat concatenated node ids). Shapes are static given (|seeds|, fanouts).
+    Ids carry the graph's shared index dtype (int32 below 2^31 nodes/edges,
+    int64 with x64 beyond) — same policy as the host path."""
+    dt = device_index_dtype(csr.num_nodes, csr.indices.shape[0])
+    frontier = seeds.astype(dt)
     hops = []
     for i, f in enumerate(fanouts):
         key_i = jax.random.fold_in(key, i)
         start = csr.indptr[frontier]
         deg = csr.indptr[frontier + 1] - start
         r = jax.random.uniform(key_i, (frontier.shape[0], f))
-        offs = jnp.floor(r * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
+        offs = jnp.floor(r * jnp.maximum(deg, 1)[:, None]).astype(dt)
         idx = jnp.minimum(start[:, None] + offs, csr.indices.shape[0] - 1)
-        nbr = csr.indices[idx]
+        nbr = csr.indices[idx].astype(dt)
         nbr = jnp.where(deg[:, None] > 0, nbr, frontier[:, None])
         nbr = nbr.reshape(-1)
         hops.append(nbr)
         frontier = nbr
-    flat = jnp.concatenate([seeds.astype(jnp.int32), *hops])
+    flat = jnp.concatenate([seeds.astype(dt), *hops])
     return hops, flat
 
 
 def subgraph_sizes(batch: int, fanouts: Sequence[int]) -> int:
     """Closed-form node count of a padded sampled subgraph
     (paper Fig. 2: 1 + 3 + 6 for fanout (3,2) on one seed... generally
-    B * (1 + f1 + f1*f2 + ...))."""
+    B * (1 + f1 + f1*f2 + ...)).  Equals `SampledBlocks.num_requests` and
+    the length of `device_sample_blocks`' flat output (pinned by test)."""
     n, prod = batch, batch
     for f in fanouts:
         prod *= f

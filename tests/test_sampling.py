@@ -1,5 +1,7 @@
 """Samplers: shape contracts + every sampled edge is a real edge
-(property), host/device agreement on the neighbor relation."""
+(property, over the host, device AND tiered samplers), host/device
+agreement on the neighbor relation, shared int64-safe id handling, and
+checkpoint/restore mid-lookahead determinism."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +10,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.graph.csr import device_index_dtype, index_dtype
 from repro.graph.synthetic import rmat_graph, uniform_graph
 from repro.sampling.ladies import ladies_sample_blocks
 from repro.sampling.neighbor import (device_sample_blocks,
@@ -22,22 +25,71 @@ def _edge_set(g):
     return es
 
 
+def _check_hops(g, es, seeds, fanouts, hop_nodes):
+    """Every sampled neighbor is a true out-neighbor of its destination,
+    or the self-loop fallback IFF the destination has degree 0."""
+    deg = g.degrees()
+    frontier = np.asarray(seeds)
+    for f, hop in zip(fanouts, hop_nodes):
+        parents = np.repeat(frontier, f)
+        for p, c in zip(parents, np.asarray(hop)):
+            p, c = int(p), int(c)
+            if deg[p] == 0:
+                assert c == p, f"deg-0 node {p} must self-loop, got {c}"
+            else:
+                assert (p, c) in es, f"({p},{c}) is not a real edge"
+        frontier = np.asarray(hop)
+
+
 @given(seed=st.integers(0, 1000))
 @settings(max_examples=10, deadline=None)
-def test_host_sampler_edges_are_real(seed):
+def test_host_and_tiered_samplers_edges_are_real(seed):
+    from repro.core.topology import TieredTopologyStore
+    from repro.sampling.tiered import tiered_sample_blocks
     g = rmat_graph(500, 6, 8, seed=seed % 7)
+    topo = TieredTopologyStore.from_graph(g, gpu_fraction=0.3,
+                                          host_fraction=0.3)
     rng = np.random.default_rng(seed)
     seeds = rng.integers(0, g.num_nodes, 16)
     blocks = host_sample_blocks(g, seeds, (3, 2), rng)
     assert blocks.hop_nodes[0].shape == (16 * 3,)
     assert blocks.hop_nodes[1].shape == (16 * 3 * 2,)
     es = _edge_set(g)
-    frontier = seeds
-    for f, hop in zip((3, 2), blocks.hop_nodes):
-        parents = np.repeat(frontier, f)
-        for p, c in zip(parents, hop):
-            assert (int(p), int(c)) in es or int(p) == int(c)  # self-pad
-        frontier = hop
+    _check_hops(g, es, seeds, (3, 2), blocks.hop_nodes)
+    # the tiered sampler is the same math on the same stream: identical
+    # blocks (so the same property holds), plus priced per-hop reports
+    rng2 = np.random.default_rng(seed)
+    rng2.integers(0, g.num_nodes, 16)   # burn the host path's seeds draw
+    tb = tiered_sample_blocks(g, topo, seeds, (3, 2), rng2)
+    for a, b in zip(blocks.hop_nodes, tb.hop_nodes):
+        np.testing.assert_array_equal(a, b)
+    _check_hops(g, es, seeds, (3, 2), tb.hop_nodes)
+    assert all(r.n_pages >= 0 for r in tb.hop_reports)
+
+
+@given(seed=st.integers(0, 200))
+@settings(max_examples=5, deadline=None)
+def test_checkpoint_restore_mid_lookahead_identical_blocks(seed):
+    """With sampled-ahead batches staged in the lookahead, a checkpoint
+    restored into a fresh loader replays the exact same blocks."""
+    from repro.core import GIDSDataLoader, LoaderConfig
+    g = rmat_graph(2000, 8, 8, seed=1)
+    feats = np.zeros((g.num_nodes, 8), np.float32)
+    mk = lambda: GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=32, fanouts=(3, 2), data_plane="gids", cache_lines=512,
+        window_depth=2, seed=seed))
+    a = mk()
+    for _ in range(3):
+        a.next_batch()
+    assert len(a._lookahead) > 0          # mid-lookahead by construction
+    st_ = a.state_dict()
+    nxt = a.next_batch()
+    b = mk()
+    b.load_state_dict(st_)
+    nxt_b = b.next_batch()
+    np.testing.assert_array_equal(nxt.blocks.seeds, nxt_b.blocks.seeds)
+    for ha, hb in zip(nxt.blocks.hop_nodes, nxt_b.blocks.hop_nodes):
+        np.testing.assert_array_equal(ha, hb)
 
 
 def test_device_sampler_matches_contract():
@@ -50,15 +102,47 @@ def test_device_sampler_matches_contract():
     assert hops[0].shape == (8 * 4,)
     assert hops[1].shape == (8 * 4 * 2,)
     assert flat.shape == (8 + 32 + 64,)
-    es = _edge_set(g)
-    parents = np.repeat(np.asarray(seeds), 4)
-    for p, c in zip(parents, np.asarray(hops[0])):
-        assert (int(p), int(c)) in es or int(p) == int(c)
+    _check_hops(g, _edge_set(g), np.asarray(seeds), (4, 2),
+                [np.asarray(h) for h in hops])
 
 
-def test_subgraph_sizes_closed_form():
+def test_index_dtype_policy_is_int64_safe():
+    assert index_dtype(2 ** 31 - 1) is np.int32
+    assert index_dtype(2 ** 31) is np.int64
+    # below the cliff both paths agree on int32
+    assert device_index_dtype(1000, 5000) == jnp.int32
+    # past 2^31 ids the device path must not silently truncate: without
+    # x64 it fails loudly (this container runs with x64 disabled)
+    if not jax.config.jax_enable_x64:
+        with pytest.raises(ValueError, match="x64"):
+            device_index_dtype(2 ** 31 + 5, 10)
+        with pytest.raises(ValueError, match="x64"):
+            device_index_dtype(10, 2 ** 31 + 5)
+
+
+def test_device_sampler_uses_shared_dtype():
+    g = uniform_graph(200, 6, 4, seed=2)
+    csr = g.to_device()
+    assert csr.indptr.dtype == csr.indices.dtype == jnp.int32
+    hops, flat = device_sample_blocks(csr, jnp.arange(4, dtype=jnp.int32),
+                                      (3,), jax.random.PRNGKey(1))
+    assert flat.dtype == jnp.int32
+
+
+def test_subgraph_sizes_matches_actual_sampler_output():
+    """The closed form is pinned to the real padded samplers: it equals the
+    device sampler's flat length AND the host sampler's request count."""
     assert subgraph_sizes(1, (3, 2)) == 1 + 3 + 6  # paper Fig. 2
     assert subgraph_sizes(4, (10, 5, 5)) == 4 * (1 + 10 + 50 + 250)
+    g = uniform_graph(300, 8, 4, seed=3)
+    rng = np.random.default_rng(0)
+    seeds = rng.integers(0, g.num_nodes, 8)
+    blocks = host_sample_blocks(g, seeds, (4, 2), rng)
+    assert blocks.num_requests == subgraph_sizes(8, (4, 2))
+    _, flat = device_sample_blocks(g.to_device(),
+                                   jnp.asarray(seeds, jnp.int32), (4, 2),
+                                   jax.random.PRNGKey(0))
+    assert flat.shape[0] == subgraph_sizes(8, (4, 2))
 
 
 def test_ladies_fixed_layer_sizes():
