@@ -1,11 +1,19 @@
 """Fig. 3 — feature-request generation rate of data preparation (host vs
-device sampler) vs the training kernels' consumption rate.
+device sampler) vs the training kernels' consumption rate, plus the online
+analogue: request service rates through the serve plane.
 
 Paper (A100 + EPYC): CPU prep 4.1 M req/s, GPU prep 77 M req/s, training
 consumes 29 M req/s -> only device-side prep keeps the accelerator fed.
 Here both run on one CPU core, so absolute numbers shrink together; the
 reported quantity is the RATIO (device-prep / consumption), which must stay
 >= 1 for the paper's conclusion to hold in this build.
+
+The serve section asks the same question under arrival dynamics instead of
+epoch order: at a fixed offered load, what request rate does the engine
+actually serve within SLO (goodput), and where does the latency go (queue
+wait / sampling / gather burst share / forward)?  Merged deadline-bounded
+admission vs per-request execution — the request-rate gap is Fig. 3's
+prep-rate gap re-expressed for online inference.
 """
 from __future__ import annotations
 
@@ -14,13 +22,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, timeit
+from repro.graph.csr import device_index_dtype
 from repro.graph.synthetic import rmat_graph
 from repro.models.gnn import GNN, GNNConfig, hop_indices
 from repro.sampling.neighbor import (device_sample_blocks,
                                      host_sample_blocks, subgraph_sizes)
+from repro.serve import GNNServeConfig, GNNServeEngine, TenantSpec, \
+    generate_stream
 
 
-def main(batch=1024, fanouts=(10, 5)):
+def prep_vs_consume(batch=1024, fanouts=(10, 5)):
     g = rmat_graph(250_000, 12, 64, seed=0, name="igb-small-like")
     rng = np.random.default_rng(0)
     seeds = rng.integers(0, g.num_nodes, batch)
@@ -30,7 +41,9 @@ def main(batch=1024, fanouts=(10, 5)):
     host_rate = n_req / t_host
 
     csr = g.to_device()
-    dseeds = jnp.asarray(seeds, jnp.int32)
+    # the device sampler's id dtype must match the graph's (int64 past 2^31
+    # ids) — a hard-coded int32 would silently truncate on big graphs
+    dseeds = jnp.asarray(seeds, device_index_dtype(g.num_nodes, g.num_edges))
     samp = jax.jit(lambda s, k: device_sample_blocks(csr, s, fanouts, k)[1])
     key = jax.random.PRNGKey(0)
     t_dev = timeit(lambda: samp(dseeds, key).block_until_ready())
@@ -66,6 +79,42 @@ def main(batch=1024, fanouts=(10, 5)):
     row("fig3_device_over_consume", 0.0,
         f"ratio={dev_rate / consume_rate:.2f}_host_ratio="
         f"{host_rate / consume_rate:.2f}")
+
+
+def serve_request_rates(offered_qps=8000, n_requests=400):
+    graph = rmat_graph(20_000, 12, 64, seed=7)
+    feats = np.random.default_rng(0).standard_normal(
+        (graph.num_nodes, 64)).astype(np.float32)
+    tenants = (
+        TenantSpec("steady", hot_fraction=0.03, hot_prob=0.9, mean_seeds=4,
+                   arrival="poisson"),
+        TenantSpec("bursty", hot_fraction=0.5, hot_prob=0.2, mean_seeds=8,
+                   arrival="mmpp", burst_factor=8.0, burst_fraction=0.1),
+    )
+    requests = generate_stream(graph.num_nodes, tenants, offered_qps,
+                               n_requests, seed=11)
+    for merged in (True, False):
+        engine = GNNServeEngine(
+            graph, feats, GNNServeConfig(merged=merged, tenants=2, seed=3))
+        res = engine.run([type(r)(r.rid, r.tenant, r.arrival_s,
+                                  r.seeds.copy(), r.deadline_s)
+                          for r in requests])
+        bd = res.mean_breakdown_s()
+        mode = "merged" if merged else "per_request"
+        row(f"fig3_serve_{mode}_rate", res.p99_s() * 1e6,
+            f"goodput_qps={res.goodput_qps():,.0f}"
+            f"_offered={res.offered_qps():,.0f}"
+            f"_p50_us={res.p50_s()*1e6:.0f}"
+            f"_wait_us={bd['queue_wait_s']*1e6:.0f}"
+            f"_sample_us={bd['sample_s']*1e6:.0f}"
+            f"_gather_us={bd['gather_s']*1e6:.0f}"
+            f"_forward_us={bd['forward_s']*1e6:.0f}"
+            f"_win={res.mean_window:.1f}")
+
+
+def main(batch=1024, fanouts=(10, 5)):
+    prep_vs_consume(batch, fanouts)
+    serve_request_rates()
 
 
 if __name__ == "__main__":

@@ -1,10 +1,11 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows; `python -m benchmarks.run [--quick]`.  `--json [path]` is the CI
-# smoke mode: fig13 + fig14 + shard-scaling + fig7-sampling headline numbers
-# as JSON (default BENCH_pr5.json) so the perf trajectory is recorded per PR.
-# `--baseline PATH` compares the fresh numbers against a committed earlier
-# BENCH_*.json and exits non-zero if the `gids` preset's e2e regressed (the
-# model is deterministic, so the tolerance only absorbs float/env noise).
+# smoke mode: fig13 + fig14 + shard-scaling + fig7-sampling + serve-load
+# headline numbers as JSON (default BENCH_pr6.json) so the perf trajectory
+# is recorded per PR.  `--baseline PATH` compares the fresh numbers against
+# a committed earlier BENCH_*.json and exits non-zero if the `gids`
+# preset's e2e regressed (the model is deterministic, so the tolerance only
+# absorbs float/env noise).
 from __future__ import annotations
 
 import argparse
@@ -36,12 +37,13 @@ def check_baseline(payload: dict, baseline_path: str) -> None:
 
 def write_json_smoke(path: str, baseline: str | None = None) -> None:
     from benchmarks import (fig7_sampling, fig13_e2e, fig14_overlap,
-                            fig_shard_scaling)
+                            fig_serve_load, fig_shard_scaling)
     payload = {
         "fig13_e2e": fig13_e2e.headline(),
         "fig14_overlap": fig14_overlap.headline(),
         "fig_shard_scaling": fig_shard_scaling.headline(),
         "fig7_sampling": fig7_sampling.headline(),
+        "fig_serve_load": fig_serve_load.headline(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -65,6 +67,20 @@ def write_json_smoke(path: str, baseline: str | None = None) -> None:
             "TOPOLOGY REGRESSION: tiered sampling must beat the CPU-"
             "sampling baseline on the degree-skewed smoke config (got "
             f"{sampling['sample_speedup_tiered_vs_host']:.4f}x)")
+    serve = payload["fig_serve_load"]
+    if serve["merged_max_qps"] <= serve["per_request_max_qps"]:
+        raise SystemExit(
+            "SERVE REGRESSION: deadline-bounded merged admission must "
+            "sustain strictly more QPS at the fixed p99 target than "
+            f"per-request execution (merged {serve['merged_max_qps']:,.0f} "
+            f"vs per-request {serve['per_request_max_qps']:,.0f})")
+    if (serve["victim_p99_partitioned_s"]
+            >= serve["victim_p99_shared_s"]):
+        raise SystemExit(
+            "ISOLATION REGRESSION: the tenant-partitioned cache must bound "
+            "victim p99 under the noisy tenant strictly below the shared "
+            f"cache (partitioned {serve['victim_p99_partitioned_s']*1e3:.3f}"
+            f"ms vs shared {serve['victim_p99_shared_s']*1e3:.3f}ms)")
     if baseline:
         check_baseline(payload, baseline)
 
@@ -74,11 +90,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow E2E figures")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", nargs="?", const="BENCH_pr5.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr6.json",
                     default=None, metavar="PATH",
                     help="smoke mode: write fig13/fig14/shard-scaling/"
-                         "fig7-sampling headline numbers to PATH (default "
-                         "BENCH_pr5.json) and exit")
+                         "fig7-sampling/serve-load headline numbers to PATH "
+                         "(default BENCH_pr6.json) and exit")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="with --json: fail if the gids preset's e2e "
                          "regressed vs this earlier BENCH_*.json")
@@ -92,11 +108,12 @@ def main() -> None:
                             fig8_bandwidth_model, fig9_accumulator,
                             fig10_constant_buffer, fig11_window_buffering,
                             fig12_cache_size, fig13_e2e, fig14_overlap,
-                            fig15_ladies, fig_shard_scaling, roofline,
-                            tables)
+                            fig15_ladies, fig_serve_load, fig_shard_scaling,
+                            roofline, tables)
     suites = [
         ("tables", tables.main),
         ("fig3", fig3_request_rates.main),
+        ("fig_serve_load", fig_serve_load.main),
         ("fig7", fig7_sampling.main),
         ("fig8", fig8_bandwidth_model.main),
         ("fig9", fig9_accumulator.main),

@@ -2,6 +2,16 @@
 / recurrent-state cache — the same serve path the decode_32k / long_500k
 dry-run cells lower at production scale.
 
+This drives the raw prefill/decode steps directly on a static batch. For
+*continuous* batching — requests admitted and retired mid-stream through a
+KV slot pool — use `repro.serve.ServeEngine` instead: `submit()` requests,
+then `run_until_drained()`, which raises `EngineNotDrained` (carrying the
+unfinished count and the requests that did retire) rather than silently
+returning a partial result if `max_ticks` is exhausted. The online *GNN*
+analogue — bursty multi-tenant request streams over the tiered feature
+data plane — is `repro.serve.GNNServeEngine`; see the tail of
+`examples/quickstart.py`.
+
     PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma_2b \
         --batch 4 --prompt-len 32 --new-tokens 16
 """

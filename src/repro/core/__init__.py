@@ -3,7 +3,8 @@
 # host buffer (§3.3), and window-buffered device software cache (§3.4),
 # composed as a pluggable tier stack (tiers.py) declared by a
 # DataPlaneSpec (dataplane.py).
-from .accumulator import (AccumulatorConfig, DynamicAccessAccumulator,
+from .accumulator import (AccumulatorConfig, DeadlineWindowConfig,
+                          DeadlineWindowPolicy, DynamicAccessAccumulator,
                           MergedWindow, merge_window)
 from .constant_buffer import ConstantBuffer
 from .dataplane import (BuildContext, DataPlane, DataPlaneSpec, TierSpec,
@@ -21,14 +22,15 @@ from .storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO, SSDSpec,
                           model_burst, price_sharded_burst,
                           required_accesses, simulate_burst)
 from .tiers import (ConstantBufferTier, DeviceCacheTier, GatherPlan,
-                    KVSlotTier, ShardedStorageTier, StorageTier, Tier,
-                    build_plan)
+                    KVSlotTier, ShardedStorageTier, StorageTier,
+                    TenantCacheTier, Tier, build_plan)
 from .topology import (TieredTopologyStore, TopologyGatherReport,
                        admission_names, host_sampling_time, make_admission,
                        register_admission)
 
 __all__ = [
-    "AccumulatorConfig", "DynamicAccessAccumulator", "MergedWindow",
+    "AccumulatorConfig", "DeadlineWindowConfig", "DeadlineWindowPolicy",
+    "DynamicAccessAccumulator", "MergedWindow",
     "merge_window", "ConstantBuffer",
     "BuildContext", "DataPlane", "DataPlaneSpec", "TierSpec",
     "register_tier_kind", "tier",
@@ -42,7 +44,8 @@ __all__ = [
     "coalesce_lines", "coalesce_lines_by_shard", "model_burst",
     "price_sharded_burst", "required_accesses", "simulate_burst",
     "ConstantBufferTier", "DeviceCacheTier", "GatherPlan", "KVSlotTier",
-    "ShardedStorageTier", "StorageTier", "Tier", "build_plan",
+    "ShardedStorageTier", "StorageTier", "TenantCacheTier", "Tier",
+    "build_plan",
     "TieredTopologyStore", "TopologyGatherReport", "admission_names",
     "host_sampling_time", "make_admission", "register_admission",
 ]

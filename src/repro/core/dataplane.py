@@ -72,9 +72,13 @@ class BuildContext:
     # serve-engine knobs (KV slot pool)
     slots: int = 0
     bytes_per_slot: int = 0
+    # multi-tenant serving knobs (per-tenant cache partitions)
+    tenants: int = 1
+    tenant_quotas: Any = None         # per-tenant capacity shares, None=equal
 
     _KNOBS = ("cache_lines", "cache_ways", "window_depth", "cbuf_fraction",
-              "cbuf_selection", "seed", "n_shards", "placement")
+              "cbuf_selection", "seed", "n_shards", "placement", "tenants",
+              "tenant_quotas")
 
     def absorb(self, config: Any) -> "BuildContext":
         for k in self._KNOBS:
@@ -168,6 +172,22 @@ def _make_sharded_storage(ctx: BuildContext, n_shards=None, placement=None,
                             seed=ctx.seed)
     specs = ctx.shard_specs if specs is None else specs
     return ShardedStorageTier(ctx.features, policy, specs=specs)
+
+
+@register_tier_kind("tenant_cache")
+def _make_tenant_cache(ctx: BuildContext, num_lines=None, ways=None,
+                       tenants=None, quotas=None) -> Tier:
+    """Per-tenant partitioned HBM software cache for the serve plane
+    (`TenantCacheTier`): the line budget is split by tenant quota and a
+    tenant only fills/evicts inside its own partition, so a noisy tenant
+    cannot evict another tenant's hot set."""
+    from .tiers import TenantCacheTier
+    num_lines = ctx.cache_lines if num_lines is None else num_lines
+    ways = ctx.cache_ways if ways is None else ways
+    tenants = ctx.tenants if tenants is None else tenants
+    quotas = ctx.tenant_quotas if quotas is None else quotas
+    return TenantCacheTier(num_lines, ways, tenants=tenants, quotas=quotas,
+                           seed=ctx.seed)
 
 
 @register_tier_kind("kv_slots")
@@ -457,6 +477,26 @@ DataPlaneSpec.register(DataPlaneSpec(
     pricing="overlapped", lookahead=True,
     description="GIDS with the fully-jittable HBM tier (cache_jax metadata "
                 "+ Pallas tiered_gather) in place of the numpy reference."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="serve-gnn",
+    tiers=(tier("tenant_cache"), tier("constant_buffer", fraction=0.05),
+           tier("storage")),
+    pricing="overlapped", lookahead=False,
+    description="Online GNN inference plane: per-tenant partitioned HBM "
+                "cache (quota-bounded eviction — a noisy tenant cannot "
+                "evict another tenant's hot set) over a small pinned-host "
+                "hot set and direct storage.  No epoch lookahead; request "
+                "windows are deadline-bounded by the serve engine."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="serve-gnn-shared",
+    tiers=(tier("window_cache", window_depth=0),
+           tier("constant_buffer", fraction=0.05), tier("storage")),
+    pricing="overlapped", lookahead=False,
+    description="The serve plane WITHOUT tenant isolation: one shared "
+                "random-eviction cache all tenants contend for — the "
+                "noisy-neighbour baseline fig_serve_load compares against."))
 
 DataPlaneSpec.register(DataPlaneSpec(
     name="serve-kv",

@@ -250,6 +250,137 @@ class DeviceStoreTier(_TierBase):
         self.last_rows = None
 
 
+class TenantCacheTier(_TierBase):
+    """HBM software-cache tier partitioned per tenant with priced isolation.
+
+    The serving twin of `DeviceCacheTier`: the line budget is split into
+    per-tenant `WindowBufferedCache` partitions (window_depth=0 — serving
+    has no epoch lookahead, so eviction is BaM-random within the partition).
+    A request fills and evicts ONLY inside its own tenant's partition, so a
+    noisy tenant scanning the whole graph cannot evict another tenant's hot
+    set — isolation is by construction, and it is *priced*: misses the
+    partition bound creates surface in the storage burst like any other
+    miss, so the benchmark sees exactly what the quota costs and buys.
+
+    The serving engine announces who is asking via `stage_tenants(tenant_of)`
+    immediately before the gather: one tenant id per node offered to the
+    next `probe`/`probe_merged`.  This tier must therefore sit FIRST in the
+    stack (the fold offers the full request set to the first tier, keeping
+    the staged array positionally aligned).  A node two tenants share is
+    served from (and filled into) the first requester's partition for that
+    window — the shared data plane still dedupes the fetch; quotas govern
+    eviction, not bytes on the wire.  Un-staged probes default to tenant 0,
+    the single-tenant degenerate case.
+    """
+
+    latency_class = "hbm"
+
+    def __init__(self, num_lines: int, ways: int = 8, tenants: int = 1,
+                 quotas: Sequence[float] | None = None, seed: int = 0,
+                 line_bytes: int = IO_BYTES, name: str = "hbm-tenant-cache"):
+        if tenants < 1:
+            raise ValueError(f"need at least one tenant, got {tenants}")
+        if quotas is None:
+            quotas = (1.0 / tenants,) * tenants
+        quotas = tuple(float(q) for q in quotas)
+        if len(quotas) != tenants:
+            raise ValueError(
+                f"{len(quotas)} quotas for {tenants} tenants — pass one "
+                "capacity share per tenant")
+        if any(q <= 0 for q in quotas):
+            raise ValueError(f"quotas must be positive, got {quotas}")
+        total = sum(quotas)
+        # per-partition line budget: quota share rounded down to a whole
+        # number of sets (the cache asserts num_lines % ways == 0), floored
+        # at one set so every tenant owns at least `ways` lines
+        self.partitions = tuple(
+            WindowBufferedCache(
+                max(ways, (int(num_lines * q / total) // ways) * ways),
+                ways, window_depth=0, seed=seed + 17 * t)
+            for t, q in enumerate(quotas))
+        self.quotas = quotas
+        self.ways = ways
+        self.line_bytes = line_bytes
+        self.name = name
+        self._staged: np.ndarray | None = None
+
+    @property
+    def tenants(self) -> int:
+        return len(self.partitions)
+
+    @property
+    def capacity_bytes(self) -> int:
+        return sum(c.num_sets * c.ways for c in self.partitions) \
+            * self.line_bytes
+
+    def partition_lines(self, tenant: int) -> int:
+        c = self.partitions[tenant]
+        return c.num_sets * c.ways
+
+    def stage_tenants(self, tenant_of: np.ndarray) -> None:
+        """Announce the requesting tenant of each node in the NEXT probe —
+        (n,) int array positionally aligned with the node list the fold
+        will offer.  Consumed by that one probe."""
+        t = np.asarray(tenant_of)
+        if len(t) and (t.min() < 0 or t.max() >= self.tenants):
+            raise ValueError(
+                f"tenant ids in [{t.min()}, {t.max()}] out of range for "
+                f"{self.tenants} partitions")
+        self._staged = t
+
+    def _take_staged(self, n: int) -> np.ndarray:
+        t = self._staged
+        self._staged = None
+        if t is None:
+            return np.zeros(n, np.int64)
+        if len(t) != n:
+            raise ValueError(
+                f"staged {len(t)} tenant ids but the fold offered {n} "
+                "nodes — the tenant tier must be first in the stack")
+        return t
+
+    def probe(self, node_ids: np.ndarray) -> np.ndarray:
+        return self._probe(node_ids, None)
+
+    def probe_merged(self, node_ids: np.ndarray,
+                     multiplicity: np.ndarray) -> np.ndarray:
+        return self._probe(node_ids, multiplicity)
+
+    def _probe(self, node_ids: np.ndarray,
+               multiplicity: np.ndarray | None) -> np.ndarray:
+        tenant = self._take_staged(len(node_ids))
+        hits = np.zeros(len(node_ids), dtype=bool)
+        for tid, cache in enumerate(self.partitions):
+            m = tenant == tid
+            if not m.any():
+                continue
+            mult = None if multiplicity is None else multiplicity[m]
+            hits[m] = cache.access(node_ids[m], multiplicity=mult)
+        return hits
+
+    def lookup_slots(self, node_ids: np.ndarray) -> np.ndarray:
+        """Resident line per node across the concatenated partitions
+        (partition t's lines offset by the budgets before it), -1 if the
+        node is resident in no partition.  Read-only, tenant-agnostic: a
+        row in HBM is a row in HBM regardless of whose quota pinned it."""
+        out = np.full(len(node_ids), -1, np.int64)
+        offset = 0
+        for cache in self.partitions:
+            slot = cache.lookup(np.asarray(node_ids))
+            found = (out == -1) & (slot >= 0)
+            out[found] = slot[found] + offset
+            offset += cache.num_sets * cache.ways
+        return out
+
+    def hit_ratio(self, tenant: int) -> float:
+        return self.partitions[tenant].stats.hit_ratio
+
+    def reset(self) -> None:
+        for cache in self.partitions:
+            cache.reset()
+        self._staged = None
+
+
 class ConstantBufferTier(_TierBase):
     """Pinned-host tier backed by the constant CPU buffer (§3.3).  Stateless
     membership lookup — the PyTorch-Direct zero-copy tier has the same shape

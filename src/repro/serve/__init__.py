@@ -1,4 +1,15 @@
-from repro.core.tiers import KVSlotTier
-from .engine import EngineConfig, Request, ServeEngine
+from repro.core.tiers import KVSlotTier, TenantCacheTier
+from .admission import SLOBatcher, WindowDecision
+from .engine import EngineConfig, EngineNotDrained, Request, ServeEngine
+from .gnn_engine import (GNNServeConfig, GNNServeEngine, RequestRecord,
+                         ServeResult, WindowTrace)
+from .workload import (ServeRequest, TenantSpec, generate_stream,
+                       mmpp_arrivals, poisson_arrivals, tenant_hot_set)
 
-__all__ = ["EngineConfig", "KVSlotTier", "Request", "ServeEngine"]
+__all__ = [
+    "EngineConfig", "EngineNotDrained", "GNNServeConfig", "GNNServeEngine",
+    "KVSlotTier", "Request", "RequestRecord", "SLOBatcher", "ServeEngine",
+    "ServeRequest", "ServeResult", "TenantCacheTier", "TenantSpec",
+    "WindowDecision", "WindowTrace", "generate_stream", "mmpp_arrivals",
+    "poisson_arrivals", "tenant_hot_set",
+]

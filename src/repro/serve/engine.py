@@ -182,9 +182,30 @@ class ServeEngine:
         return retired
 
     def run_until_drained(self, max_ticks: int = 1000) -> list[Request]:
+        """Step until queue and slots are empty.  If `max_ticks` runs out
+        first, raise `EngineNotDrained` carrying the retired requests and
+        the unfinished count — silently returning a partial result would
+        let callers drop queued/active work on the floor."""
         out = []
         for _ in range(max_ticks):
             out.extend(self.step())
             if not self.queue and all(r is None for r in self.active):
-                break
+                return out
+        unfinished = len(self.queue) + sum(r is not None for r in self.active)
+        if unfinished:
+            raise EngineNotDrained(unfinished, out, max_ticks)
         return out
+
+
+class EngineNotDrained(RuntimeError):
+    """`run_until_drained` exhausted its tick budget with work still queued
+    or decoding.  `retired` holds the requests that DID finish (the engine
+    keeps its state, so calling `run_until_drained` again continues)."""
+
+    def __init__(self, unfinished: int, retired: list[Request],
+                 max_ticks: int):
+        super().__init__(
+            f"engine not drained after {max_ticks} ticks: {unfinished} "
+            f"request(s) still queued or decoding ({len(retired)} retired)")
+        self.unfinished = unfinished
+        self.retired = retired

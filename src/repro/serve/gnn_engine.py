@@ -1,0 +1,419 @@
+"""Online multi-tenant GNN inference over the shared tiered data plane.
+
+`GNNServeEngine` runs sample -> gather -> GNN-forward per request against
+the SAME data plane the training loader uses — a `TieredFeatureStore` built
+from a `DataPlaneSpec` preset (default "serve-gnn": per-tenant partitioned
+HBM cache + pinned-host hot set + direct storage) and, for priced
+GPU-initiated sampling, a `TieredTopologyStore`.  The engine is a
+virtual-time discrete-event simulation: arrivals come time-stamped from
+`serve/workload.py`, every stage is priced by the storage-timeline models,
+and no wall clock is involved, so runs are bit-reproducible.
+
+Two execution modes share one code path:
+
+  * merged (`config.merged=True`) — the tentpole: the `SLOBatcher`
+    (serve/admission.py) forms deadline-bounded windows under the
+    `DeadlineWindowPolicy`, compatible in-flight requests merge through the
+    training plane's `merge_window`/`gather_merged` path (cross-REQUEST
+    dedup is cross-batch dedup), and the window's storage rows coalesce
+    into one priced burst; compatibility includes the tenant — windows are
+    tenant-pure (see `run`);
+  * per-request (`config.merged=False`) — the baseline: FIFO service, one
+    tier fold and one `price_batch` burst per request, no dedup, no line
+    coalescing across requests.
+
+Sampling runs at ADMISSION (GPU-initiated, against the topology store) and
+overlaps window formation — a window cannot start service before its last
+staged sample lands, but slack usually hides sampling entirely; the
+per-request baseline gets the same rule (sampling overlaps its queue wait).
+Identical request streams produce bit-identical sampled blocks and feature
+rows in both modes — merging changes latency, never results.
+
+Every request retires with a priced latency breakdown: queue wait (window
+formation + accelerator backlog), its own sampling hops, its share of the
+window's gather burst (proportional to its row count), and forward compute
+(modelled per-row cost; pass `model`/`params` to also run the real GNN
+forward on the gathered rows).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.accumulator import (DeadlineWindowConfig,
+                                    DeadlineWindowPolicy, merge_window)
+from repro.core.dataplane import DataPlane, DataPlaneSpec
+from repro.core.storage_sim import SAMSUNG_980PRO, SSDSpec, StorageTimeline
+from repro.core.tiers import TenantCacheTier
+from repro.core.topology import TieredTopologyStore
+from repro.sampling.neighbor import host_sample_blocks
+from repro.sampling.tiered import tiered_sample_blocks
+
+from .admission import SLOBatcher
+from .workload import ServeRequest
+
+
+@dataclasses.dataclass
+class GNNServeConfig:
+    fanouts: Sequence[int] = (10, 5)
+    merged: bool = True             # deadline-bounded windows vs per-request
+    data_plane: str = "serve-gnn"   # preset name or DataPlaneSpec
+    cache_lines: int = 8192
+    cache_ways: int = 8
+    tenants: int = 1
+    tenant_quotas: Sequence[float] | None = None
+    cbuf_fraction: float = 0.05
+    # deadline-bounded admission (core/accumulator.DeadlineWindowPolicy)
+    max_window: int = 16
+    slack_safety: float = 2.5       # heavy-tail fanouts make window service
+                                    # variance large; the extra margin eats
+                                    # slack, not the SLO
+    shed_expired: bool = True
+    # priced GPU-initiated sampling (core/topology.TieredTopologyStore)
+    use_topology: bool = True
+    topo_admission: str = "degree"
+    topo_gpu_fraction: float = 0.25
+    topo_host_fraction: float = 0.5
+    # modelled forward compute: one launch per WINDOW (batching amortizes
+    # the launch constant), base + per_row * total window rows
+    forward_base_s: float = 3e-5
+    forward_per_row_s: float = 2e-8
+    keep_features: bool = False     # retain gathered rows on each record
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One retired request with its priced latency breakdown."""
+
+    rid: int
+    tenant: int
+    arrival_s: float
+    deadline_s: float
+    rejected: bool = False          # shed at admission (goodput, not p99)
+    start_s: float = 0.0            # window service start
+    completion_s: float = 0.0
+    queue_wait_s: float = 0.0       # arrival -> service start
+    sample_s: float = 0.0           # own sampling hops (priced)
+    gather_s: float = 0.0           # share of the window burst
+    forward_s: float = 0.0          # modelled forward compute
+    window_size: int = 0            # requests in the serving window
+    n_rows: int = 0                 # unique feature rows of this request
+    all_nodes: np.ndarray | None = None
+    features: np.ndarray | None = None   # kept iff config.keep_features
+    logits: np.ndarray | None = None     # set iff a model was supplied
+
+    @property
+    def latency_s(self) -> float:
+        return self.completion_s - self.arrival_s
+
+    @property
+    def deadline_met(self) -> bool:
+        return (not self.rejected
+                and self.latency_s <= self.deadline_s + 1e-12)
+
+
+@dataclasses.dataclass
+class WindowTrace:
+    start_s: float
+    n_requests: int
+    burst_s: float
+    service_s: float
+    dedup_factor: float
+    hit_cap: bool
+
+
+@dataclasses.dataclass
+class ServeResult:
+    records: list[RequestRecord]
+    windows: list[WindowTrace]
+
+    @property
+    def served(self) -> list[RequestRecord]:
+        return [r for r in self.records if not r.rejected]
+
+    @property
+    def n_rejected(self) -> int:
+        return sum(r.rejected for r in self.records)
+
+    def latencies_s(self, tenant: int | None = None) -> np.ndarray:
+        return np.array([r.latency_s for r in self.served
+                         if tenant is None or r.tenant == tenant])
+
+    def _pct(self, q: float, tenant: int | None) -> float:
+        lat = self.latencies_s(tenant)
+        return float(np.percentile(lat, q)) if len(lat) else float("nan")
+
+    def p50_s(self, tenant: int | None = None) -> float:
+        return self._pct(50, tenant)
+
+    def p99_s(self, tenant: int | None = None) -> float:
+        return self._pct(99, tenant)
+
+    @property
+    def makespan_s(self) -> float:
+        served = self.served
+        if not served:
+            return 0.0
+        return (max(r.completion_s for r in served)
+                - min(r.arrival_s for r in self.records))
+
+    def goodput_qps(self, tenant: int | None = None) -> float:
+        """Completions within deadline per second of makespan — rejected
+        and late requests produce no goodput."""
+        span = self.makespan_s
+        if span <= 0:
+            return 0.0
+        met = sum(r.deadline_met for r in self.records
+                  if tenant is None or r.tenant == tenant)
+        return met / span
+
+    def offered_qps(self) -> float:
+        if len(self.records) < 2:
+            return 0.0
+        arrivals = sorted(r.arrival_s for r in self.records)
+        return (len(arrivals) - 1) / max(arrivals[-1] - arrivals[0], 1e-12)
+
+    def mean_breakdown_s(self) -> dict:
+        served = self.served
+        if not served:
+            return {k: 0.0 for k in
+                    ("queue_wait_s", "sample_s", "gather_s", "forward_s")}
+        n = len(served)
+        return {
+            "queue_wait_s": sum(r.queue_wait_s for r in served) / n,
+            "sample_s": sum(r.sample_s for r in served) / n,
+            "gather_s": sum(r.gather_s for r in served) / n,
+            "forward_s": sum(r.forward_s for r in served) / n,
+        }
+
+    @property
+    def mean_window(self) -> float:
+        if not self.windows:
+            return 0.0
+        return sum(w.n_requests for w in self.windows) / len(self.windows)
+
+
+class GNNServeEngine:
+    """Virtual-time online inference engine over the shared data plane.
+
+    `plane` / `topo` may be passed in to SHARE an existing data plane (e.g.
+    the training loader's) — by default the engine builds its own from
+    `config.data_plane`.  `model`/`params` (a `repro.models.gnn.GNN`)
+    optionally run the real forward per request; timing always uses the
+    modelled forward cost so load sweeps don't need jax.
+    """
+
+    def __init__(self, graph, features, config: GNNServeConfig | None = None,
+                 ssd: SSDSpec = SAMSUNG_980PRO,
+                 plane: DataPlane | None = None,
+                 topo: TieredTopologyStore | None = None,
+                 model=None, params=None):
+        self.graph = graph
+        self.features = np.asarray(features)
+        self.config = cfg = config or GNNServeConfig()
+        self.ssd = ssd
+        if plane is None:
+            plane = DataPlaneSpec.resolve(cfg.data_plane).build(
+                graph, self.features,
+                cache_lines=cfg.cache_lines, cache_ways=cfg.cache_ways,
+                cbuf_fraction=cfg.cbuf_fraction, tenants=cfg.tenants,
+                tenant_quotas=cfg.tenant_quotas, seed=cfg.seed)
+        self.plane = plane
+        self.store = plane.store
+        backstop = self.store.tiers[-1]
+        shard_specs = None
+        if hasattr(backstop, "resolve_shard_specs"):
+            shard_specs = backstop.resolve_shard_specs(ssd)
+        self.timeline = StorageTimeline(ssd, 1, shard_specs=shard_specs)
+        if topo is None and cfg.use_topology:
+            topo = TieredTopologyStore.from_graph(
+                graph, admission=cfg.topo_admission,
+                gpu_fraction=cfg.topo_gpu_fraction,
+                host_fraction=cfg.topo_host_fraction,
+                ssd=ssd, seed=cfg.seed)
+        self.topo = topo
+        self.model, self.params = model, params
+        self.policy = DeadlineWindowPolicy(DeadlineWindowConfig(
+            max_window=cfg.max_window if cfg.merged else 1,
+            safety=cfg.slack_safety))
+        self.batcher = SLOBatcher(self.policy,
+                                  shed_expired=cfg.shed_expired)
+        self._tenant_tier = next(
+            (t for t in self.store.tiers if isinstance(t, TenantCacheTier)),
+            None)
+        self._sample_cache: dict = {}
+
+    # -- stages ----------------------------------------------------------------
+    def _sample(self, req: ServeRequest):
+        """GPU-initiated sampling at admission, memoized per request.  The
+        RNG stream is keyed by (engine seed, rid) — NOT by service order —
+        so a request samples the same blocks whether it is served merged,
+        per-request, or after a demotion; with a topology store the
+        hop-page reads are priced and the modelled time returned."""
+        hit = self._sample_cache.get(req.rid)
+        if hit is not None:
+            return hit
+        rng = np.random.default_rng([self.config.seed, req.rid])
+        if self.topo is not None:
+            blocks = tiered_sample_blocks(self.graph, self.topo, req.seeds,
+                                          self.config.fanouts, rng)
+            out = (blocks, float(blocks.sample_time_s))
+        else:
+            out = (host_sample_blocks(self.graph, req.seeds,
+                                      self.config.fanouts, rng), 0.0)
+        self._sample_cache[req.rid] = out
+        return out
+
+    def _forward_s(self, n_rows: int) -> float:
+        """One batched forward launch over `n_rows` gathered rows — the
+        window pays the launch constant once, which is the other half of
+        what merging buys (the per-request baseline pays it per request)."""
+        return (self.config.forward_base_s
+                + self.config.forward_per_row_s * n_rows)
+
+    def _run_model(self, blocks, rows: np.ndarray):
+        if self.model is None:
+            return None
+        import jax.numpy as jnp
+        from repro.models.gnn import hop_indices
+        hi = [jnp.asarray(h) for h in hop_indices(blocks)]
+        return np.asarray(self.model.forward(self.params,
+                                             jnp.asarray(rows), hi))
+
+    def _stage_tenants(self, merged, staged: list[ServeRequest]) -> None:
+        """Announce the serving tenant of each unique node to the tenant
+        tier: the first requester (admission order) owns the fill for this
+        window; later requesters share the deduplicated row."""
+        if self._tenant_tier is None:
+            return
+        tenant_of = np.full(merged.n_unique, -1, np.int64)
+        for i, req in enumerate(staged):
+            inv = merged.batch_inverse(i)
+            fresh = tenant_of[inv] < 0
+            tenant_of[inv[fresh]] = req.tenant
+        self._tenant_tier.stage_tenants(tenant_of)
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, requests: Sequence[ServeRequest]) -> ServeResult:
+        """Serve an arrival-time-stamped stream to completion.
+
+        Windows are TENANT-PURE: each tenant has its own pending queue and
+        a window only merges requests of one tenant.  Isolation extends to
+        the batch dimension — a noisy tenant's burst can inflate its own
+        windows but never another tenant's, and a victim request's latency
+        reflects its own tenant's cache partition, not whoever happened to
+        share the window.  Tenants still share the one engine: service is
+        FCFS across tenants by oldest waiting request.
+        """
+        queues: dict[int, deque] = {}
+        for r in sorted(requests, key=lambda r: (r.arrival_s, r.rid)):
+            queues.setdefault(r.tenant, deque()).append(r)
+        records: list[RequestRecord] = []
+        windows: list[WindowTrace] = []
+        self._sample_cache.clear()
+        busy = 0.0
+        while any(queues.values()):
+            tenant = min((t for t, q in queues.items() if q),
+                         key=lambda t: queues[t][0].arrival_s)
+            pending = queues[tenant]
+            decision = self.batcher.next_window(pending, busy)
+            if decision is None:
+                continue
+            for req in decision.shed:
+                records.append(RequestRecord(
+                    rid=req.rid, tenant=req.tenant, arrival_s=req.arrival_s,
+                    deadline_s=req.deadline_s, rejected=True))
+            if not decision.staged:
+                continue
+            # a staged request whose sampling would land after the oldest
+            # request's slack bound would push the whole window — and that
+            # deadline — out by its own sampling tail.  It doesn't hold the
+            # window hostage: demote it to the next window (its sample is
+            # memoized, nothing re-runs).  The oldest always stays — the
+            # window exists for its deadline — and the bound is its slack,
+            # not the intended open time, so a backlogged cap-closed window
+            # may slip a little to keep its depth (amortization is worth
+            # more than an early start while slack remains).
+            oldest = decision.staged[0]
+            bound = max(decision.start_s, self.policy.close_by(
+                oldest.arrival_s, oldest.deadline_s, len(decision.staged)))
+            staged, demoted = [oldest], []
+            for req in decision.staged[1:]:
+                _, sample_s = self._sample(req)
+                if req.arrival_s + sample_s <= bound:
+                    staged.append(req)
+                else:
+                    demoted.append(req)
+            for req in reversed(demoted):    # arrival order preserved
+                pending.appendleft(req)
+            decision.staged = staged
+            busy = self._execute(decision, records, windows)
+        records.sort(key=lambda r: r.rid)
+        return ServeResult(records=records, windows=windows)
+
+    def _execute(self, decision, records, windows) -> float:
+        staged = decision.staged
+        samples = [self._sample(r) for r in staged]
+        # service cannot start before the last staged sample lands —
+        # sampling is admission-time GPU work overlapping window formation
+        start = max([decision.start_s]
+                    + [r.arrival_s + s for r, (_, s) in zip(staged, samples)])
+        blocks = [b for b, _ in samples]
+        merged = merge_window([b.all_nodes for b in blocks])
+        self._stage_tenants(merged, staged)
+
+        if len(staged) == 1 and not self.config.merged:
+            # per-request baseline: one fold, one un-coalesced burst whose
+            # overlap efficiency comes from this request's own storage
+            # concurrency alone (no accumulator ramping across requests)
+            rows, report = self.store.gather(blocks[0].all_nodes)
+            rows_list = [rows]
+            burst_s = self.timeline.price_batch(
+                report, outstanding=max(report.n_storage, 1))
+            dedup = 1.0
+        else:
+            rows_list, _, wrep = self.store.gather_merged(merged)
+            burst_s = self.timeline.price_merged_burst(wrep)
+            dedup = wrep.dedup_factor
+
+        total_rows = sum(len(b.all_nodes) for b in blocks)
+        forward_total_s = self._forward_s(total_rows)
+        t = start + burst_s + forward_total_s
+        for req, (blk, sample_s), rows in zip(staged, samples, rows_list):
+            n_rows = len(blk.all_nodes)
+            rec = RequestRecord(
+                rid=req.rid, tenant=req.tenant, arrival_s=req.arrival_s,
+                deadline_s=req.deadline_s, start_s=start, completion_s=t,
+                queue_wait_s=start - req.arrival_s, sample_s=sample_s,
+                gather_s=burst_s * n_rows / max(total_rows, 1),
+                forward_s=forward_total_s * n_rows / max(total_rows, 1),
+                window_size=len(staged),
+                n_rows=n_rows, all_nodes=blk.all_nodes)
+            if self.config.keep_features:
+                rec.features = rows
+            if self.model is not None:
+                rec.logits = self._run_model(blk, rows)
+            records.append(rec)
+        service_s = t - start
+        # the policy's estimate absorbs the sampling-completion push-out of
+        # `start` past the batcher's intended open time, so close_by leaves
+        # room for it on the next window
+        self.policy.observe(t - decision.start_s, len(staged))
+        windows.append(WindowTrace(
+            start_s=start, n_requests=len(staged), burst_s=burst_s,
+            service_s=service_s, dedup_factor=dedup,
+            hit_cap=decision.hit_cap))
+        return t
+
+    def reset(self) -> None:
+        """Fresh caches, fresh RNG, fresh service estimate — a reset engine
+        replays a stream bit-identically."""
+        self.plane.reset()
+        # the topology store is stateless (fixed page assignment) — nothing
+        # to reset there
+        self.policy.reset()
+        self._sample_cache.clear()

@@ -9,7 +9,7 @@ import pytest
 
 import repro.configs as configs
 from repro.models.transformer import LM
-from repro.serve import EngineConfig, Request, ServeEngine
+from repro.serve import EngineConfig, EngineNotDrained, Request, ServeEngine
 
 
 def _greedy_reference(model, params, prompt, n, max_seq):
@@ -72,6 +72,68 @@ def test_engine_slot_recycling():
                           max_new_tokens=1))
     (one,) = engine.run_until_drained()
     assert one.done and len(one.generated) == 1
+
+
+def test_run_until_drained_raises_on_tick_exhaustion():
+    """Exhausting max_ticks with work still in flight must raise (not
+    silently return a partial result), carry the unfinished count and the
+    requests that DID retire, and leave the engine resumable."""
+    cfg = configs.get("mamba2_1_3b", reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    engine = ServeEngine(model, params, EngineConfig(slots=1, max_seq=48))
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        engine.submit(Request(rid=i,
+                              prompt=rng.integers(0, cfg.vocab_size, 4)
+                              .astype(np.int32),
+                              max_new_tokens=6))
+    with pytest.raises(EngineNotDrained) as exc:
+        engine.run_until_drained(max_ticks=2)
+    err = exc.value
+    assert err.unfinished >= 1
+    assert err.unfinished + len(err.retired) == 3
+    assert "2 ticks" in str(err)
+    # the engine kept its state: draining can simply continue
+    rest = engine.run_until_drained()
+    assert len(err.retired) + len(rest) == 3
+    assert not engine.queue and all(r is None for r in engine.active)
+
+
+def test_slot_recycling_under_sustained_pressure():
+    """Many more requests than slots, EOS-at-prefill one-token requests
+    mixed with long decodes: the KV slot pool and the active list must
+    never desync, and every request retires exactly once."""
+    cfg = configs.get("mamba2_1_3b", reduced=True)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    engine = ServeEngine(model, params, EngineConfig(slots=2, max_seq=48))
+    rng = np.random.default_rng(4)
+    n_requests = 9
+    for i in range(n_requests):
+        engine.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, 3 + i % 4)
+            .astype(np.int32),
+            # thirds retire AT prefill (never hold a slot for decode),
+            # the rest decode for a while under full occupancy
+            max_new_tokens=1 if i % 3 == 0 else 8))
+    retired = []
+    for _ in range(200):
+        retired.extend(engine.step())
+        # invariant: every occupied slot is held in the KV pool and
+        # vice versa — the pool can never leak or double-book
+        active = sum(r is not None for r in engine.active)
+        assert len(engine.kv_slots._held) == active
+        assert engine.kv_slots.occupancy == active / engine.cfg.slots
+        if not engine.queue and active == 0:
+            break
+    assert sorted(r.rid for r in retired) == list(range(n_requests))
+    assert all(r.done for r in retired)
+    assert engine.kv_slots.occupancy == 0.0
+    for r in retired:
+        expect = 1 if r.rid % 3 == 0 else 8
+        assert len(r.generated) == expect, (r.rid, len(r.generated))
 
 
 def test_engine_overlap_pricing():

@@ -1,0 +1,381 @@
+"""Multi-tenant online GNN serving: workload generation, deadline-bounded
+window formation, merged-vs-per-request bit-identity, tenant cache
+isolation, and the serve-gnn data-plane presets."""
+import numpy as np
+import pytest
+
+from repro.core import (DataPlaneSpec, DeadlineWindowConfig,
+                        DeadlineWindowPolicy, TenantCacheTier)
+from repro.graph.csr import disjoint_union
+from repro.graph.synthetic import rmat_graph, uniform_graph
+from repro.serve import (GNNServeConfig, GNNServeEngine, SLOBatcher,
+                         ServeRequest, TenantSpec, generate_stream,
+                         mmpp_arrivals, poisson_arrivals)
+from collections import deque
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return rmat_graph(2_000, 8, 16, seed=5)
+
+
+@pytest.fixture(scope="module")
+def small_feats(small_graph):
+    return np.random.default_rng(1).standard_normal(
+        (small_graph.num_nodes, 16)).astype(np.float32)
+
+
+def _replay(requests):
+    return [ServeRequest(r.rid, r.tenant, r.arrival_s, r.seeds.copy(),
+                         r.deadline_s) for r in requests]
+
+
+# -- workload ------------------------------------------------------------------
+
+def test_stream_deterministic_and_arrival_ordered():
+    tenants = (TenantSpec("a"), TenantSpec("b", arrival="mmpp"))
+    s1 = generate_stream(1000, tenants, 5000, 60, seed=9)
+    s2 = generate_stream(1000, tenants, 5000, 60, seed=9)
+    assert len(s1) == len(s2) == 60
+    for a, b in zip(s1, s2):
+        assert (a.rid, a.tenant, a.arrival_s) == (b.rid, b.tenant, b.arrival_s)
+        assert np.array_equal(a.seeds, b.seeds)
+    arrivals = [r.arrival_s for r in s1]
+    assert arrivals == sorted(arrivals)
+    assert [r.rid for r in s1] == list(range(60))
+    s3 = generate_stream(1000, tenants, 5000, 60, seed=10)
+    assert any(not np.array_equal(a.seeds, b.seeds) for a, b in zip(s1, s3))
+
+
+def test_mmpp_burstier_than_poisson():
+    rng = np.random.default_rng(0)
+    po = poisson_arrivals(1000, 4000, rng)
+    mm = mmpp_arrivals(1000, 4000, np.random.default_rng(0),
+                       burst_factor=8.0, burst_fraction=0.1, cycle_s=0.02)
+    def cv2(arr):
+        gaps = np.diff(arr)
+        return gaps.var() / gaps.mean() ** 2
+    assert cv2(mm) > 1.5 * cv2(po)          # Poisson has CV^2 ~= 1
+    # same mean offered rate to ~15%
+    assert mm[-1] == pytest.approx(po[-1], rel=0.15)
+
+
+def test_node_range_confines_tenant_traffic():
+    tenants = (TenantSpec("lo", node_range=(0, 500)),
+               TenantSpec("hi", node_range=(500, 2000), hot_prob=0.0))
+    stream = generate_stream(2000, tenants, 3000, 80, seed=2)
+    for r in stream:
+        lo, hi = ((0, 500) if r.tenant == 0 else (500, 2000))
+        assert (r.seeds >= lo).all() and (r.seeds < hi).all()
+    with pytest.raises(ValueError):
+        TenantSpec("bad", node_range=(100, 50)).resolve_range(2000)
+
+
+def test_disjoint_union_offsets_components():
+    a = rmat_graph(300, 6, 8, seed=1)
+    b = uniform_graph(200, 4, 8, seed=2)
+    u = disjoint_union([a, b])
+    assert u.num_nodes == 500
+    assert u.num_edges == a.num_edges + b.num_edges
+    # component A preserved verbatim, component B offset by |A|
+    for v in (0, 7, 299):
+        assert np.array_equal(u.neighbors(v), a.neighbors(v))
+    for v in (0, 3, 199):
+        assert np.array_equal(u.neighbors(300 + v), b.neighbors(v) + 300)
+    # no cross-component edges
+    assert (u.indices[:a.num_edges] < 300).all()
+    assert (u.indices[a.num_edges:] >= 300).all()
+
+
+# -- deadline windows ----------------------------------------------------------
+
+def _mk(rid, arrival, deadline=10e-3, seeds=(1,)):
+    return ServeRequest(rid=rid, tenant=0, arrival_s=arrival,
+                        seeds=np.asarray(seeds, np.int64),
+                        deadline_s=deadline)
+
+
+def test_deadline_policy_close_by_and_ema():
+    pol = DeadlineWindowPolicy(DeadlineWindowConfig(
+        max_window=4, ema=0.5, init_request_s=1e-4, safety=2.0))
+    # close_by = arrival + deadline - safety * est(n), floored at arrival
+    assert pol.close_by(1.0, 10e-3, 2) == pytest.approx(1.0 + 10e-3 - 4e-4)
+    assert pol.close_by(1.0, 1e-4, 4) == 1.0      # slack already spent
+    assert pol.full(4) and not pol.full(3)
+    pol.observe(8e-4, 4)                          # 2e-4 per request
+    assert pol.est_request_s == pytest.approx(0.5 * 1e-4 + 0.5 * 2e-4)
+    pol.reset()
+    assert pol.est_request_s == 1e-4
+
+
+def test_batcher_batches_within_slack():
+    pol = DeadlineWindowPolicy(DeadlineWindowConfig(
+        max_window=4, init_request_s=1e-4, safety=1.0))
+    batcher = SLOBatcher(pol)
+    pending = deque([_mk(0, 0.0), _mk(1, 1e-4), _mk(2, 2e-4)])
+    d = batcher.next_window(pending, busy_until_s=0.0)
+    assert [r.rid for r in d.staged] == [0, 1, 2] and not d.shed
+    assert not d.hit_cap
+    # the controller opens the window when the oldest's slack is spent
+    assert d.start_s == pytest.approx(pol.close_by(0.0, 10e-3, 3))
+    assert not pending
+
+
+def test_batcher_closes_at_depth_cap():
+    pol = DeadlineWindowPolicy(DeadlineWindowConfig(
+        max_window=2, init_request_s=1e-4, safety=1.0))
+    batcher = SLOBatcher(pol)
+    pending = deque([_mk(i, i * 1e-5) for i in range(5)])
+    d = batcher.next_window(pending, busy_until_s=0.0)
+    assert [r.rid for r in d.staged] == [0, 1] and d.hit_cap
+    # a full window starts as soon as the engine can take it
+    assert d.start_s == pytest.approx(1e-5)
+    assert len(pending) == 3
+
+
+def test_batcher_far_future_arrival_yields_singleton():
+    pol = DeadlineWindowPolicy(DeadlineWindowConfig(max_window=8))
+    batcher = SLOBatcher(pol)
+    pending = deque([_mk(0, 0.0), _mk(1, 5.0)])
+    d = batcher.next_window(pending, busy_until_s=0.0)
+    assert [r.rid for r in d.staged] == [0]
+    assert len(pending) == 1
+
+
+def test_batcher_sheds_expired_requests():
+    pol = DeadlineWindowPolicy(DeadlineWindowConfig(max_window=4))
+    batcher = SLOBatcher(pol)
+    pending = deque([_mk(0, 0.0, deadline=1e-3), _mk(1, 0.0, deadline=9.0)])
+    d = batcher.next_window(pending, busy_until_s=5.0)   # engine backlogged
+    assert [r.rid for r in d.shed] == [0]                # hopeless: shed
+    assert [r.rid for r in d.staged] == [1]
+    # with shedding disabled the dead request is served anyway
+    keep = SLOBatcher(DeadlineWindowPolicy(
+        DeadlineWindowConfig(max_window=4)), shed_expired=False)
+    pending = deque([_mk(0, 0.0, deadline=1e-3)])
+    d = keep.next_window(pending, busy_until_s=5.0)
+    assert [r.rid for r in d.staged] == [0] and not d.shed
+
+
+# -- engine --------------------------------------------------------------------
+
+def _stream(graph, n=60, qps=2000, deadline=20e-3, tenants=2, seed=4):
+    specs = tuple(
+        TenantSpec(f"t{i}", hot_fraction=0.05, hot_prob=0.8, mean_seeds=3,
+                   deadline_s=deadline,
+                   arrival="mmpp" if i % 2 else "poisson")
+        for i in range(tenants))
+    return generate_stream(graph.num_nodes, specs, qps, n, seed=seed)
+
+
+def test_merged_and_per_request_bit_identical(small_graph, small_feats):
+    """Merging changes latency, never results: same stream, same sampled
+    blocks, same feature rows, in both execution modes."""
+    stream = _stream(small_graph)
+    results = {}
+    for merged in (True, False):
+        engine = GNNServeEngine(small_graph, small_feats, GNNServeConfig(
+            merged=merged, tenants=2, cache_lines=512, keep_features=True,
+            seed=7))
+        results[merged] = engine.run(_replay(stream))
+    recs_m = {r.rid: r for r in results[True].records}
+    recs_p = {r.rid: r for r in results[False].records}
+    assert set(recs_m) == set(recs_p) == {r.rid for r in stream}
+    served_both = 0
+    for rid in recs_m:
+        a, b = recs_m[rid], recs_p[rid]
+        if a.rejected or b.rejected:
+            continue
+        served_both += 1
+        assert np.array_equal(a.all_nodes, b.all_nodes)
+        assert np.array_equal(a.features, b.features)
+        assert np.array_equal(a.features, small_feats[a.all_nodes])
+    assert served_both >= 50          # low load: nearly everything served
+
+
+def test_every_request_retires_exactly_once(small_graph, small_feats):
+    stream = _stream(small_graph, n=80, qps=30_000, deadline=2e-3)
+    engine = GNNServeEngine(small_graph, small_feats,
+                            GNNServeConfig(tenants=2, cache_lines=512,
+                                           seed=7))
+    res = engine.run(_replay(stream))
+    assert sorted(r.rid for r in res.records) == [r.rid for r in stream]
+    for r in res.served:
+        assert r.completion_s >= r.start_s >= r.arrival_s
+        assert r.window_size >= 1
+        bd_sum = r.gather_s + r.forward_s
+        assert r.latency_s >= bd_sum - 1e-12
+
+
+def test_overload_sheds_and_counts_against_goodput(small_graph, small_feats):
+    # everything arrives at once with a deadline far smaller than the
+    # backlog: most requests must be shed, none silently dropped
+    stream = _stream(small_graph, n=120, qps=2_000_000, deadline=5e-4)
+    engine = GNNServeEngine(small_graph, small_feats,
+                            GNNServeConfig(tenants=2, cache_lines=512,
+                                           seed=7))
+    res = engine.run(_replay(stream))
+    assert len(res.records) == 120
+    assert res.n_rejected > 0
+    for r in res.records:
+        if r.rejected:
+            assert r.completion_s == 0.0 and not r.deadline_met
+    met = sum(r.deadline_met for r in res.records)
+    assert met < 120                      # goodput strictly below offered
+
+
+def test_windows_form_under_load(small_graph, small_feats):
+    stream = _stream(small_graph, n=80, qps=20_000)
+    engine = GNNServeEngine(small_graph, small_feats,
+                            GNNServeConfig(tenants=2, cache_lines=512,
+                                           seed=7))
+    res = engine.run(_replay(stream))
+    assert res.mean_window > 1.5          # merging actually happened
+    assert any(w.dedup_factor > 1.0 for w in res.windows)
+    # tenant-pure windows: every window's records share one tenant
+    by_window = {}
+    for r in res.served:
+        by_window.setdefault((r.start_s, r.completion_s), set()).add(r.tenant)
+    assert all(len(t) == 1 for t in by_window.values())
+
+
+def test_engine_reset_replays_bit_identically(small_graph, small_feats):
+    stream = _stream(small_graph, n=40)
+    engine = GNNServeEngine(small_graph, small_feats,
+                            GNNServeConfig(tenants=2, cache_lines=512,
+                                           seed=7))
+    r1 = engine.run(_replay(stream))
+    engine.reset()
+    r2 = engine.run(_replay(stream))
+    assert [(r.rid, r.completion_s) for r in r1.records] == \
+        [(r.rid, r.completion_s) for r in r2.records]
+
+
+# -- tenant cache isolation ----------------------------------------------------
+
+def test_tenant_cache_partitions_are_isolated():
+    tier = TenantCacheTier(num_lines=64, ways=8, tenants=2, seed=0)
+    victim = np.arange(0, 24)
+    noisy = np.arange(1000, 1480)
+    tier.stage_tenants(np.zeros(len(victim), np.int64))
+    tier.probe(victim)                               # cold fill
+    tier.stage_tenants(np.zeros(len(victim), np.int64))
+    assert tier.probe(victim).all()                  # resident
+    # the noisy tenant storms its partition far past total capacity
+    for chunk in np.split(noisy, 8):
+        tier.stage_tenants(np.ones(len(chunk), np.int64))
+        tier.probe(chunk)
+    tier.stage_tenants(np.zeros(len(victim), np.int64))
+    assert tier.probe(victim).all()                  # hot set untouched
+    assert tier.hit_ratio(0) > tier.hit_ratio(1)
+
+
+def test_tenant_cache_quota_sizing_and_staging_contract():
+    tier = TenantCacheTier(num_lines=96, ways=8, tenants=3,
+                           quotas=(2.0, 1.0, 1.0), seed=0)
+    lines = [tier.partition_lines(t) for t in range(3)]
+    assert all(n % 8 == 0 and n >= 8 for n in lines)
+    assert lines[0] >= lines[1] == lines[2]
+    with pytest.raises(ValueError):
+        tier.stage_tenants(np.array([3]))            # tenant out of range
+    tier.stage_tenants(np.array([0, 1]))
+    with pytest.raises(ValueError):
+        tier.probe(np.array([1, 2, 3]))              # length mismatch
+    with pytest.raises(ValueError):
+        TenantCacheTier(num_lines=64, ways=8, tenants=2, quotas=(1.0,))
+
+
+def test_serve_gnn_presets(small_graph, small_feats):
+    plane = DataPlaneSpec.preset("serve-gnn").build(
+        small_graph, small_feats, cache_lines=256, tenants=2,
+        tenant_quotas=(3.0, 1.0), seed=0)
+    first = plane.store.tiers[0]
+    assert isinstance(first, TenantCacheTier)
+    assert first.tenants == 2
+    assert first.partition_lines(0) > first.partition_lines(1)
+    shared = DataPlaneSpec.preset("serve-gnn-shared").build(
+        small_graph, small_feats, cache_lines=256, seed=0)
+    assert not any(isinstance(t, TenantCacheTier) for t in shared.store.tiers)
+
+
+def test_partitioned_victim_hit_ratio_beats_shared(small_graph, small_feats):
+    """Engine-level isolation: with a scanning co-tenant, the victim's hit
+    ratio in its guaranteed partition stays high."""
+    specs = (TenantSpec("victim", hot_fraction=0.01, hot_prob=0.95,
+                        mean_seeds=3, deadline_s=50e-3,
+                        node_range=(0, 1000)),
+             TenantSpec("noisy", hot_fraction=0.9, hot_prob=0.0,
+                        mean_seeds=6, deadline_s=50e-3,
+                        node_range=(1000, 2000)))
+    stream = generate_stream(small_graph.num_nodes, specs, 4000, 120, seed=3)
+    engine = GNNServeEngine(small_graph, small_feats, GNNServeConfig(
+        tenants=2, cache_lines=512, tenant_quotas=(1.0, 1.0), seed=7))
+    engine.run(_replay(stream))
+    tier = engine._tenant_tier
+    assert tier is not None
+    assert tier.hit_ratio(0) > tier.hit_ratio(1)
+
+
+# -- gather correctness property (any arrival pattern / tenant mix) ------------
+
+def _assert_serve_rows_exact(graph, feats, stream):
+    engine = GNNServeEngine(graph, feats, GNNServeConfig(
+        tenants=max(r.tenant for r in stream) + 1, cache_lines=512,
+        keep_features=True, seed=7))
+    res = engine.run(_replay(stream))
+    assert sorted(r.rid for r in res.records) == [r.rid for r in stream]
+    served = res.served
+    assert served
+    for rec in served:
+        assert np.array_equal(rec.features, feats[rec.all_nodes])
+
+
+def test_serve_rows_match_direct_gather(small_graph, small_feats):
+    _assert_serve_rows_exact(small_graph, small_feats,
+                             _stream(small_graph, n=50, qps=8000))
+
+
+def test_serve_rows_property_hypothesis(small_graph, small_feats):
+    """Satellite property: under ANY arrival pattern and tenant mix, the
+    feature rows each request receives from the serve path are bit-identical
+    to gathering that request alone against the raw feature array."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           qps=st.sampled_from([500, 5_000, 50_000]),
+           n_tenants=st.integers(1, 3),
+           deadline_ms=st.sampled_from([1.0, 5.0, 50.0]),
+           bursty=st.booleans())
+    def prop(seed, qps, n_tenants, deadline_ms, bursty):
+        specs = tuple(
+            TenantSpec(f"t{i}", hot_fraction=0.02 + 0.03 * i,
+                       hot_prob=0.5 + 0.15 * i, mean_seeds=2 + i,
+                       deadline_s=deadline_ms * 1e-3,
+                       arrival="mmpp" if bursty and i % 2 else "poisson")
+            for i in range(n_tenants))
+        stream = generate_stream(small_graph.num_nodes, specs, qps, 30,
+                                 seed=seed)
+        _assert_serve_rows_exact(small_graph, small_feats, stream)
+
+    prop()
+
+
+def test_serve_runs_real_gnn_forward(small_graph, small_feats):
+    jax = pytest.importorskip("jax")
+    from repro.models.gnn import GNN, GNNConfig
+    cfg = GNNConfig(model="sage", in_dim=16, hidden_dim=8, num_classes=5,
+                    fanouts=(3, 2), use_pallas=False)
+    gnn = GNN(cfg)
+    params = gnn.init(jax.random.PRNGKey(0))
+    stream = _stream(small_graph, n=6, qps=500)
+    engine = GNNServeEngine(small_graph, small_feats, GNNServeConfig(
+        fanouts=(3, 2), tenants=2, cache_lines=512, seed=7),
+        model=gnn, params=params)
+    res = engine.run(_replay(stream))
+    for rec, req in zip(res.records, sorted(stream, key=lambda r: r.rid)):
+        if rec.rejected:
+            continue
+        assert rec.logits is not None
+        assert rec.logits.shape == (len(req.seeds), 5)
