@@ -1,11 +1,12 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows; `python -m benchmarks.run [--quick]`.  `--json [path]` is the CI
-# smoke mode: fig13 + fig14 + shard-scaling + fig7-sampling + serve-load
-# headline numbers as JSON (default BENCH_pr6.json) so the perf trajectory
-# is recorded per PR.  `--baseline PATH` compares the fresh numbers against
-# a committed earlier BENCH_*.json and exits non-zero if the `gids`
-# preset's e2e regressed (the model is deterministic, so the tolerance only
-# absorbs float/env noise).
+# smoke mode: fig13 + fig14 + shard-scaling + fig7-sampling + serve-load +
+# adaptive headline numbers as JSON (default BENCH_pr7.json) so the perf
+# trajectory is recorded per PR.  `--baseline PATH` compares the fresh
+# numbers against a committed earlier BENCH_*.json and exits non-zero if
+# the `gids` preset's e2e regressed — and, because every deterministic path
+# must stay bit-identical across the adaptive-plane PR, the gids numbers
+# must match the baseline EXACTLY, not just within tolerance.
 from __future__ import annotations
 
 import argparse
@@ -31,19 +32,27 @@ def check_baseline(payload: dict, baseline_path: str) -> None:
                 f"PERF REGRESSION: {key} {fresh:.6f}{unit} vs baseline "
                 f"{ref:.6f}{unit} ({baseline_path}) exceeds the "
                 f"{BASELINE_TOLERANCE:.2f}x tolerance")
-        print(f"# baseline check OK: {key} {fresh:.6f}{unit} vs "
+        # the adaptive plane must not perturb static planes at all: the
+        # model is deterministic, so the gids preset has to reproduce the
+        # committed baseline bit-for-bit, not merely within tolerance
+        if fresh != ref:
+            raise SystemExit(
+                f"DETERMINISM REGRESSION: {key} {fresh!r}{unit} must be "
+                f"bit-identical to baseline {ref!r}{unit} ({baseline_path})")
+        print(f"# baseline check OK: {key} {fresh:.6f}{unit} == "
               f"{ref:.6f}{unit} ({baseline_path})", flush=True)
 
 
 def write_json_smoke(path: str, baseline: str | None = None) -> None:
     from benchmarks import (fig7_sampling, fig13_e2e, fig14_overlap,
-                            fig_serve_load, fig_shard_scaling)
+                            fig_adaptive, fig_serve_load, fig_shard_scaling)
     payload = {
         "fig13_e2e": fig13_e2e.headline(),
         "fig14_overlap": fig14_overlap.headline(),
         "fig_shard_scaling": fig_shard_scaling.headline(),
         "fig7_sampling": fig7_sampling.headline(),
         "fig_serve_load": fig_serve_load.headline(),
+        "fig_adaptive": fig_adaptive.headline(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -81,6 +90,24 @@ def write_json_smoke(path: str, baseline: str | None = None) -> None:
             "victim p99 under the noisy tenant strictly below the shared "
             f"cache (partitioned {serve['victim_p99_partitioned_s']*1e3:.3f}"
             f"ms vs shared {serve['victim_p99_shared_s']*1e3:.3f}ms)")
+    adaptive = payload["fig_adaptive"]
+    if adaptive["adaptive_vs_degree_speedup"] < 1.0:
+        raise SystemExit(
+            "ADAPTIVE REGRESSION: adaptive placement must beat static "
+            "degree end-to-end under hot-set rotation, net of priced "
+            "migration IOs (got "
+            f"{adaptive['adaptive_vs_degree_speedup']:.4f}x)")
+    if not adaptive["static_bit_identical"]:
+        raise SystemExit(
+            "ADAPTIVE REGRESSION: on a drift-free workload the adaptive "
+            "plane must be bit-identical to static degree placement with "
+            f"zero migrations (migrations="
+            f"{adaptive['static_n_migrations']})")
+    if not adaptive["topo_blocks_identical"]:
+        raise SystemExit(
+            "ADAPTIVE REGRESSION: topology refresh moves pages between "
+            "tiers, never edges — sampled blocks diverged from the static "
+            "degree admission")
     if baseline:
         check_baseline(payload, baseline)
 
@@ -90,11 +117,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow E2E figures")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", nargs="?", const="BENCH_pr6.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr7.json",
                     default=None, metavar="PATH",
                     help="smoke mode: write fig13/fig14/shard-scaling/"
-                         "fig7-sampling/serve-load headline numbers to PATH "
-                         "(default BENCH_pr6.json) and exit")
+                         "fig7-sampling/serve-load/adaptive headline "
+                         "numbers to PATH (default BENCH_pr7.json) and exit")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="with --json: fail if the gids preset's e2e "
                          "regressed vs this earlier BENCH_*.json")
@@ -108,12 +135,13 @@ def main() -> None:
                             fig8_bandwidth_model, fig9_accumulator,
                             fig10_constant_buffer, fig11_window_buffering,
                             fig12_cache_size, fig13_e2e, fig14_overlap,
-                            fig15_ladies, fig_serve_load, fig_shard_scaling,
-                            roofline, tables)
+                            fig15_ladies, fig_adaptive, fig_serve_load,
+                            fig_shard_scaling, roofline, tables)
     suites = [
         ("tables", tables.main),
         ("fig3", fig3_request_rates.main),
         ("fig_serve_load", fig_serve_load.main),
+        ("fig_adaptive", fig_adaptive.main),
         ("fig7", fig7_sampling.main),
         ("fig8", fig8_bandwidth_model.main),
         ("fig9", fig9_accumulator.main),

@@ -11,10 +11,13 @@ from .dataplane import (BuildContext, DataPlane, DataPlaneSpec, TierSpec,
                         register_tier_kind, tier)
 from .feature_store import (CoalescedReport, FeatureStore, GatherReport,
                             TieredFeatureStore)
+from .feedback import (AmortizedCost, MigrationEvent, QuotaController,
+                       RefreshEvent, ShardRebalancer, TopologyRefresher,
+                       TouchTable)
 from .pipeline import Batch, BatchPlan, GIDSDataLoader, LoaderConfig
 from .prefetch import PrefetchEngine, PrefetchStats
-from .sharding import (PlacementPolicy, make_placement, placement_names,
-                       register_placement)
+from .sharding import (AdaptivePlacement, PlacementPolicy, make_placement,
+                       placement_names, register_placement)
 from .software_cache import CacheStats, WindowBufferedCache, run_trace
 from .storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO, SSDSpec,
                           ShardedBurstResult, StorageTimeline,
@@ -35,10 +38,12 @@ __all__ = [
     "BuildContext", "DataPlane", "DataPlaneSpec", "TierSpec",
     "register_tier_kind", "tier",
     "CoalescedReport", "FeatureStore", "GatherReport", "TieredFeatureStore",
+    "AmortizedCost", "MigrationEvent", "QuotaController", "RefreshEvent",
+    "ShardRebalancer", "TopologyRefresher", "TouchTable",
     "Batch", "BatchPlan", "GIDSDataLoader", "LoaderConfig",
     "PrefetchEngine", "PrefetchStats",
-    "PlacementPolicy", "make_placement", "placement_names",
-    "register_placement",
+    "AdaptivePlacement", "PlacementPolicy", "make_placement",
+    "placement_names", "register_placement",
     "CacheStats", "WindowBufferedCache", "run_trace", "INTEL_OPTANE",
     "SAMSUNG_980PRO", "SSDSpec", "ShardedBurstResult", "StorageTimeline",
     "coalesce_lines", "coalesce_lines_by_shard", "model_burst",

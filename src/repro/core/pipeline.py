@@ -102,6 +102,7 @@ from repro.sampling.ladies import ladies_sample_blocks
 from .accumulator import DynamicAccessAccumulator, AccumulatorConfig
 from .dataplane import DataPlane, DataPlaneSpec
 from .feature_store import GatherReport
+from .feedback import ShardRebalancer, TopologyRefresher
 from .prefetch import PrefetchEngine
 from .storage_sim import SSDSpec, StorageTimeline, INTEL_OPTANE
 from .topology import TieredTopologyStore
@@ -139,6 +140,17 @@ class LoaderConfig:
     topo_admission: str = "degree"
     topo_gpu_fraction: float = 0.25
     topo_host_fraction: float = 0.5
+    # adaptive data plane (core/feedback.py; placement="adaptive" and/or
+    # topo_admission="adaptive"): every `rebalance_interval` priced bursts
+    # the controllers fold measured touches and consider a re-placement —
+    # shard migration when the measured queue imbalance exceeds
+    # `imbalance_threshold`, topology page re-admission when measured-hot
+    # pages sit in slow tiers — committing only when the modelled saving
+    # over `migration_horizon` future bursts beats the move's own priced IO
+    # cost, which is then amortized into subsequent batches' prep
+    rebalance_interval: int = 8
+    imbalance_threshold: float = 1.25
+    migration_horizon: int = 64
     seed: int = 0
     # deprecated spelling of data_plane; kept so old call sites keep running
     mode: dataclasses.InitVar[str | None] = None
@@ -259,6 +271,23 @@ class GIDSDataLoader:
                 host_fraction=cfg.topo_host_fraction,
                 ssd=ssd, n_ssd=cfg.n_ssd, n_shards=cfg.n_shards,
                 placement=cfg.placement, seed=cfg.seed)
+        # adaptive data plane: an adaptive placement/admission gets its
+        # feedback controller (core/feedback.py).  Both tick once per priced
+        # burst in _feedback_step; a static plane carries None and pays
+        # nothing
+        self.rebalancer: ShardRebalancer | None = None
+        if hasattr(getattr(backstop, "placement", None), "plan_rebalance"):
+            self.rebalancer = ShardRebalancer(
+                backstop, self.timeline,
+                bytes_per_row=features.shape[1] * features.dtype.itemsize,
+                interval=cfg.rebalance_interval,
+                threshold=cfg.imbalance_threshold,
+                horizon=cfg.migration_horizon)
+        self.topo_refresher: TopologyRefresher | None = None
+        if self.topo is not None and self.topo.touches is not None:
+            self.topo_refresher = TopologyRefresher(
+                self.topo, interval=cfg.rebalance_interval,
+                horizon=cfg.migration_horizon)
         self._lookahead: deque[tuple[dict, SampledBlocks]] = deque()
         self._win_idx = 0   # lookahead entries already pushed to cache window
         # merged-window planes stage whole executed windows here (snapshot
@@ -345,12 +374,29 @@ class GIDSDataLoader:
 
         outstanding = self.accumulator.outstanding(blocks.num_requests)
         t = self.plane.price(self.timeline, report, outstanding)
+        t += self._feedback_step(blocks.all_nodes, None)
         # a topology plane priced the sampling stage when the blocks were
         # drawn (plan_next); prep now covers the full Fig. 1 path
         sample_s = float(getattr(blocks, "sample_time_s", 0.0))
         return Batch(blocks=blocks, features=rows, report=report,
                      prep_time_s=t + sample_s, merge_depth=plan.merge_depth,
                      sample_time_s=sample_s)
+
+    def _feedback_step(self, node_ids: np.ndarray,
+                       counts: np.ndarray | None) -> float:
+        """One adaptive-plane tick per priced burst: record the burst's
+        measured node touches, let each controller consider a (priced)
+        re-placement, and return the burst's amortized share of any
+        committed migration cost — folded into prep, so adaptive-vs-static
+        comparisons are net of migration IOs.  A static plane returns 0.0
+        without touching a thing."""
+        charge = 0.0
+        if self.rebalancer is not None:
+            self.rebalancer.observe(node_ids, counts)
+            charge += self.rebalancer.step()
+        if self.topo_refresher is not None:
+            charge += self.topo_refresher.step()
+        return charge
 
     # -- merged-window execution ------------------------------------------------
     def plan_window(self) -> list[BatchPlan]:
@@ -388,8 +434,14 @@ class GIDSDataLoader:
         # (what actually reached storage), not per-batch raw counts
         self.accumulator.update(window_report.n_requests,
                                 window_report.redirected)
-        prep = (self.timeline.price_merged_burst(window_report)
-                / len(plans))
+        burst_s = self.timeline.price_merged_burst(window_report)
+        # the window is one priced burst, so it is one feedback tick: the
+        # unique request set (with window multiplicity) is what the plane
+        # measured, and any migration charge amortizes across the window's
+        # batches exactly like the burst itself
+        burst_s += self._feedback_step(merged.unique_nodes,
+                                       merged.batch_multiplicity())
+        prep = burst_s / len(plans)
         # each batch's own priced sampling time rides on top of its
         # amortized share of the window's feature burst
         out = []

@@ -21,18 +21,24 @@ share one placement vocabulary:
   skewed  — a deliberately imbalanced hash (shard 0 oversubscribed) used by
             `benchmarks/fig_shard_scaling.py` to show the modelled plane
             degrades gracefully, not cliff-like, under bad placement
+  adaptive — degree striping that *learns*: starts bit-identical to `degree`
+            and re-stripes measured-hot nodes round-robin when the
+            `ShardRebalancer` (core/feedback.py) decides a priced migration
+            pays for itself
 
-Policies are pure functions of the node id namespace (plus static graph
-metadata for `degree`), so shard assignment is deterministic and
+The static policies are pure functions of the node id namespace (plus static
+graph metadata for `degree`), so shard assignment is deterministic and
 checkpoint-stable; `state_dict`/`load_state_dict` round-trip the assignment
-anyway so a future *mutable* policy (online rebalancing) inherits resume
-support for free.
+so the mutable `adaptive` policy (online rebalancing) inherits resume
+support — its learned touch table rides the same checkpoint path.
 """
 from __future__ import annotations
 
 from typing import Callable, Protocol, runtime_checkable
 
 import numpy as np
+
+from .feedback import TouchTable
 
 #: Fibonacci multiplier shared with the software cache's set hash — a
 #: different shift keeps shard striping decorrelated from set indexing.
@@ -166,9 +172,9 @@ class RangePlacement(_PolicyBase):
         # a different-size feature array would silently shift every boundary
         if state.get("num_nodes", self.num_nodes) != self.num_nodes:
             raise ValueError(
-                f"range placement checkpointed over {state.get('num_nodes')} "
-                f"nodes, namespace has {self.num_nodes} — shard boundaries "
-                "would shift")
+                f"{self.name} placement checkpointed over "
+                f"{state.get('num_nodes')} nodes, namespace has "
+                f"{self.num_nodes} — shard boundaries would shift")
 
 
 @register_placement("range")
@@ -206,15 +212,91 @@ class DegreePlacement(_PolicyBase):
         super().load_state_dict(state)
         table = np.asarray(state["table"], np.int16)
         if table.shape != self.table.shape:
+            # name the failing policy: multi-namespace checkpoints restore
+            # several placements and "a table mismatched" is undebuggable
             raise ValueError(
-                f"degree placement table shape {table.shape} does not match "
-                f"namespace {self.table.shape}")
+                f"{self.name} placement table shape {table.shape} does not "
+                f"match namespace {self.table.shape}")
         self.table = table.copy()
 
 
 @register_placement("degree")
 def _make_degree(n_shards: int, *, degrees=None, **_ctx) -> DegreePlacement:
     return DegreePlacement(n_shards, degrees)
+
+
+class AdaptivePlacement(DegreePlacement):
+    """Feedback-driven striping — `degree` that learns from measured touches.
+
+    The initial table is *exactly* the degree deal (same stable sort, same
+    round-robin), so an adaptive plane is bit-identical to a static `degree`
+    plane until the first migration commits — static workloads pay nothing
+    for turning feedback on.  A `TouchTable` (core/feedback.py) accumulates
+    the measured per-node touches; `plan_rebalance()` proposes re-striping
+    only the measured-hot nodes (score > 0) round-robin in score order,
+    leaving the untouched cold tail wherever it already lives — that is what
+    keeps migrations affordable: the moved set scales with the hot set, not
+    the namespace.
+
+    The policy is mechanism, not policy-about-policy: *when* to commit is
+    the `ShardRebalancer`'s call (imbalance trigger + priced cost/benefit);
+    `commit()` just swaps the table after validating it still partitions
+    the namespace.  Table and touch table both ride `state_dict`, so a
+    checkpoint taken mid-migration-epoch resumes the same assignment and
+    the same learned scores."""
+
+    name = "adaptive"
+
+    def __init__(self, n_shards: int, degrees: np.ndarray,
+                 alpha: float = 0.5):
+        super().__init__(n_shards, degrees)
+        self.touches = TouchTable(len(self.table), alpha=alpha)
+
+    def plan_rebalance(self) -> tuple[np.ndarray, np.ndarray]:
+        """Propose a re-striped table: measured-hot nodes dealt round-robin
+        by descending score.  Returns ``(new_table, moved_ids)``; nothing is
+        mutated — the caller decides whether the move is worth its price."""
+        scores = self.touches.scores()
+        # re-deal only the measurably hot: nodes whose decayed EMA has
+        # fallen below 1% of the current peak stay where they are, so the
+        # moved set (and the migration bill) tracks the LIVE hot set
+        # instead of accreting every node ever touched
+        hot = np.nonzero(scores > scores.max() * 0.01)[0] \
+            if scores.max() > 0 else np.empty(0, np.int64)
+        new = self.table.copy()
+        if len(hot):
+            order = hot[np.argsort(-scores[hot], kind="stable")]
+            new[order] = (np.arange(len(order), dtype=np.int64)
+                          % self.n_shards).astype(np.int16)
+        moved = np.nonzero(new != self.table)[0]
+        return new, moved
+
+    def commit(self, new_table: np.ndarray) -> None:
+        new_table = np.asarray(new_table, np.int16)
+        if new_table.shape != self.table.shape:
+            raise ValueError(
+                f"{self.name} placement commit shape {new_table.shape} does "
+                f"not match namespace {self.table.shape}")
+        if len(new_table) and (new_table.min() < 0
+                               or new_table.max() >= self.n_shards):
+            raise ValueError(
+                f"{self.name} placement commit maps nodes outside "
+                f"[0, {self.n_shards}) — namespace no longer partitions")
+        self.table = new_table.copy()
+
+    def state_dict(self) -> dict:
+        return {**super().state_dict(),
+                "touches": self.touches.state_dict()}
+
+    def load_state_dict(self, state: dict) -> None:
+        super().load_state_dict(state)
+        self.touches.load_state_dict(state["touches"])
+
+
+@register_placement("adaptive")
+def _make_adaptive(n_shards: int, *, degrees=None, **_ctx
+                   ) -> AdaptivePlacement:
+    return AdaptivePlacement(n_shards, degrees)
 
 
 class SkewedPlacement(_PolicyBase):

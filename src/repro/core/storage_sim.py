@@ -418,6 +418,47 @@ class StorageTimeline:
         t_pcie = (n_host + n_sto) * io_bytes / PCIE_GEN4_BW
         return TOPO_HOP_LAUNCH_S + max(t_hbm, t_sto, t_pcie)
 
+    def price_migration(self, from_shard, to_shard, bytes_per_row: int,
+                        n_shards: int | None = None,
+                        io_bytes: int = IO_BYTES) -> float:
+        """Price a placement migration: what it actually costs to MOVE rows
+        between shards (the adaptive plane's rebalancing is never free).
+
+        `from_shard[i]` / `to_shard[i]` are the source and destination shard
+        of row i; rows whose shard does not change are ignored.  Every moved
+        row is one read on its source queue and one write on its destination
+        queue — rows wider than an IO line pay line-granular IOs — so each
+        queue drains its reads+writes at its own `SSDSpec` via the Eq. 2-3
+        burst model and the migration completes at the MAX over queues,
+        exactly like a gather burst.  The moved bytes additionally transit
+        host memory twice (source SSD -> host -> destination SSD) under the
+        PCIe cap.  The `ShardRebalancer` (core/feedback.py) commits a
+        migration only when the modelled imbalance saving over its
+        amortization horizon exceeds this cost, then charges the cost back
+        into subsequent batches."""
+        src = np.asarray(from_shard, np.int64)
+        dst = np.asarray(to_shard, np.int64)
+        if src.shape != dst.shape:
+            raise ValueError(
+                f"migration arity mismatch: {src.shape} source vs "
+                f"{dst.shape} destination shards")
+        moved = src != dst
+        src, dst = src[moved], dst[moved]
+        if len(src) == 0:
+            return 0.0
+        if n_shards is None:
+            n_shards = len(self.shard_specs) if self.shard_specs \
+                else int(max(src.max(), dst.max())) + 1
+        specs = self.shard_specs or (self.spec,) * n_shards
+        per_queue = np.bincount(src, minlength=n_shards) \
+            + np.bincount(dst, minlength=n_shards)
+        lines_per_row = max(1, -(-bytes_per_row // io_bytes))
+        burst = price_sharded_burst(
+            specs, tuple(per_queue), tuple(per_queue * lines_per_row),
+            bytes_per_row, io_bytes)
+        t_pcie = 2 * len(src) * bytes_per_row / PCIE_GEN4_BW
+        return max(burst.elapsed_s, t_pcie)
+
     def gids_batch_time(self, n_storage: int, n_host: int, n_hbm: int,
                         feat_bytes: int, outstanding: int) -> float:
         """GIDS: storage requests overlapped (efficiency from the accumulator's

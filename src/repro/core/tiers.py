@@ -282,27 +282,57 @@ class TenantCacheTier(_TierBase):
             raise ValueError(f"need at least one tenant, got {tenants}")
         if quotas is None:
             quotas = (1.0 / tenants,) * tenants
-        quotas = tuple(float(q) for q in quotas)
-        if len(quotas) != tenants:
-            raise ValueError(
-                f"{len(quotas)} quotas for {tenants} tenants — pass one "
-                "capacity share per tenant")
-        if any(q <= 0 for q in quotas):
-            raise ValueError(f"quotas must be positive, got {quotas}")
-        total = sum(quotas)
-        # per-partition line budget: quota share rounded down to a whole
-        # number of sets (the cache asserts num_lines % ways == 0), floored
-        # at one set so every tenant owns at least `ways` lines
-        self.partitions = tuple(
-            WindowBufferedCache(
-                max(ways, (int(num_lines * q / total) // ways) * ways),
-                ways, window_depth=0, seed=seed + 17 * t)
-            for t, q in enumerate(quotas))
-        self.quotas = quotas
         self.ways = ways
         self.line_bytes = line_bytes
         self.name = name
+        self._num_lines = int(num_lines)
+        self._seed = seed
+        self._tenants = tenants
+        self._init_quotas = self._check_quotas(quotas)
+        self.quotas = self._init_quotas
+        self.partitions = self._build_partitions(self.quotas)
         self._staged: np.ndarray | None = None
+
+    def _check_quotas(self, quotas: Sequence[float]) -> tuple[float, ...]:
+        quotas = tuple(float(q) for q in quotas)
+        if len(quotas) != self._tenants:
+            raise ValueError(
+                f"{len(quotas)} quotas for {self._tenants} tenants — pass "
+                "one capacity share per tenant")
+        if any(q <= 0 for q in quotas):
+            raise ValueError(f"quotas must be positive, got {quotas}")
+        return quotas
+
+    def _build_partitions(self, quotas: tuple[float, ...]
+                          ) -> tuple[WindowBufferedCache, ...]:
+        total = sum(quotas)
+        # per-partition line budget: quota share rounded down to a whole
+        # number of sets (the cache asserts num_lines % ways == 0), floored
+        # at one set so every tenant owns at least `ways` lines; partition
+        # seeds derive from the tenant index, so a tenant's hash placement
+        # is stable across repartitions
+        return tuple(
+            WindowBufferedCache(
+                max(self.ways,
+                    (int(self._num_lines * q / total) // self.ways)
+                    * self.ways),
+                self.ways, window_depth=0, seed=self._seed + 17 * t)
+            for t, q in enumerate(quotas))
+
+    def repartition(self, quotas: Sequence[float]) -> None:
+        """Online quota re-split (the `QuotaController`'s actuator,
+        core/feedback.py): rebuild the per-tenant partitions at the new
+        shares.  Rebuilt partitions start COLD — the refill is priced as
+        ordinary misses in subsequent bursts, which is exactly why the
+        controller repartitions sparingly — but each tenant's cumulative
+        hit/access counters carry over, so `hit_ratio(tenant)` telemetry
+        (and the `ServeResult` rollup) stays a run-long signal."""
+        quotas = self._check_quotas(quotas)
+        stats = [c.stats for c in self.partitions]
+        self.partitions = self._build_partitions(quotas)
+        for cache, old in zip(self.partitions, stats):
+            cache.stats = old
+        self.quotas = quotas
 
     @property
     def tenants(self) -> int:
@@ -375,9 +405,17 @@ class TenantCacheTier(_TierBase):
     def hit_ratio(self, tenant: int) -> float:
         return self.partitions[tenant].stats.hit_ratio
 
+    def hit_ratios(self) -> tuple[float, ...]:
+        """Cumulative per-tenant hit ratios — the quota controller's input,
+        rolled up into `ServeResult.tenant_hit_ratios`."""
+        return tuple(c.stats.hit_ratio for c in self.partitions)
+
     def reset(self) -> None:
-        for cache in self.partitions:
-            cache.reset()
+        # full post-construction state: construction-time quotas restored
+        # (an adaptive run may have repartitioned), partitions cold, fresh
+        # counters — so replays of the same stream are bit-reproducible
+        self.quotas = self._init_quotas
+        self.partitions = self._build_partitions(self.quotas)
         self._staged = None
 
 

@@ -33,6 +33,14 @@ registry in `core/sharding.py`:
   range   — naive prefix placement in id order (good when ids are already
             degree-sorted, a skew-sensitivity baseline otherwise)
   random  — seeded random placement (the BaM-style no-information baseline)
+  adaptive — degree admission that *learns*: seeded from the same static
+            expected-touch score (bit-identical to `degree` at build), the
+            store then records every hop's MEASURED page touches into a
+            `TouchTable` (core/feedback.py) and `plan_refresh` /
+            `commit_refresh` re-admit measured-hot pages into the GPU/host
+            budgets between folds, promotion reads priced through the same
+            hop model the sampler pays (`TopologyRefresher` decides when a
+            refresh is worth its cost)
 
 `indptr` ((N+1) * 8 B — two orders of magnitude smaller than `indices`) is
 modelled as always GPU-resident; only edge-page reads are priced.
@@ -54,9 +62,10 @@ from typing import Callable
 
 import numpy as np
 
+from .feedback import TouchTable
 from .sharding import make_placement
-from .storage_sim import (INTEL_OPTANE, IO_BYTES, SSDSpec, StorageTimeline,
-                          host_sampling_hop_time)
+from .storage_sim import (HBM_BW, INTEL_OPTANE, IO_BYTES, PCIE_GEN4_BW,
+                          SSDSpec, StorageTimeline, host_sampling_hop_time)
 
 #: Topology tier indices, fastest first — aligned with
 #: `tiers.LATENCY_CLASSES` so telemetry vocabulary matches the feature plane.
@@ -170,6 +179,20 @@ def _degree_admission(n_pages: int, *, gpu_pages: int, host_pages: int,
     return _fill_by_order(order, n_pages, gpu_pages, host_pages)
 
 
+@register_admission("adaptive")
+def _adaptive_admission(n_pages: int, *, gpu_pages: int, host_pages: int,
+                        page_score=None, **_ctx) -> np.ndarray:
+    """Feedback-seeded admission: identical to `degree` at build time (same
+    static expected-touch prior, same stable ranking), then re-ranked online
+    from measured touches via `TieredTopologyStore.plan_refresh` — a store
+    built with this policy carries a `TouchTable` fed by every hop."""
+    if page_score is None:
+        raise ValueError("adaptive admission needs per-page scores (build "
+                         "the store via TieredTopologyStore.from_graph)")
+    order = np.argsort(-np.asarray(page_score), kind="stable")
+    return _fill_by_order(order, n_pages, gpu_pages, host_pages)
+
+
 @register_admission("range")
 def _range_admission(n_pages: int, *, gpu_pages: int, host_pages: int,
                      **_ctx) -> np.ndarray:
@@ -258,6 +281,10 @@ class TieredTopologyStore:
         self.page_slot[gpu_pages] = np.arange(len(gpu_pages), dtype=np.int32)
         self._gpu_pages = gpu_pages
         self._hot_pages_dev = None
+        # the adaptive policy learns: every hop's measured page touches feed
+        # this table, and plan_refresh/commit_refresh re-admit by it
+        self.touches = (TouchTable(self.n_pages)
+                        if policy == "adaptive" else None)
 
     # -- construction ----------------------------------------------------------
     @classmethod
@@ -328,6 +355,8 @@ class TieredTopologyStore:
                 shard_pages=(self.n_shards > 1) * (0,) * self.n_shards)
         pages, read_counts = np.unique(pos // self.page_words,
                                        return_counts=True)
+        if self.touches is not None:
+            self.touches.observe(pages, read_counts)
         tiers = self.assignment[pages]
         pages_by_tier = tuple(
             int(c) for c in np.bincount(tiers, minlength=3)[:3])
@@ -345,6 +374,83 @@ class TieredTopologyStore:
             shard_pages=shard_pages)
         return dataclasses.replace(
             report, time_s=self.timeline.price_topology_hop(report))
+
+    # -- online re-admission (the adaptive policy's refresh loop) --------------
+    def plan_refresh(self):
+        """Fold the measured page touches and propose a re-admission under
+        the SAME tier budgets: hottest measured pages fill HBM, next-hottest
+        pinned host, tail sinks to storage (the build-time ranking, re-run
+        on live data).  Returns ``None`` when nothing would move, else
+        ``(assignment, n_moved, cost_s, saving_s)`` where `cost_s` prices
+        reading every promoted page once from the tier it is leaving (one
+        pseudo-hop through `price_topology_hop` — promotion IOs are real)
+        and `saving_s` is the modelled per-fold read-time delta: measured
+        touch rate x (old tier's per-page service time - new tier's).  The
+        caller (`TopologyRefresher`, core/feedback.py) commits only when
+        the saving over its horizon beats the cost."""
+        if self.touches is None:
+            raise ValueError(
+                "plan_refresh needs a feedback-enabled store — build it "
+                "with admission='adaptive'")
+        self.touches.fold()
+        scores = self.touches.scores()
+        gpu_budget, host_budget, _ = self.tier_pages()
+        order = np.argsort(-scores, kind="stable")
+        new = _fill_by_order(order, self.n_pages, gpu_budget, host_budget)
+        moved = new != self.assignment
+        if not moved.any():
+            return None
+        # promoted pages (moving to a faster tier, lower index) are read
+        # once from the tier they leave; demotions are free drops
+        promote = moved & (new < self.assignment)
+        n_from_host = int((promote & (self.assignment == TIER_HOST)).sum())
+        from_storage = promote & (self.assignment == TIER_STORAGE)
+        n_from_storage = int(from_storage.sum())
+        shard_pages = ()
+        if self.n_shards > 1:
+            shard_pages = tuple(int(c) for c in np.bincount(
+                self.page_shard[np.nonzero(from_storage)[0]],
+                minlength=self.n_shards))
+        n_promoted = n_from_host + n_from_storage
+        cost = 0.0
+        if n_promoted:
+            cost = self.timeline.price_topology_hop(TopologyGatherReport(
+                hop=-1, n_frontier=0,
+                n_edge_reads=n_promoted * self.page_words,
+                pages_by_tier=(0, n_from_host, n_from_storage),
+                reads_by_tier=(0, 0, 0), shard_pages=shard_pages))
+        # per-page-read service time by tier: HBM reads at HBM bandwidth,
+        # pinned host streams over PCIe, storage adds the device IO
+        t_read = np.array([
+            self.page_bytes / HBM_BW,
+            self.page_bytes / PCIE_GEN4_BW,
+            self.page_bytes / PCIE_GEN4_BW
+            + 1.0 / self.timeline.spec.peak_iops])
+        saving = float(np.sum(
+            scores * (t_read[self.assignment] - t_read[new])))
+        return new, int(moved.sum()), cost, saving
+
+    def commit_refresh(self, assignment: np.ndarray) -> None:
+        """Swap in a refreshed admission (from `plan_refresh`) and rebuild
+        the device-side hot-page state.  Budget-preserving by construction —
+        per-tier page counts must match the current assignment's, so a
+        refresh can never silently grow a tier."""
+        assignment = np.asarray(assignment, np.int8)
+        if assignment.shape != (self.n_pages,):
+            raise ValueError(f"refresh assignment shape {assignment.shape} "
+                             f"does not match {self.n_pages} edge pages")
+        new_counts = tuple(int(c) for c in
+                           np.bincount(assignment, minlength=3)[:3])
+        if new_counts != self.tier_pages():
+            raise ValueError(
+                f"refresh would change tier budgets {self.tier_pages()} -> "
+                f"{new_counts}; re-admission must preserve them")
+        self.assignment = assignment
+        gpu_pages = np.nonzero(assignment == TIER_HBM)[0]
+        self.page_slot = np.full(self.n_pages, -1, np.int32)
+        self.page_slot[gpu_pages] = np.arange(len(gpu_pages), dtype=np.int32)
+        self._gpu_pages = gpu_pages
+        self._hot_pages_dev = None           # resident set changed: restage
 
     # -- device data path ------------------------------------------------------
     def hot_pages(self):

@@ -65,6 +65,13 @@ class GNNServeConfig:
     cache_ways: int = 8
     tenants: int = 1
     tenant_quotas: Sequence[float] | None = None
+    # adaptive quotas (core/feedback.QuotaController): every
+    # `quota_interval` served windows, re-split the tenant cache's line
+    # budget by EMA-smoothed per-tenant miss traffic (each tenant floored
+    # at `quota_floor` of the lines), via TenantCacheTier.repartition
+    adaptive_quotas: bool = False
+    quota_interval: int = 8
+    quota_floor: float = 0.05
     cbuf_fraction: float = 0.05
     # deadline-bounded admission (core/accumulator.DeadlineWindowPolicy)
     max_window: int = 16
@@ -130,6 +137,15 @@ class WindowTrace:
 class ServeResult:
     records: list[RequestRecord]
     windows: list[WindowTrace]
+    # per-tenant cumulative cache hit ratio from the serving tier — the
+    # quota controller's input surfaced in served telemetry (empty when the
+    # plane has no tenant tier)
+    tenant_hit_ratios: dict[int, float] = dataclasses.field(
+        default_factory=dict)
+    # committed quota re-splits: (window index, new quota shares) per
+    # QuotaController event; empty on static-quota runs
+    quota_trace: list[tuple[int, tuple[float, ...]]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def served(self) -> list[RequestRecord]:
@@ -245,7 +261,17 @@ class GNNServeEngine:
         self._tenant_tier = next(
             (t for t in self.store.tiers if isinstance(t, TenantCacheTier)),
             None)
+        self.quota_controller = self._make_quota_controller()
         self._sample_cache: dict = {}
+
+    def _make_quota_controller(self):
+        if not (self.config.adaptive_quotas and self._tenant_tier is not None
+                and self._tenant_tier.tenants > 1):
+            return None
+        from repro.core.feedback import QuotaController
+        return QuotaController(self._tenant_tier,
+                               interval=self.config.quota_interval,
+                               floor=self.config.quota_floor)
 
     # -- stages ----------------------------------------------------------------
     def _sample(self, req: ServeRequest):
@@ -352,8 +378,20 @@ class GNNServeEngine:
                 pending.appendleft(req)
             decision.staged = staged
             busy = self._execute(decision, records, windows)
+            # close the quota loop once per served window: the controller
+            # watches the tenant tier's cumulative counters and repartitions
+            # when smoothed miss traffic drifts past its dead band
+            if self.quota_controller is not None:
+                self.quota_controller.step()
         records.sort(key=lambda r: r.rid)
-        return ServeResult(records=records, windows=windows)
+        result = ServeResult(records=records, windows=windows)
+        if self._tenant_tier is not None:
+            result.tenant_hit_ratios = {
+                t: self._tenant_tier.hit_ratio(t)
+                for t in range(self._tenant_tier.tenants)}
+        if self.quota_controller is not None:
+            result.quota_trace = list(self.quota_controller.events)
+        return result
 
     def _execute(self, decision, records, windows) -> float:
         staged = decision.staged
@@ -416,4 +454,7 @@ class GNNServeEngine:
         # the topology store is stateless (fixed page assignment) — nothing
         # to reset there
         self.policy.reset()
+        # plane.reset restored the construction-time quotas; the controller
+        # restarts from the same initial demand estimate
+        self.quota_controller = self._make_quota_controller()
         self._sample_cache.clear()

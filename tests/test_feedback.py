@@ -1,0 +1,565 @@
+"""Adaptive data plane: TouchTable EMA + checkpointing, priced shard
+migration (AdaptivePlacement / ShardRebalancer / price_migration), online
+topology re-admission (TopologyRefresher), tenant-quota re-partitioning
+(QuotaController / TenantCacheTier.repartition), bit-identity of adaptive
+planes to their static twins on drift-free workloads, and the hypothesis
+properties: migration preserves the namespace partition, features stay
+bit-identical across migration, and a checkpoint taken mid-migration-epoch
+resumes the same assignment."""
+import numpy as np
+import pytest
+
+from repro.core import (AdaptivePlacement, AmortizedCost, GIDSDataLoader,
+                        INTEL_OPTANE, LoaderConfig, QuotaController,
+                        SAMSUNG_980PRO, ShardRebalancer, StorageTimeline,
+                        TenantCacheTier, TouchTable, make_placement,
+                        placement_names)
+from repro.graph.synthetic import rmat_graph
+from repro.serve import (GNNServeConfig, GNNServeEngine, TenantSpec,
+                         generate_stream)
+
+
+@pytest.fixture(scope="module")
+def graph_and_feats():
+    g = rmat_graph(10_000, 12, 16, seed=1)
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 16)).astype(np.float32)
+    return g, feats
+
+
+def _mk(g, feats, plane, seed=7, **kw):
+    cfg = dict(batch_size=128, fanouts=(4, 4), cache_lines=2048,
+               window_depth=4, seed=seed)
+    cfg.update(kw)
+    return GIDSDataLoader(g, feats, LoaderConfig(data_plane=plane, **cfg))
+
+
+def _hot_sets(g, n_shards=4):
+    """The adversarial drift: each hot set is exactly one shard of the
+    static degree deal, so static placement serializes on one queue."""
+    table = make_placement("degree", n_shards,
+                           degrees=np.diff(g.indptr)).table
+    return [np.nonzero(table == s)[0] for s in range(n_shards)]
+
+
+# -- TouchTable ----------------------------------------------------------------
+
+def test_touch_table_ema_folds():
+    t = TouchTable(8, alpha=0.5)
+    t.observe(np.array([1, 1, 3]))
+    np.testing.assert_array_equal(t.scores(), 0.0)      # nothing folded yet
+    t.fold()
+    assert t.scores()[1] == 1.0 and t.scores()[3] == 0.5
+    t.fold()                                            # empty interval decays
+    assert t.scores()[1] == 0.5
+    t.observe(np.array([0, 1]), counts=np.array([4.0, 2.0]))
+    t.fold()
+    assert t.scores()[0] == 2.0
+    assert t.scores()[1] == 0.25 + 1.0                  # decayed + fresh
+    assert t.folds == 3
+
+
+def test_touch_table_validation():
+    with pytest.raises(ValueError, match="size"):
+        TouchTable(0)
+    with pytest.raises(ValueError, match="alpha"):
+        TouchTable(4, alpha=0.0)
+    with pytest.raises(ValueError, match="alpha"):
+        TouchTable(4, alpha=1.5)
+    t = TouchTable(4)
+    t.observe(np.empty(0, np.int64))                    # no-op, no crash
+    np.testing.assert_array_equal(t.pending, 0.0)
+
+
+def test_touch_table_checkpoint_roundtrips_mid_interval():
+    t = TouchTable(16, alpha=0.25)
+    t.observe(np.arange(8))
+    t.fold()
+    t.observe(np.array([3, 3]))                         # open bucket
+    state = t.state_dict()
+    fresh = TouchTable(16, alpha=0.5)
+    fresh.load_state_dict(state)
+    assert fresh.alpha == 0.25 and fresh.folds == 1
+    np.testing.assert_array_equal(fresh.ema, t.ema)
+    np.testing.assert_array_equal(fresh.pending, t.pending)
+    fresh.fold(), t.fold()
+    np.testing.assert_array_equal(fresh.scores(), t.scores())
+    with pytest.raises(ValueError, match="touch table checkpointed over"):
+        TouchTable(8).load_state_dict(state)
+
+
+# -- AmortizedCost -------------------------------------------------------------
+
+def test_amortized_cost_drains_over_horizon():
+    debt = AmortizedCost(4)
+    assert debt.charge() == 0.0
+    debt.add(1.0)
+    charges = [debt.charge() for _ in range(5)]
+    assert charges[:4] == [0.25] * 4
+    assert charges[4] == 0.0
+    assert debt.outstanding_s == 0.0
+    debt.add(0.4)
+    debt.charge()
+    debt.add(0.1)                                       # blends into the rest
+    total = 0.3 + 0.1
+    drained = 0.0
+    for _ in range(64):
+        drained += debt.charge()
+    assert drained == pytest.approx(total)
+    with pytest.raises(ValueError, match="horizon"):
+        AmortizedCost(0)
+    with pytest.raises(ValueError, match="cost"):
+        debt.add(-1.0)
+
+
+# -- AdaptivePlacement ---------------------------------------------------------
+
+def test_adaptive_registered_and_seeds_from_degree():
+    assert "adaptive" in placement_names()
+    degrees = np.random.default_rng(3).zipf(1.5, 4096).astype(np.int64)
+    adaptive = make_placement("adaptive", 4, degrees=degrees)
+    static = make_placement("degree", 4, degrees=degrees)
+    assert isinstance(adaptive, AdaptivePlacement)
+    np.testing.assert_array_equal(adaptive.table, static.table)
+
+
+def test_adaptive_plan_rebalance_restripes_hot_leaves_cold():
+    pol = AdaptivePlacement(4, np.ones(1000, np.int64))
+    # all measured traffic lands on the 32 nodes the table puts on shard 0
+    hot = np.nonzero(pol.table == 0)[0][:32]
+    pol.touches.observe(hot)
+    pol.touches.fold()
+    new, moved = pol.plan_rebalance()
+    assert pol.touches.scores().max() > 0
+    # proposal only — nothing mutated until commit
+    assert (pol.table != new).any() and len(moved) > 0
+    # the hot set is re-dealt round-robin: one quarter per shard
+    counts = np.bincount(new[hot], minlength=4)
+    np.testing.assert_array_equal(counts, 8)
+    # the untouched cold tail stays exactly where it was
+    cold = np.setdiff1d(np.arange(1000), hot)
+    np.testing.assert_array_equal(new[cold], pol.table[cold])
+    pol.commit(new)
+    np.testing.assert_array_equal(pol.table, new)
+
+
+def test_adaptive_plan_rebalance_cold_table_moves_nothing():
+    pol = AdaptivePlacement(2, np.arange(100))
+    new, moved = pol.plan_rebalance()
+    assert len(moved) == 0
+    np.testing.assert_array_equal(new, pol.table)
+
+
+def test_adaptive_commit_validation():
+    pol = AdaptivePlacement(2, np.arange(100))
+    with pytest.raises(ValueError, match="adaptive placement commit shape"):
+        pol.commit(np.zeros(50, np.int16))
+    bad = pol.table.copy()
+    bad[0] = 7
+    with pytest.raises(ValueError, match="no longer partitions"):
+        pol.commit(bad)
+
+
+def test_adaptive_state_dict_carries_touches():
+    pol = AdaptivePlacement(4, np.random.default_rng(0).integers(
+        1, 50, 500))
+    pol.touches.observe(np.arange(100))
+    pol.touches.fold()
+    new, _ = pol.plan_rebalance()
+    pol.commit(new)
+    fresh = AdaptivePlacement(4, np.ones(500, np.int64))
+    fresh.load_state_dict(pol.state_dict())
+    np.testing.assert_array_equal(fresh.table, pol.table)
+    np.testing.assert_array_equal(fresh.touches.scores(),
+                                  pol.touches.scores())
+
+
+def test_placement_restore_errors_name_the_policy():
+    """Satellite: every placement restore failure says WHICH policy refused,
+    so a mixed-plane checkpoint mismatch is attributable from the message."""
+    range_pol = make_placement("range", 4, num_nodes=1000)
+    with pytest.raises(ValueError, match="range placement checkpointed"):
+        make_placement("range", 4, num_nodes=2000).load_state_dict(
+            range_pol.state_dict())
+    adaptive = AdaptivePlacement(4, np.ones(100, np.int64))
+    small = AdaptivePlacement(4, np.ones(50, np.int64))
+    with pytest.raises(ValueError, match="adaptive placement table shape"):
+        small.load_state_dict(
+            {**adaptive.state_dict(), "touches": small.touches.state_dict()})
+    degree = make_placement("degree", 4, degrees=np.ones(100, np.int64))
+    with pytest.raises(ValueError, match="degree placement table shape"):
+        make_placement("degree", 4,
+                       degrees=np.ones(50, np.int64)).load_state_dict(
+            degree.state_dict())
+
+
+# -- price_migration -----------------------------------------------------------
+
+def test_price_migration_zero_moves_is_free():
+    tl = StorageTimeline(SAMSUNG_980PRO)
+    shard = np.array([0, 1, 2, 3])
+    assert tl.price_migration(shard, shard, 1024) == 0.0
+    assert tl.price_migration(np.empty(0), np.empty(0), 1024) == 0.0
+
+
+def test_price_migration_shape_mismatch():
+    tl = StorageTimeline(SAMSUNG_980PRO)
+    with pytest.raises(ValueError, match="arity"):
+        tl.price_migration(np.array([0, 1]), np.array([1]), 1024)
+
+
+def test_price_migration_scales_with_moved_rows():
+    tl = StorageTimeline(SAMSUNG_980PRO)
+    small = tl.price_migration(np.zeros(100), np.ones(100), 1024,
+                               n_shards=4)
+    big = tl.price_migration(np.zeros(10_000), np.ones(10_000), 1024,
+                             n_shards=4)
+    assert 0.0 < small < big
+
+
+def test_price_migration_heterogeneous_straggler_pays_more():
+    """A migration queue landing on the slow device sets the critical
+    path, exactly like a gather burst."""
+    fast = StorageTimeline(INTEL_OPTANE)
+    fast.shard_specs = (INTEL_OPTANE,) * 4
+    slow = StorageTimeline(INTEL_OPTANE)
+    slow.shard_specs = (SAMSUNG_980PRO, INTEL_OPTANE, INTEL_OPTANE,
+                        INTEL_OPTANE)
+    src = np.zeros(4000, np.int64)          # every move reads from shard 0
+    dst = np.arange(4000) % 4
+    keep = dst != 0
+    assert slow.price_migration(src[keep], dst[keep], 1024) \
+        > fast.price_migration(src[keep], dst[keep], 1024)
+
+
+# -- ShardRebalancer -----------------------------------------------------------
+
+def test_rebalancer_requires_adaptive_placement(graph_and_feats):
+    g, feats = graph_and_feats
+    dl = _mk(g, feats, "gids-merged-sharded", n_shards=4,
+             placement="degree")
+    with pytest.raises(ValueError, match="placement='adaptive'"):
+        ShardRebalancer(dl.store.tiers[-1], dl.timeline, bytes_per_row=64)
+    assert dl.rebalancer is None            # loader skips static placements
+    adaptive_dl = _mk(g, feats, "gids-merged-sharded", n_shards=4,
+                      placement="adaptive")
+    with pytest.raises(ValueError, match="interval"):
+        ShardRebalancer(adaptive_dl.store.tiers[-1], adaptive_dl.timeline,
+                        bytes_per_row=64, interval=0)
+
+
+def test_adaptive_plane_bit_identical_to_degree_without_drift(
+        graph_and_feats):
+    """The static control: uniform workload → the economics gate never
+    fires, so adaptive == degree in floats AND bytes, with zero
+    migrations."""
+    g, feats = graph_and_feats
+    a = _mk(g, feats, "gids-merged-sharded", n_shards=4, placement="degree")
+    b = _mk(g, feats, "gids-merged-sharded", n_shards=4,
+            placement="adaptive")
+    for _ in range(10):
+        ba, bb = a.next_batch(), b.next_batch()
+        np.testing.assert_array_equal(ba.features, bb.features)
+        assert ba.prep_time_s == bb.prep_time_s
+        assert ba.report.tier_counts == bb.report.tier_counts
+    assert b.rebalancer.n_migrations == 0
+
+
+def _drifted_adaptive(g, feats, batches=24, **kw):
+    """An adaptive loader driven through hot-set drift hard enough to
+    commit at least one priced migration."""
+    dl = _mk(g, feats, "gids-merged-sharded", n_shards=4,
+             placement="adaptive", batch_size=256, fanouts=(2,),
+             cache_lines=512, rebalance_interval=4, migration_horizon=64,
+             **kw)
+    hot = _hot_sets(g)
+    dl.train_ids = hot[0]
+    for _ in range(batches):
+        dl.next_batch()
+    return dl
+
+
+def test_rebalancer_commits_priced_migration_under_drift(graph_and_feats):
+    g, feats = graph_and_feats
+    dl = _drifted_adaptive(g, feats)
+    assert dl.rebalancer.n_migrations >= 1
+    ev = dl.rebalancer.events[0]
+    assert ev.n_moved > 0 and ev.cost_s > 0.0
+    assert ev.imbalance_before >= dl.rebalancer.threshold
+    assert ev.predicted_saving_s * dl.rebalancer.horizon > ev.cost_s
+    assert dl.rebalancer.total_migration_cost_s == \
+        pytest.approx(sum(e.cost_s for e in dl.rebalancer.events))
+    # the migration actually moved the measured-hot nodes off one queue
+    table = dl.store.tiers[-1].placement.table
+    hot = _hot_sets(g)[0]
+    counts = np.bincount(table[hot], minlength=4)
+    assert counts.max() < len(hot)          # no longer all on shard 0
+
+
+# -- hypothesis properties (satellite) -----------------------------------------
+
+def test_migration_preserves_partition_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(n_shards=st.sampled_from([2, 3, 4, 8]),
+           n_nodes=st.integers(16, 400),
+           seed=st.integers(0, 10),
+           folds=st.integers(1, 4))
+    def check(n_shards, n_nodes, seed, folds):
+        rng = np.random.default_rng(seed)
+        pol = AdaptivePlacement(n_shards,
+                                rng.integers(0, 50, n_nodes))
+        for _ in range(folds):
+            pol.touches.observe(rng.integers(0, n_nodes, n_nodes // 2))
+            pol.touches.fold()
+            new, moved = pol.plan_rebalance()
+            pol.commit(new)
+            # the invariant: every node still maps to exactly one live shard
+            assert pol.table.shape == (n_nodes,)
+            assert ((pol.table >= 0) & (pol.table < n_shards)).all()
+            np.testing.assert_array_equal(pol.shard_of(np.arange(n_nodes)),
+                                          pol.table)
+
+    check()
+
+
+def test_features_bit_identical_across_migration_property(graph_and_feats):
+    """Migration moves rows between modelled queues, never changes bytes:
+    an adaptive loader that committed migrations returns the same features
+    as a static degree loader on the same seed."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    g, feats = graph_and_feats
+    hot = _hot_sets(g)
+
+    @settings(max_examples=3, deadline=None)
+    @given(seed=st.integers(0, 5))
+    def check(seed):
+        loaders = {}
+        batches = {}
+        for pol in ("degree", "adaptive"):
+            dl = _mk(g, feats, "gids-merged-sharded", n_shards=4,
+                     placement=pol, seed=seed, batch_size=256, fanouts=(2,),
+                     cache_lines=512, rebalance_interval=4,
+                     migration_horizon=64)
+            dl.train_ids = hot[0]
+            batches[pol] = [dl.next_batch() for _ in range(16)]
+            loaders[pol] = dl
+        assert loaders["adaptive"].rebalancer.n_migrations >= 1
+        for ba, bb in zip(batches["degree"], batches["adaptive"]):
+            np.testing.assert_array_equal(ba.blocks.all_nodes,
+                                          bb.blocks.all_nodes)
+            np.testing.assert_array_equal(ba.features, bb.features)
+
+    check()
+
+
+def test_checkpoint_mid_migration_resumes_assignment_property(
+        graph_and_feats):
+    """A checkpoint taken after migrations committed (touch table
+    mid-interval) restores the SAME shard assignment and learned scores —
+    resumed loaders agree with the original and each other bit-for-bit."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    g, feats = graph_and_feats
+
+    @settings(max_examples=3, deadline=None)
+    @given(extra=st.integers(1, 7))
+    def check(extra):
+        dl = _drifted_adaptive(g, feats, batches=16 + extra)
+        assert dl.rebalancer.n_migrations >= 1
+        state = dl.state_dict()
+        probe = np.arange(0, g.num_nodes, 41)
+        resumed = []
+        for _ in range(2):
+            r = _mk(g, feats, "gids-merged-sharded", n_shards=4,
+                    placement="adaptive", batch_size=256, fanouts=(2,),
+                    cache_lines=512, rebalance_interval=4,
+                    migration_horizon=64)
+            r.load_state_dict(state)
+            resumed.append(r)
+        for r in resumed:
+            tier = r.store.tiers[-1]
+            np.testing.assert_array_equal(
+                tier.shard_of(probe), dl.store.tiers[-1].shard_of(probe))
+            np.testing.assert_array_equal(
+                tier.placement.touches.scores(),
+                dl.store.tiers[-1].placement.touches.scores())
+        r1, r2 = resumed
+        r1.train_ids = r2.train_ids = _hot_sets(g)[0]
+        for _ in range(4):
+            b1, b2 = r1.next_batch(), r2.next_batch()
+            np.testing.assert_array_equal(b1.features, b2.features)
+            assert b1.prep_time_s == b2.prep_time_s
+
+    check()
+
+
+# -- TopologyRefresher ---------------------------------------------------------
+
+def _topo_loader(g, feats, admission):
+    return GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=256, fanouts=(5, 3), data_plane="gids-topo",
+        cache_lines=2048, topo_admission=admission, topo_gpu_fraction=0.05,
+        topo_host_fraction=0.25, seed=7, rebalance_interval=4,
+        migration_horizon=64))
+
+
+def test_topology_adaptive_admission_matches_degree_then_refreshes(
+        graph_and_feats):
+    g, feats = graph_and_feats
+    a, b = _topo_loader(g, feats, "degree"), _topo_loader(g, feats,
+                                                          "adaptive")
+    # identical initial admission: adaptive seeds from the degree ranking
+    np.testing.assert_array_equal(a.topo.assignment, b.topo.assignment)
+    assert a.topo.touches is None and b.topo.touches is not None
+    assert a.topo_refresher is None and b.topo_refresher is not None
+    quarters = np.array_split(np.arange(g.num_nodes), 4)
+    for epoch in range(2):
+        a.train_ids = b.train_ids = quarters[epoch]
+        for _ in range(16):
+            ba, bb = a.next_batch(), b.next_batch()
+            # refresh moves pages between tiers, never edges
+            np.testing.assert_array_equal(ba.blocks.all_nodes,
+                                          bb.blocks.all_nodes)
+    assert b.topo_refresher.n_refreshes >= 1
+    ev = b.topo_refresher.events[0]
+    assert ev.n_moved > 0 and ev.cost_s > 0.0
+    # ...and every committed refresh preserved the tier budgets
+    assert a.topo.tier_pages() == b.topo.tier_pages()
+
+
+def test_topology_commit_refresh_validates_budgets(graph_and_feats):
+    g, feats = graph_and_feats
+    dl = _topo_loader(g, feats, "adaptive")
+    topo = dl.topo
+    with pytest.raises(ValueError, match="edge pages"):
+        topo.commit_refresh(np.zeros(3, np.int8))
+    grown = topo.assignment.copy()
+    grown[:] = 0                            # everything in HBM: budget blown
+    with pytest.raises(ValueError, match="preserve"):
+        topo.commit_refresh(grown)
+
+
+def test_topology_plan_refresh_requires_feedback(graph_and_feats):
+    g, feats = graph_and_feats
+    dl = _topo_loader(g, feats, "degree")
+    with pytest.raises(ValueError, match="admission='adaptive'"):
+        dl.topo.plan_refresh()
+
+
+# -- TenantCacheTier.repartition -----------------------------------------------
+
+def test_repartition_resizes_and_carries_stats():
+    tier = TenantCacheTier(num_lines=256, ways=8, tenants=2, seed=3)
+    lines_before = [tier.partition_lines(t) for t in range(2)]
+    assert lines_before[0] == lines_before[1]
+    tier.partitions[0].stats.hits = 40
+    tier.partitions[0].stats.misses = 10
+    tier.repartition((3.0, 1.0))
+    assert tier.partition_lines(0) > tier.partition_lines(1)
+    # cumulative telemetry survives the rebuild
+    assert tier.hit_ratio(0) == pytest.approx(0.8)
+    assert tier.hit_ratios() == (pytest.approx(0.8), 0.0)
+    assert tier.quotas == (3.0, 1.0)
+    with pytest.raises(ValueError, match="one capacity share"):
+        tier.repartition((1.0,))
+    with pytest.raises(ValueError, match="positive"):
+        tier.repartition((1.0, 0.0))
+
+
+def test_tenant_tier_reset_restores_initial_quotas():
+    tier = TenantCacheTier(num_lines=256, ways=8, tenants=2,
+                           quotas=(1.0, 1.0), seed=3)
+    tier.repartition((5.0, 1.0))
+    tier.partitions[0].stats.hits = 7
+    tier.reset()
+    assert tier.quotas == (1.0, 1.0)
+    assert tier.partition_lines(0) == tier.partition_lines(1)
+    assert tier.hit_ratios() == (0.0, 0.0)  # cold, replay-identical
+
+
+# -- QuotaController -----------------------------------------------------------
+
+def test_quota_controller_validation():
+    single = TenantCacheTier(num_lines=64, ways=8, tenants=1)
+    with pytest.raises(ValueError, match="two tenants"):
+        QuotaController(single)
+    tier = TenantCacheTier(num_lines=64, ways=8, tenants=2)
+    with pytest.raises(ValueError, match="floor"):
+        QuotaController(tier, floor=0.6)
+
+
+def test_quota_controller_shifts_toward_measured_misses():
+    tier = TenantCacheTier(num_lines=512, ways=8, tenants=2, seed=1)
+    ctrl = QuotaController(tier, interval=2, floor=0.1, deadband=0.02)
+    # tenant 0 misses 9x harder than tenant 1 over the interval
+    tier.partitions[0].stats.misses += 90
+    tier.partitions[1].stats.misses += 10
+    assert ctrl.step() is False             # mid-interval: no decision
+    assert ctrl.step() is True
+    assert tier.quotas[0] > tier.quotas[1]
+    assert ctrl.n_repartitions == 1 and ctrl.events[0][0] == 2
+    # every tenant keeps at least the floor
+    total = sum(tier.quotas)
+    assert min(q / total for q in tier.quotas) >= ctrl.floor - 1e-12
+    # no traffic → no decision (demand signal unchanged)
+    assert ctrl.step() is False and ctrl.step() is False
+
+
+def test_quota_controller_deadband_suppresses_noise():
+    tier = TenantCacheTier(num_lines=512, ways=8, tenants=2, seed=1)
+    ctrl = QuotaController(tier, interval=1, floor=0.1, deadband=0.2)
+    tier.partitions[0].stats.misses += 11
+    tier.partitions[1].stats.misses += 9    # 55/45: inside the dead band
+    assert ctrl.step() is False
+    assert tier.quotas == (0.5, 0.5)
+
+
+# -- serve-plane integration ---------------------------------------------------
+
+def _serve_stream(num_nodes):
+    tenants = (
+        TenantSpec("big", rate_share=2.0, hot_fraction=0.12, hot_prob=0.95,
+                   deadline_s=4e-3),
+        TenantSpec("small", rate_share=1.0, hot_fraction=0.004,
+                   hot_prob=0.95, deadline_s=4e-3),
+    )
+    return generate_stream(num_nodes, tenants, offered_qps=3000,
+                           n_requests=240, seed=3)
+
+
+def test_serve_result_rolls_up_tenant_hit_ratios(graph_and_feats):
+    g, feats = graph_and_feats
+    engine = GNNServeEngine(g, feats, GNNServeConfig(
+        tenants=2, cache_lines=2048, seed=5))
+    res = engine.run(list(_serve_stream(g.num_nodes)))
+    assert set(res.tenant_hit_ratios) == {0, 1}
+    for t, ratio in res.tenant_hit_ratios.items():
+        assert 0.0 <= ratio <= 1.0
+        assert ratio == pytest.approx(engine._tenant_tier.hit_ratio(t))
+    assert res.quota_trace == []            # static quotas: nothing moved
+    assert engine.quota_controller is None
+
+
+def test_serve_adaptive_quotas_repartition_online(graph_and_feats):
+    g, feats = graph_and_feats
+    stream = _serve_stream(g.num_nodes)
+    engine = GNNServeEngine(g, feats, GNNServeConfig(
+        tenants=2, cache_lines=2048, adaptive_quotas=True, quota_interval=8,
+        seed=5))
+    assert engine.quota_controller is not None
+    res = engine.run(list(stream))
+    assert len(res.quota_trace) >= 1
+    window, quotas = res.quota_trace[0]
+    assert window % 8 == 0 and len(quotas) == 2
+    assert sum(quotas) == pytest.approx(1.0)
+    # reset → replay is bit-identical (controller and quotas rebuilt)
+    engine.reset()
+    assert engine._tenant_tier.quotas == engine._tenant_tier._init_quotas
+    res2 = engine.run(list(stream))
+    assert res2.quota_trace == res.quota_trace
+    assert res2.p99_s() == res.p99_s()
+    assert res2.tenant_hit_ratios == res.tenant_hit_ratios
