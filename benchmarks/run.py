@@ -1,12 +1,12 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows; `python -m benchmarks.run [--quick]`.  `--json [path]` is the CI
 # smoke mode: fig13 + fig14 + shard-scaling + fig7-sampling + serve-load +
-# adaptive headline numbers as JSON (default BENCH_pr7.json) so the perf
-# trajectory is recorded per PR.  `--baseline PATH` compares the fresh
+# adaptive + fault headline numbers as JSON (default BENCH_pr8.json) so the
+# perf trajectory is recorded per PR.  `--baseline PATH` compares the fresh
 # numbers against a committed earlier BENCH_*.json and exits non-zero if
 # the `gids` preset's e2e regressed — and, because every deterministic path
-# must stay bit-identical across the adaptive-plane PR, the gids numbers
-# must match the baseline EXACTLY, not just within tolerance.
+# must stay bit-identical across the adaptive- and fault-plane PRs, the
+# gids numbers must match the baseline EXACTLY, not just within tolerance.
 from __future__ import annotations
 
 import argparse
@@ -45,7 +45,8 @@ def check_baseline(payload: dict, baseline_path: str) -> None:
 
 def write_json_smoke(path: str, baseline: str | None = None) -> None:
     from benchmarks import (fig7_sampling, fig13_e2e, fig14_overlap,
-                            fig_adaptive, fig_serve_load, fig_shard_scaling)
+                            fig_adaptive, fig_faults, fig_serve_load,
+                            fig_shard_scaling)
     payload = {
         "fig13_e2e": fig13_e2e.headline(),
         "fig14_overlap": fig14_overlap.headline(),
@@ -53,6 +54,7 @@ def write_json_smoke(path: str, baseline: str | None = None) -> None:
         "fig7_sampling": fig7_sampling.headline(),
         "fig_serve_load": fig_serve_load.headline(),
         "fig_adaptive": fig_adaptive.headline(),
+        "fig_faults": fig_faults.headline(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -108,6 +110,30 @@ def write_json_smoke(path: str, baseline: str | None = None) -> None:
             "ADAPTIVE REGRESSION: topology refresh moves pages between "
             "tiers, never edges — sampled blocks diverged from the static "
             "degree admission")
+    faults = payload["fig_faults"]
+    if faults["hedged_vs_naive_speedup"] < 1.3:
+        raise SystemExit(
+            "FAULT REGRESSION: hedged reads + replicated failover must "
+            "recover >= 1.3x of a single-shard 10x brownout vs the "
+            "unreplicated plane (got "
+            f"{faults['hedged_vs_naive_speedup']:.4f}x)")
+    if not faults["fault_data_identical"]:
+        raise SystemExit(
+            "FAULT REGRESSION: faults perturb timing and routing only — "
+            "sampled blocks or feature bytes diverged from the fault-free "
+            "loader under the chaos schedule")
+    if not faults["faultfree_identical"]:
+        raise SystemExit(
+            "FAULT REGRESSION: an empty fault schedule must be invisible — "
+            "prep floats or record timings diverged from a plane with no "
+            "fault machinery")
+    if (faults["serve_ctl_p99_ratio"] > 1.5
+            or faults["serve_shed_fraction"] >= 0.2):
+        raise SystemExit(
+            "FAULT REGRESSION: serve brownout control must keep victim p99 "
+            "within 1.5x of fault-free while shedding < 20% (got ratio "
+            f"{faults['serve_ctl_p99_ratio']:.4f}x, shed "
+            f"{faults['serve_shed_fraction']:.4f})")
     if baseline:
         check_baseline(payload, baseline)
 
@@ -117,11 +143,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow E2E figures")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", nargs="?", const="BENCH_pr7.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr8.json",
                     default=None, metavar="PATH",
                     help="smoke mode: write fig13/fig14/shard-scaling/"
-                         "fig7-sampling/serve-load/adaptive headline "
-                         "numbers to PATH (default BENCH_pr7.json) and exit")
+                         "fig7-sampling/serve-load/adaptive/fault headline "
+                         "numbers to PATH (default BENCH_pr8.json) and exit")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="with --json: fail if the gids preset's e2e "
                          "regressed vs this earlier BENCH_*.json")
@@ -135,13 +161,15 @@ def main() -> None:
                             fig8_bandwidth_model, fig9_accumulator,
                             fig10_constant_buffer, fig11_window_buffering,
                             fig12_cache_size, fig13_e2e, fig14_overlap,
-                            fig15_ladies, fig_adaptive, fig_serve_load,
-                            fig_shard_scaling, roofline, tables)
+                            fig15_ladies, fig_adaptive, fig_faults,
+                            fig_serve_load, fig_shard_scaling, roofline,
+                            tables)
     suites = [
         ("tables", tables.main),
         ("fig3", fig3_request_rates.main),
         ("fig_serve_load", fig_serve_load.main),
         ("fig_adaptive", fig_adaptive.main),
+        ("fig_faults", fig_faults.main),
         ("fig7", fig7_sampling.main),
         ("fig8", fig8_bandwidth_model.main),
         ("fig9", fig9_accumulator.main),

@@ -20,10 +20,20 @@ measured queue imbalance crosses the rebalancer's threshold, and a PRICED
 shard migration re-stripes the measured-hot nodes — the demo prints the
 imbalance before and after the move, plus what the move cost.
 
-The final section goes online: a bursty two-tenant request stream served by
+Then the plane goes online: a bursty two-tenant request stream served by
 `GNNServeEngine` through deadline-bounded merged windows over the
 tenant-partitioned `serve-gnn` plane, printing goodput and the priced
 p50/p99 latency breakdown per tenant.
+
+The final section is the chaos demo (core/faults.py): a seeded
+FaultSchedule browns one of the four shard queues out 25x, and the demo
+prints the recovery timeline — the health monitor flags the sick queue,
+hedged reads duplicate the straggler onto its chained replica, plan-time
+failover routes new lines away, and the rebalancer drains the shard — then
+compares total exposed prep with and without the replicated/hedged plane.
+The serve half browns out one shard under the online engine and shows the
+BrownoutController trading fidelity (fanout shrink -> stale serving ->
+shed) for a bounded victim p99.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -185,3 +195,80 @@ print(f"  latency breakdown: wait {bd['queue_wait_s']*1e6:.0f} us, "
 for t, spec in enumerate(tenants):
     print(f"  tenant {spec.name:6s}: p99 {res.p99_s(tenant=t)*1e6:6.0f} us "
           f"| cache hit {engine._tenant_tier.hit_ratio(t):.2f}")
+
+# -- fault plane: detection -> hedge -> failover -> drain ---------------------
+# A seeded FaultSchedule keys faults to the loader's priced-burst index:
+# here shard 2 of 4 browns out 25x for 40 bursts.  The unreplicated plane
+# eats the straggler queue; with 2-way chained declustering the injector
+# hedges the straggler's residual onto the replica, the health monitor
+# flags the queue from its priced per-row drains, plan-time failover
+# routes fresh lines away, and the adaptive rebalancer emits a priced
+# "drain" migration off the sick shard.  Data is bit-identical either
+# way — faults perturb timing and routing, never bytes.
+from repro.core import BrownoutEvent, FaultSchedule
+
+chaos = FaultSchedule(events=(
+    BrownoutEvent(shard=2, start=0, end=40, multiplier=25.0),))
+runs = {}
+for mode, extra in (("naive", dict(placement="degree")),
+                    ("hedged", dict(placement="adaptive",
+                                    replication_factor=2,
+                                    rebalance_interval=4,
+                                    migration_horizon=64))):
+    loader = GIDSDataLoader(small, small_feats, LoaderConfig(
+        batch_size=256, fanouts=(2,), data_plane="gids-merged-sharded",
+        cache_lines=512, window_depth=4, n_shards=4, seed=7,
+        fault_schedule=chaos, **extra))
+    runs[mode] = (sum(loader.next_batch().exposed_prep_s
+                      for _ in range(48)), loader)
+
+t_naive, t_hedged = runs["naive"][0], runs["hedged"][0]
+hl = runs["hedged"][1]
+inj, router = hl.fault_injector, hl.store.tiers[-1].router
+print(f"\n[faults/brownout] shard 2 browns out 25x: exposed prep "
+      f"{t_naive*1e3:.2f} ms naive -> {t_hedged*1e3:.2f} ms hedged "
+      f"({t_naive/t_hedged:.2f}x recovered)")
+print(f"  recovery timeline: hedge fires @burst {inj.first_hedge_burst} "
+      f"({inj.n_hedged_bursts} bursts, {inj.hedge_saving_s*1e6:.0f} us "
+      f"saved) | monitor flags @burst {hl.health.first_flag_burst} | "
+      f"failover reroutes @burst {router.first_reroute_burst} "
+      f"({router.n_rerouted} lines)")
+for ev in hl.rebalancer.events:
+    if ev.reason == "drain":
+        print(f"  drain @burst {ev.burst}: {ev.n_moved} rows off shard 2 "
+              f"for {ev.cost_s*1e6:.0f} us")
+
+# -- serve plane under brownout: degrade, don't die ---------------------------
+# The same schedule axis plugs into the online engine.  A persistent 10x
+# brownout on one serve shard would triple the victim p99; with
+# `brownout=True` the BrownoutController watches per-row gather pressure
+# and climbs a priced ladder — shrink fanouts, serve recently-gathered
+# neighborhoods stale (same bytes, zero burst), shed as a last resort —
+# holding p99 near fault-free at a small, accounted-for shed fraction.
+wide_feats = np.random.default_rng(0).standard_normal(
+    (small.num_nodes, 512)).astype(np.float32)
+reqs = list(generate_stream(
+    small.num_nodes,
+    [TenantSpec(name="t0", deadline_s=3e-3, mean_seeds=8)],
+    offered_qps=500, n_requests=150, seed=3))
+sick = FaultSchedule(events=(
+    BrownoutEvent(shard=0, start=3, end=10_000, multiplier=10.0),))
+out = {}
+for mode, kw in (("fault-free", {}), ("naive", dict(fault_schedule=sick)),
+                 ("controlled", dict(fault_schedule=sick, brownout=True))):
+    eng = GNNServeEngine(small, wide_feats, GNNServeConfig(
+        seed=5, cache_lines=256, **kw))
+    out[mode] = (eng.run(reqs), eng)
+free_p99 = out["fault-free"][0].p99_s()
+print()
+for mode in ("fault-free", "naive", "controlled"):
+    res, eng = out[mode]
+    line = (f"[serve/{mode:10s}] p99 {res.p99_s()*1e3:5.2f} ms "
+            f"({res.p99_s()/free_p99:.2f}x fault-free) | attainment "
+            f"{res.attainment():.2f}")
+    if mode == "controlled":
+        line += (f" | shed {res.shed_fraction:.2f} "
+                 f"(stale-served {res.n_stale_served}, "
+                 f"degraded {res.n_degraded}) | ladder "
+                 f"{[lv for _, lv in eng.brownout.level_trace]}")
+    print(line)

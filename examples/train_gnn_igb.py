@@ -17,6 +17,7 @@ from repro.core import GIDSDataLoader, LoaderConfig, INTEL_OPTANE
 from repro.graph.synthetic import rmat_graph
 from repro.models.gnn import GNN, GNNConfig, hop_indices
 from repro.train import checkpoint as ckpt_lib
+from repro.train.fault_tolerance import StepWatchdog, WatchdogConfig
 
 
 def main():
@@ -67,7 +68,9 @@ def main():
     t0 = time.time()
     losses, prep_times, exposed_times = [], [], []
     last_step_s = 0.0     # measured compute the prefetch overlapped with
+    watchdog = StepWatchdog(WatchdogConfig(checkpoint_every=100))
     for it in range(args.steps):
+        watchdog.start_step(it)
         b = loader.next_batch(compute_s=last_step_s)
         hi = [jnp.asarray(i) for i in hop_indices(b.blocks)]
         y = jnp.asarray(labels_all[b.blocks.seeds])
@@ -78,6 +81,10 @@ def main():
         loss = float(loss)                       # sync point: step finished
         if it > 0:      # step 0's wall time is dominated by jit compilation
             last_step_s = time.perf_counter() - ts
+        if watchdog.end_step():
+            print(f"iter {it:4d} STRAGGLER: step took "
+                  f"{watchdog.flagged[-1][1]*1e3:.1f} ms "
+                  f"(median {watchdog.median_step_s*1e3:.1f} ms)")
         losses.append(loss)
         prep_times.append(b.prep_time_s)
         exposed_times.append(b.exposed_prep_s)
@@ -87,12 +94,13 @@ def main():
                   f"(exposed {np.mean(exposed_times[-25:])*1e3:.2f} ms) "
                   f"cache_hit {loader.store.cache.stats.hit_ratio:.2f} "
                   f"redirect {loader.accumulator.redirect_rate:.2f}")
-        if args.ckpt_dir and it and it % 100 == 0:
+        if args.ckpt_dir and watchdog.should_checkpoint(it):
             ckpt_lib.save(args.ckpt_dir, it, params,
                           {"loader": loader.state_dict()})
 
     print(f"\n{args.steps} steps in {time.time()-t0:.1f}s | "
-          f"loss {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f}")
+          f"loss {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f} | "
+          f"{len(watchdog.flagged)} straggler steps")
 
 
 if __name__ == "__main__":

@@ -9,14 +9,18 @@ from .accumulator import (AccumulatorConfig, DeadlineWindowConfig,
 from .constant_buffer import ConstantBuffer
 from .dataplane import (BuildContext, DataPlane, DataPlaneSpec, TierSpec,
                         register_tier_kind, tier)
+from .faults import (BrownoutEvent, FailoverRouter, FaultInjector,
+                     FaultSchedule, FaultedBurstResult, FlakyReadsEvent,
+                     HedgePolicy, OutageEvent, RetryPolicy)
 from .feature_store import (CoalescedReport, FeatureStore, GatherReport,
                             TieredFeatureStore)
 from .feedback import (AmortizedCost, MigrationEvent, QuotaController,
-                       RefreshEvent, ShardRebalancer, TopologyRefresher,
-                       TouchTable)
+                       RefreshEvent, ShardHealthMonitor, ShardRebalancer,
+                       TopologyRefresher, TouchTable)
 from .pipeline import Batch, BatchPlan, GIDSDataLoader, LoaderConfig
 from .prefetch import PrefetchEngine, PrefetchStats
-from .sharding import (AdaptivePlacement, PlacementPolicy, make_placement,
+from .sharding import (AdaptivePlacement, PlacementPolicy,
+                       ReplicatedPlacement, make_placement,
                        placement_names, register_placement)
 from .software_cache import CacheStats, WindowBufferedCache, run_trace
 from .storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO, SSDSpec,
@@ -37,13 +41,17 @@ __all__ = [
     "merge_window", "ConstantBuffer",
     "BuildContext", "DataPlane", "DataPlaneSpec", "TierSpec",
     "register_tier_kind", "tier",
+    "BrownoutEvent", "FailoverRouter", "FaultInjector", "FaultSchedule",
+    "FaultedBurstResult", "FlakyReadsEvent", "HedgePolicy", "OutageEvent",
+    "RetryPolicy",
     "CoalescedReport", "FeatureStore", "GatherReport", "TieredFeatureStore",
     "AmortizedCost", "MigrationEvent", "QuotaController", "RefreshEvent",
-    "ShardRebalancer", "TopologyRefresher", "TouchTable",
+    "ShardHealthMonitor", "ShardRebalancer", "TopologyRefresher",
+    "TouchTable",
     "Batch", "BatchPlan", "GIDSDataLoader", "LoaderConfig",
     "PrefetchEngine", "PrefetchStats",
-    "AdaptivePlacement", "PlacementPolicy", "make_placement",
-    "placement_names", "register_placement",
+    "AdaptivePlacement", "PlacementPolicy", "ReplicatedPlacement",
+    "make_placement", "placement_names", "register_placement",
     "CacheStats", "WindowBufferedCache", "run_trace", "INTEL_OPTANE",
     "SAMSUNG_980PRO", "SSDSpec", "ShardedBurstResult", "StorageTimeline",
     "coalesce_lines", "coalesce_lines_by_shard", "model_burst",

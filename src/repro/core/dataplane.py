@@ -69,6 +69,10 @@ class BuildContext:
     n_shards: int = 1
     placement: str = "hash"
     shard_specs: Any = None           # per-shard SSDSpecs (heterogeneous)
+    # fault-plane knob: k-way replication (ReplicatedPlacement wrapped
+    # around the placement policy) so failover/hedged reads have somewhere
+    # to go; 1 = unreplicated, bit-identical to the bare policy
+    replication_factor: int = 1
     # serve-engine knobs (KV slot pool)
     slots: int = 0
     bytes_per_slot: int = 0
@@ -77,8 +81,8 @@ class BuildContext:
     tenant_quotas: Any = None         # per-tenant capacity shares, None=equal
 
     _KNOBS = ("cache_lines", "cache_ways", "window_depth", "cbuf_fraction",
-              "cbuf_selection", "seed", "n_shards", "placement", "tenants",
-              "tenant_quotas")
+              "cbuf_selection", "seed", "n_shards", "placement",
+              "replication_factor", "tenants", "tenant_quotas")
 
     def absorb(self, config: Any) -> "BuildContext":
         for k in self._KNOBS:
@@ -157,7 +161,7 @@ def _make_sharded_storage(ctx: BuildContext, n_shards=None, placement=None,
     registered placement policy (core/sharding.py: hash / range / degree /
     skewed, plus user registrations).  `specs` may be a single SSDSpec or
     one per shard (heterogeneous arrays)."""
-    from .sharding import make_placement
+    from .sharding import ReplicatedPlacement, make_placement
     from .tiers import ShardedStorageTier
     if ctx.features is None:
         raise ValueError("sharded_storage tier needs features in the "
@@ -170,6 +174,10 @@ def _make_sharded_storage(ctx: BuildContext, n_shards=None, placement=None,
     policy = make_placement(placement, n_shards,
                             num_nodes=len(ctx.features), degrees=degrees,
                             seed=ctx.seed)
+    if ctx.replication_factor > 1:
+        # k-way replication for the fault plane; validates loudly (k vs
+        # n_shards) at build time rather than at first failover
+        policy = ReplicatedPlacement(policy, ctx.replication_factor)
     specs = ctx.shard_specs if specs is None else specs
     return ShardedStorageTier(ctx.features, policy, specs=specs)
 

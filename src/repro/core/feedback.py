@@ -153,6 +153,120 @@ class MigrationEvent:
     cost_s: float
     imbalance_before: float
     predicted_saving_s: float       # per burst, over the horizon
+    reason: str = "imbalance"       # "imbalance" | "drain" (health-driven)
+
+
+class ShardHealthMonitor:
+    """EMA of per-shard burst latencies — the fault plane's detector.
+
+    `observe` feeds every priced `ShardedBurstResult` into a per-shard EMA
+    of PER-ROW drain time (``per_shard_s / per_shard_rows``): normalizing by
+    rows makes natural placement skew invisible — a shard that is slow
+    because it holds more of the batch looks healthy per row — while device
+    slowness (brownout, flaky retries) shows up directly.  A shard is
+    `degraded` when its per-row EMA exceeds ``degraded_factor`` times the
+    median across tracked shards, after at least `min_bursts` observations
+    (cold starts don't flap).  The flag set is what the `FailoverRouter`
+    routes around and what the `ShardRebalancer` drains
+    (`AdaptivePlacement.plan_drain`); `healthiest` picks the replica with
+    the lowest EMA for hedges and failover.
+
+    Pure virtual-time telemetry: state is a function of the priced bursts
+    observed, so adaptive fault handling stays bit-reproducible."""
+
+    def __init__(self, n_shards: int, alpha: float = 0.3,
+                 degraded_factor: float = 2.5, min_bursts: int = 4):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        if degraded_factor <= 1.0:
+            raise ValueError(f"degraded_factor must be > 1, "
+                             f"got {degraded_factor}")
+        self.n_shards = int(n_shards)
+        self.alpha = float(alpha)
+        self.degraded_factor = float(degraded_factor)
+        self.min_bursts = int(min_bursts)
+        self.reset()
+
+    def reset(self) -> None:
+        self.ema = np.zeros(self.n_shards, np.float64)
+        self.seen = np.zeros(self.n_shards, np.int64)
+        self._degraded = np.empty(0, np.int64)
+        self._bursts = 0
+        self.first_flag_burst = -1
+
+    def observe(self, burst) -> None:
+        """Fold one priced burst's per-shard drains into the EMAs and
+        recompute the degraded set."""
+        t = np.asarray(burst.per_shard_s, np.float64)
+        rows = np.asarray(burst.per_shard_rows, np.float64)
+        if len(t) != self.n_shards:
+            raise ValueError(
+                f"burst spans {len(t)} shards, monitor tracks "
+                f"{self.n_shards}")
+        self._bursts += 1
+        m = rows > 0
+        per_row = np.zeros_like(t)
+        per_row[m] = t[m] / rows[m]
+        fresh = m & (self.seen == 0)
+        self.ema[fresh] = per_row[fresh]
+        seasoned = m & (self.seen > 0)
+        self.ema[seasoned] = (1.0 - self.alpha) * self.ema[seasoned] \
+            + self.alpha * per_row[seasoned]
+        self.seen[m] += 1
+        tracked = (self.seen >= self.min_bursts) & (self.ema > 0)
+        if int(tracked.sum()) < 2:
+            self._degraded = np.empty(0, np.int64)
+            return
+        median = float(np.median(self.ema[tracked]))
+        self._degraded = np.nonzero(
+            tracked & (self.ema > self.degraded_factor * median))[0]
+        if len(self._degraded) and self.first_flag_burst < 0:
+            self.first_flag_burst = self._bursts
+
+    def degraded(self) -> np.ndarray:
+        """Shards currently flagged as browning out (may be empty)."""
+        return self._degraded
+
+    def worst(self) -> int:
+        """The degraded shard with the highest per-row EMA, or -1."""
+        bad = self._degraded
+        if len(bad) == 0:
+            return -1
+        return int(bad[np.argmax(self.ema[bad])])
+
+    def healthiest(self, candidates) -> int:
+        """The candidate shard with the lowest per-row EMA (ties: first)."""
+        cand = np.asarray(candidates, np.int64)
+        if len(cand) == 0:
+            raise ValueError("healthiest() of no candidate shards")
+        return int(cand[np.argmin(self.ema[cand])])
+
+    # -- checkpoint ------------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"n_shards": self.n_shards, "alpha": self.alpha,
+                "degraded_factor": self.degraded_factor,
+                "min_bursts": self.min_bursts, "bursts": self._bursts,
+                "ema": self.ema.copy(), "seen": self.seen.copy(),
+                "degraded": self._degraded.copy(),
+                "first_flag_burst": self.first_flag_burst}
+
+    def load_state_dict(self, state: dict) -> None:
+        if int(state.get("n_shards", self.n_shards)) != self.n_shards:
+            raise ValueError(
+                f"shard health monitor checkpointed over "
+                f"{state.get('n_shards')} shards, plane has {self.n_shards}")
+        self.alpha = float(state.get("alpha", self.alpha))
+        self.degraded_factor = float(state.get("degraded_factor",
+                                               self.degraded_factor))
+        self.min_bursts = int(state.get("min_bursts", self.min_bursts))
+        self._bursts = int(state.get("bursts", 0))
+        self.ema = np.asarray(state["ema"], np.float64).copy()
+        self.seen = np.asarray(state["seen"], np.int64).copy()
+        self._degraded = np.asarray(state.get("degraded", ()),
+                                    np.int64).copy()
+        self.first_flag_burst = int(state.get("first_flag_burst", -1))
 
 
 class ShardRebalancer:
@@ -198,6 +312,10 @@ class ShardRebalancer:
         self.events: list[MigrationEvent] = []
         self._bursts = 0
         self._cooldown = 0
+        # fault plane: when a ShardHealthMonitor is wired (the loader does
+        # it for fault-enabled planes), a degraded shard triggers a DRAIN —
+        # evacuate its measured-hot rows — ahead of the imbalance trigger
+        self.monitor = None
 
     def observe(self, node_ids: np.ndarray,
                 counts: np.ndarray | None = None) -> None:
@@ -220,9 +338,22 @@ class ShardRebalancer:
             self._cooldown -= 1
             return
         burst = self.timeline.last_shard_burst
-        if burst is None or burst.imbalance < self.threshold:
+        if burst is None:
             return
-        new_table, moved = self.placement.plan_rebalance()
+        # health-driven drain first: a browning-out queue is a stronger
+        # signal than imbalance (the max-over-shards pricing rides it
+        # every burst), and evacuating its hot rows is the one move that
+        # helps even when the namespace is perfectly level
+        drain_shard = self.monitor.worst() if self.monitor is not None \
+            and hasattr(self.placement, "plan_drain") else -1
+        if drain_shard >= 0:
+            new_table, moved = self.placement.plan_drain(drain_shard)
+            reason = "drain"
+        else:
+            if burst.imbalance < self.threshold:
+                return
+            new_table, moved = self.placement.plan_rebalance()
+            reason = "imbalance"
         if len(moved) == 0:
             return
         cost = self.timeline.price_migration(
@@ -239,7 +370,7 @@ class ShardRebalancer:
         self.events.append(MigrationEvent(
             burst=self._bursts, n_moved=int(len(moved)), cost_s=float(cost),
             imbalance_before=float(burst.imbalance),
-            predicted_saving_s=float(saving)))
+            predicted_saving_s=float(saving), reason=reason))
 
     @property
     def n_migrations(self) -> int:

@@ -102,7 +102,7 @@ from repro.sampling.ladies import ladies_sample_blocks
 from .accumulator import DynamicAccessAccumulator, AccumulatorConfig
 from .dataplane import DataPlane, DataPlaneSpec
 from .feature_store import GatherReport
-from .feedback import ShardRebalancer, TopologyRefresher
+from .feedback import ShardHealthMonitor, ShardRebalancer, TopologyRefresher
 from .prefetch import PrefetchEngine
 from .storage_sim import SSDSpec, StorageTimeline, INTEL_OPTANE
 from .topology import TieredTopologyStore
@@ -151,6 +151,14 @@ class LoaderConfig:
     rebalance_interval: int = 8
     imbalance_threshold: float = 1.25
     migration_horizon: int = 64
+    # fault plane (core/faults.py): a seeded FaultSchedule injected into
+    # every priced storage burst — per-shard brownouts, outages, transient
+    # line failures, priced retries and hedged reads.  None (the default)
+    # prices bit-identically to the fault-free plane.  replication_factor
+    # wraps the placement in k-way ReplicatedPlacement so failover and
+    # hedges have live replica queues to go to
+    fault_schedule: "object | None" = None
+    replication_factor: int = 1
     seed: int = 0
     # deprecated spelling of data_plane; kept so old call sites keep running
     mode: dataclasses.InitVar[str | None] = None
@@ -288,6 +296,36 @@ class GIDSDataLoader:
             self.topo_refresher = TopologyRefresher(
                 self.topo, interval=cfg.rebalance_interval,
                 horizon=cfg.migration_horizon)
+        # fault plane (core/faults.py): schedule-driven burst re-pricing,
+        # per-shard health telemetry, and replica failover routing.  All
+        # three stay None on a fault-free, unreplicated plane — which is
+        # what keeps every default preset bit-identical.
+        self.fault_injector = None
+        self.health: ShardHealthMonitor | None = None
+        n_queue_shards = getattr(backstop, "n_shards", 1)
+        if cfg.replication_factor > 1 \
+                and not hasattr(backstop, "placement"):
+            raise ValueError(
+                f"replication_factor={cfg.replication_factor} needs a "
+                "sharded storage backstop (a *-sharded data plane with "
+                "n_shards >= 2) — the unsharded plane has no replica "
+                "queues to fail over to")
+        if cfg.fault_schedule is not None:
+            from .faults import FaultInjector
+            self.fault_injector = FaultInjector(
+                cfg.fault_schedule, n_queue_shards,
+                replication=cfg.replication_factor)
+            self.timeline.injector = self.fault_injector
+        if n_queue_shards > 1 and (cfg.fault_schedule is not None
+                                   or cfg.replication_factor > 1):
+            self.health = ShardHealthMonitor(n_queue_shards)
+            if self.rebalancer is not None:
+                self.rebalancer.monitor = self.health
+        if cfg.replication_factor > 1:
+            from .faults import FailoverRouter
+            backstop.router = FailoverRouter(
+                backstop.placement, monitor=self.health,
+                injector=self.fault_injector)
         self._lookahead: deque[tuple[dict, SampledBlocks]] = deque()
         self._win_idx = 0   # lookahead entries already pushed to cache window
         # merged-window planes stage whole executed windows here (snapshot
@@ -391,6 +429,11 @@ class GIDSDataLoader:
         comparisons are net of migration IOs.  A static plane returns 0.0
         without touching a thing."""
         charge = 0.0
+        if self.health is not None \
+                and self.timeline.last_shard_burst is not None:
+            # the monitor sees every priced burst's per-shard drains —
+            # detection is a function of priced telemetry, nothing else
+            self.health.observe(self.timeline.last_shard_burst)
         if self.rebalancer is not None:
             self.rebalancer.observe(node_ids, counts)
             charge += self.rebalancer.step()
@@ -504,6 +547,16 @@ class GIDSDataLoader:
         tier_state = self.store.state_dict()
         if tier_state:
             state["tier_state"] = tier_state
+        # fault plane: the injector's burst counter (what retry/hedge
+        # decisions are a function of) and the health EMAs must resume —
+        # a mid-brownout checkpoint replays the same recovery choices
+        fault_state = {}
+        if self.fault_injector is not None:
+            fault_state["injector"] = self.fault_injector.state_dict()
+        if self.health is not None:
+            fault_state["monitor"] = self.health.state_dict()
+        if fault_state:
+            state["fault_state"] = fault_state
         return state
 
     def load_state_dict(self, state: dict) -> None:
@@ -520,4 +573,23 @@ class GIDSDataLoader:
         self.plane.reset()
         if "tier_state" in state:
             self.store.load_state_dict(state["tier_state"])
+        fault_state = state.get("fault_state", {})
+        if "injector" in fault_state:
+            if self.fault_injector is None:
+                raise ValueError(
+                    "checkpoint carries fault-injector state but this "
+                    "plane has no fault_schedule — resume with the same "
+                    "LoaderConfig.fault_schedule or recovery decisions "
+                    "diverge from the checkpointed run")
+            self.fault_injector.load_state_dict(fault_state["injector"])
+        elif self.fault_injector is not None:
+            self.fault_injector.reset()
+        if "monitor" in fault_state:
+            if self.health is None:
+                raise ValueError(
+                    "checkpoint carries shard-health state but this plane "
+                    "has no monitor (no fault_schedule / replication)")
+            self.health.load_state_dict(fault_state["monitor"])
+        elif self.health is not None:
+            self.health.reset()
         self.accumulator.reset_telemetry()

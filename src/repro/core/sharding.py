@@ -252,6 +252,34 @@ class AdaptivePlacement(DegreePlacement):
         super().__init__(n_shards, degrees)
         self.touches = TouchTable(len(self.table), alpha=alpha)
 
+    def plan_drain(self, shard: int) -> tuple[np.ndarray, np.ndarray]:
+        """Propose evacuating the measured-hot rows OFF one shard — the
+        fault plane's move when the `ShardHealthMonitor` flags a queue as
+        browning out.  Hot nodes currently placed on `shard` are dealt
+        round-robin by descending score across the OTHER shards; the cold
+        tail stays put (a slow queue still holds its bytes — the drain
+        moves the rows that are costing time, not the namespace).  Returns
+        ``(new_table, moved_ids)`` like `plan_rebalance`; the
+        `ShardRebalancer` prices and commits it."""
+        if self.n_shards < 2 or not 0 <= int(shard) < self.n_shards:
+            raise ValueError(
+                f"{self.name} placement cannot drain shard {shard} of "
+                f"{self.n_shards} — draining needs another shard to "
+                "absorb the hot set")
+        scores = self.touches.scores()
+        hot = scores > scores.max() * 0.01 if scores.max() > 0 \
+            else np.zeros(len(scores), bool)
+        on = np.nonzero(hot & (self.table == int(shard)))[0]
+        new = self.table.copy()
+        if len(on):
+            order = on[np.argsort(-scores[on], kind="stable")]
+            others = np.array(
+                [s for s in range(self.n_shards) if s != int(shard)],
+                np.int16)
+            new[order] = others[np.arange(len(order)) % len(others)]
+        moved = np.nonzero(new != self.table)[0]
+        return new, moved
+
     def plan_rebalance(self) -> tuple[np.ndarray, np.ndarray]:
         """Propose a re-striped table: measured-hot nodes dealt round-robin
         by descending score.  Returns ``(new_table, moved_ids)``; nothing is
@@ -297,6 +325,85 @@ class AdaptivePlacement(DegreePlacement):
 def _make_adaptive(n_shards: int, *, degrees=None, **_ctx
                    ) -> AdaptivePlacement:
     return AdaptivePlacement(n_shards, degrees)
+
+
+class ReplicatedPlacement:
+    """k-way replication wrapped around ANY registered placement policy.
+
+    Replica j of a node whose primary shard is s lives on
+    ``(s + j) % n_shards`` — chained declustering, so losing one shard
+    spreads its read load over its neighbours instead of doubling one
+    queue.  `shard_of` still answers with the PRIMARY (the fault-free plane
+    routes and prices bit-identically to the bare policy); the extra
+    copies exist for the fault plane: `FailoverRouter` (core/faults.py)
+    re-routes reads off dead/degraded primaries at plan time, and the
+    `FaultInjector`'s burst pricing drains a dead shard's IOs — and a
+    straggler's hedged residual — on the replica queues.
+
+    Replication perturbs routing, never data: every replica of a row holds
+    the same bytes, so gathered features cannot depend on which copy
+    served them.  Attribute access falls through to the wrapped policy, so
+    an adaptive base keeps its `table`/`touches`/`plan_rebalance` seam and
+    the `ShardRebalancer` works unchanged."""
+
+    def __init__(self, base: PlacementPolicy, replication_factor: int):
+        k = int(replication_factor)
+        name = getattr(base, "name", "placement")
+        # fail loudly at construction: a bad replica map discovered at
+        # failover time is an outage, not an exception
+        if k < 2:
+            raise ValueError(
+                f"{name} placement: replication_factor must be >= 2 "
+                f"(got {k}); use the bare policy for an unreplicated plane")
+        if base.n_shards < 2:
+            raise ValueError(
+                f"{name} placement: replication needs n_shards >= 2 "
+                f"(got {base.n_shards}) — with one shard every replica "
+                "lands on the queue it is supposed to survive")
+        if k > base.n_shards:
+            raise ValueError(
+                f"{name} placement: replication_factor {k} exceeds "
+                f"n_shards {base.n_shards} — replicas of one node must "
+                "land on distinct shards")
+        self.base = base
+        self.replication_factor = k
+        self.n_shards = base.n_shards
+        self.name = f"replicated({name})x{k}"
+
+    def shard_of(self, node_ids: np.ndarray) -> np.ndarray:
+        return self.base.shard_of(node_ids)
+
+    def replica_shards(self, shard: int) -> tuple[int, ...]:
+        """The replica queues for primary shard `shard` (excludes it)."""
+        return tuple((int(shard) + j) % self.n_shards
+                     for j in range(1, self.replication_factor))
+
+    def replicas_of(self, node_ids: np.ndarray) -> np.ndarray:
+        """``(len(node_ids), k)`` shard matrix; column 0 is the primary."""
+        primary = np.asarray(self.base.shard_of(node_ids), np.int64)
+        offsets = np.arange(self.replication_factor, dtype=np.int64)
+        return (primary[:, None] + offsets[None, :]) % self.n_shards
+
+    def state_dict(self) -> dict:
+        return {"name": self.name, "n_shards": self.n_shards,
+                "replication_factor": self.replication_factor,
+                "base": self.base.state_dict()}
+
+    def load_state_dict(self, state: dict) -> None:
+        k = state.get("replication_factor")
+        if state.get("name", self.name) != self.name \
+                or k != self.replication_factor:
+            raise ValueError(
+                f"{self.name} placement: checkpoint replica map "
+                f"{state.get('name')!r} (x{k}) does not match "
+                f"x{self.replication_factor} — failover would route reads "
+                "to shards that never held the replica")
+        self.base.load_state_dict(state["base"])
+
+    def __getattr__(self, attr: str):
+        # the adaptive seam (table / touches / plan_rebalance / plan_drain /
+        # commit) and any policy-specific state fall through to the base
+        return getattr(self.base, attr)
 
 
 class SkewedPlacement(_PolicyBase):

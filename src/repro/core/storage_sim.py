@@ -294,6 +294,22 @@ class StorageTimeline:
         self.spec, self.n_ssd = spec, n_ssd
         self.shard_specs = tuple(shard_specs) if shard_specs else None
         self.last_shard_burst: ShardedBurstResult | None = None
+        # fault plane (core/faults.py): when a FaultInjector is attached,
+        # every priced storage burst ticks its schedule and faulted bursts
+        # are re-priced with retries / failover / hedging; None (the
+        # default) leaves every price bit-identical to the fault-free plane
+        self.injector = None
+
+    def _fault_adjust(self, burst: ShardedBurstResult,
+                      bytes_per_row: int,
+                      io_bytes: int = IO_BYTES) -> ShardedBurstResult:
+        """Run one priced burst through the attached fault injector (no-op
+        without one — the same object comes back, floats untouched)."""
+        if self.injector is None:
+            return burst
+        specs = self.shard_specs or (self.spec,) * burst.n_shards
+        return self.injector.price_burst(specs, burst, bytes_per_row,
+                                         io_bytes)
 
     def price_batch(self, report, outstanding: int,
                     policy: str = "overlapped") -> float:
@@ -366,6 +382,7 @@ class StorageTimeline:
                            else report.shard_rows)
             burst = price_sharded_burst(self.shard_specs, report.shard_rows,
                                         shard_lines, bpr, io_bytes)
+            burst = self._fault_adjust(burst, bpr, io_bytes)
             self.last_shard_burst = burst
             t_ssd, ssd_bytes = burst.elapsed_s, burst.ssd_bytes
         else:
@@ -377,6 +394,15 @@ class StorageTimeline:
             ssd_bytes = min(n_rows * bpr, lines * io_bytes) if n_rows else 0
             t_ssd = ssd_bytes / (self.spec.peak_bw * self.n_ssd * eff) \
                 if n_rows else 0.0
+            if self.injector is not None:
+                # the unsharded plane is one storage queue: wrap the burst
+                # so the fault schedule prices it the same way
+                burst = self._fault_adjust(
+                    ShardedBurstResult((t_ssd,), (n_rows,), (int(lines),),
+                                       (self.spec.name,), int(ssd_bytes)),
+                    bpr, io_bytes)
+                self.last_shard_burst = burst
+                t_ssd, ssd_bytes = burst.elapsed_s, burst.ssd_bytes
         n_host, n_hbm = report.n_host_hits, report.n_hbm_hits
         t_host = n_host * bpr / HOST_DRAM_BW if n_host else 0.0
         t_hbm = n_hbm * bpr / HBM_BW if n_hbm else 0.0
@@ -468,6 +494,15 @@ class StorageTimeline:
         eff = model_burst(self.spec, max(outstanding, 1), self.n_ssd).efficiency
         ssd_bw = self.spec.peak_bw * self.n_ssd * eff
         t_ssd = n_storage * feat_bytes / ssd_bw if n_storage else 0.0
+        if self.injector is not None:
+            lines = n_storage * max(1, -(-feat_bytes // IO_BYTES))
+            burst = self._fault_adjust(
+                ShardedBurstResult((t_ssd,), (n_storage,), (int(lines),),
+                                   (self.spec.name,),
+                                   int(n_storage * feat_bytes)),
+                feat_bytes)
+            self.last_shard_burst = burst
+            t_ssd = burst.elapsed_s
         t_host = n_host * feat_bytes / HOST_DRAM_BW if n_host else 0.0
         t_hbm = n_hbm * feat_bytes / HBM_BW if n_hbm else 0.0
         pcie_bytes = (n_storage + n_host) * feat_bytes
@@ -495,6 +530,7 @@ class StorageTimeline:
             specs, shard_rows,
             tuple(-(-r * feat_bytes // IO_BYTES) for r in shard_rows),
             feat_bytes, shard_outstanding=shard_out)
+        burst = self._fault_adjust(burst, feat_bytes)
         self.last_shard_burst = burst
         t_host = n_host * feat_bytes / HOST_DRAM_BW if n_host else 0.0
         t_hbm = n_hbm * feat_bytes / HBM_BW if n_hbm else 0.0

@@ -496,14 +496,24 @@ class ShardedStorageTier(StorageTier):
                     "shards — pass one spec per shard (or a single spec "
                     "to replicate)")
         self.specs = specs
+        # fault plane: a FailoverRouter (core/faults.py) rewrites the
+        # placement decision at plan time — reads off dead/degraded shards
+        # go to a live replica.  None (the default) keeps shard_of the
+        # bare placement, bit-identical to the unrouted plane.
+        self.router = None
 
     @property
     def n_shards(self) -> int:
         return self.placement.n_shards
 
     def shard_of(self, node_ids: np.ndarray) -> np.ndarray:
-        """Per-request shard id (the placement decision), (B,) int16."""
-        return np.asarray(self.placement.shard_of(node_ids), np.int16)
+        """Per-request shard id (the placement decision), (B,) int16.
+        With a router wired, the decision is failover-adjusted — same
+        bytes, healthier queue."""
+        primary = np.asarray(self.placement.shard_of(node_ids), np.int16)
+        if self.router is None:
+            return primary
+        return np.asarray(self.router.route(node_ids, primary), np.int16)
 
     def resolve_shard_specs(self, default_spec) -> tuple:
         """Per-shard `SSDSpec`s, falling back to `default_spec` (the

@@ -1,12 +1,13 @@
 from repro.core.tiers import KVSlotTier, TenantCacheTier
 from .admission import SLOBatcher, WindowDecision
 from .engine import EngineConfig, EngineNotDrained, Request, ServeEngine
-from .gnn_engine import (GNNServeConfig, GNNServeEngine, RequestRecord,
-                         ServeResult, WindowTrace)
+from .gnn_engine import (BrownoutController, GNNServeConfig, GNNServeEngine,
+                         RequestRecord, ServeResult, WindowTrace)
 from .workload import (ServeRequest, TenantSpec, generate_stream,
                        mmpp_arrivals, poisson_arrivals, tenant_hot_set)
 
 __all__ = [
+    "BrownoutController",
     "EngineConfig", "EngineNotDrained", "GNNServeConfig", "GNNServeEngine",
     "KVSlotTier", "Request", "RequestRecord", "SLOBatcher", "ServeEngine",
     "ServeRequest", "ServeResult", "TenantCacheTier", "TenantSpec",

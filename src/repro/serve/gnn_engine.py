@@ -89,6 +89,29 @@ class GNNServeConfig:
     forward_base_s: float = 3e-5
     forward_per_row_s: float = 2e-8
     keep_features: bool = False     # retain gathered rows on each record
+    # fault plane (core/faults.py): a seeded FaultSchedule injected into
+    # every priced gather burst (burst index == served-window index on the
+    # merged path); None prices bit-identically to the fault-free engine
+    fault_schedule: object | None = None
+    # brownout degradation ladder (BrownoutController): under measured
+    # gather-latency pressure (per-row burst EMA over its own running-min
+    # baseline) the engine degrades in priced steps instead of letting
+    # every request's p99 ride the straggling queue —
+    #   level 1 (pressure >= degrade_at): shrink sampling fanout
+    #   level 2 (>= stale_at): + serve requests whose whole neighborhood
+    #           was gathered within `stale_window_s` from those rows
+    #           (same immutable bytes, staleness accounted, no burst)
+    #   level 3 (>= shed_at): + shed every `shed_every`-th staged request
+    # one level step per window, de-escalating below recover * threshold
+    brownout: bool = False
+    brownout_degrade_at: float = 2.0
+    brownout_stale_at: float = 3.5
+    brownout_shed_at: float = 6.0
+    brownout_recover: float = 0.7
+    brownout_alpha: float = 0.5
+    brownout_fanout_scale: float = 0.5
+    brownout_stale_window_s: float = 0.25
+    brownout_shed_every: int = 3
     seed: int = 0
 
 
@@ -101,6 +124,9 @@ class RequestRecord:
     arrival_s: float
     deadline_s: float
     rejected: bool = False          # shed at admission (goodput, not p99)
+    shed_reason: str | None = None  # why rejected: "expired" (deadline
+                                    # already spent at admission) or
+                                    # "brownout" (load shed at level 3)
     start_s: float = 0.0            # window service start
     completion_s: float = 0.0
     queue_wait_s: float = 0.0       # arrival -> service start
@@ -109,6 +135,9 @@ class RequestRecord:
     forward_s: float = 0.0          # modelled forward compute
     window_size: int = 0            # requests in the serving window
     n_rows: int = 0                 # unique feature rows of this request
+    degraded_level: int = 0         # brownout ladder level when served
+    stale: bool = False             # served from recently-gathered rows
+    staleness_s: float = 0.0        # age of the oldest reused row
     all_nodes: np.ndarray | None = None
     features: np.ndarray | None = None   # kept iff config.keep_features
     logits: np.ndarray | None = None     # set iff a model was supplied
@@ -153,7 +182,54 @@ class ServeResult:
 
     @property
     def n_rejected(self) -> int:
+        """All shed requests — see `n_shed_expired` / `n_shed_brownout`
+        for the breakdown; deadline misses of SERVED requests are counted
+        separately in `n_deadline_missed`, never here."""
         return sum(r.rejected for r in self.records)
+
+    @property
+    def n_shed_expired(self) -> int:
+        """Shed at admission because the deadline was already spent."""
+        return sum(r.rejected and r.shed_reason == "expired"
+                   for r in self.records)
+
+    @property
+    def n_shed_brownout(self) -> int:
+        """Shed by the brownout controller at degradation level 3."""
+        return sum(r.rejected and r.shed_reason == "brownout"
+                   for r in self.records)
+
+    @property
+    def n_deadline_missed(self) -> int:
+        """Served to completion but past the deadline — distinct from any
+        kind of shed (those never started service)."""
+        return sum((not r.rejected) and not r.deadline_met
+                   for r in self.records)
+
+    @property
+    def n_degraded(self) -> int:
+        """Served under a non-zero brownout level (shrunk fanout and/or
+        stale rows) — degraded service, not lost service."""
+        return sum((not r.rejected) and (r.degraded_level > 0 or r.stale)
+                   for r in self.records)
+
+    @property
+    def n_stale_served(self) -> int:
+        return sum((not r.rejected) and r.stale for r in self.records)
+
+    @property
+    def shed_fraction(self) -> float:
+        return self.n_rejected / max(len(self.records), 1)
+
+    def attainment(self, tenant: int | None = None) -> float:
+        """Fraction of OFFERED load (shed included) that met its deadline
+        — the SLO view that shedding cannot flatter, unlike a p99 taken
+        over survivors only."""
+        recs = [r for r in self.records
+                if tenant is None or r.tenant == tenant]
+        if not recs:
+            return 0.0
+        return sum(r.deadline_met for r in recs) / len(recs)
 
     def latencies_s(self, tenant: int | None = None) -> np.ndarray:
         return np.array([r.latency_s for r in self.served
@@ -213,6 +289,71 @@ class ServeResult:
         return sum(w.n_requests for w in self.windows) / len(self.windows)
 
 
+class BrownoutController:
+    """Gather-latency pressure ladder for graceful serve-plane degradation.
+
+    Pressure is the EMA of per-row window burst latency over its own
+    running-minimum baseline — a storage brownout inflates every line read
+    so the per-ROW cost rises with it, while window size and dedup cancel
+    out of the normalization.  The ladder moves at most one level per
+    observed window (no thrash on a single slow burst) and de-escalates
+    with hysteresis once pressure falls below `recover` times the
+    threshold it climbed past.  Levels only reshape WHAT is served —
+    fanout, staleness, admission — never the bytes of any row that is
+    served, so the fault-plane data invariant holds through a brownout.
+    """
+
+    def __init__(self, config: GNNServeConfig):
+        self.config = config
+        self.reset()
+
+    def reset(self) -> None:
+        self.level = 0
+        self.ema = 0.0
+        self.baseline = float("inf")
+        self.n_windows = 0
+        # (window index, new level) — one entry per ladder move
+        self.level_trace: list[tuple[int, int]] = []
+
+    @property
+    def thresholds(self) -> tuple[float, float, float]:
+        cfg = self.config
+        return (cfg.brownout_degrade_at, cfg.brownout_stale_at,
+                cfg.brownout_shed_at)
+
+    @property
+    def pressure(self) -> float:
+        if not np.isfinite(self.baseline) or self.baseline <= 0 \
+                or self.ema <= 0:
+            return 1.0
+        return self.ema / self.baseline
+
+    def observe(self, burst_s: float, n_rows: int) -> int:
+        """Feed one served window's burst; returns the (new) level.
+        Stale-only windows gather nothing and carry no signal — the EMA
+        holds until a fresh burst confirms or denies the pressure."""
+        self.n_windows += 1
+        if n_rows <= 0:
+            return self.level
+        per_row = burst_s / n_rows
+        a = self.config.brownout_alpha
+        self.ema = per_row if self.ema <= 0 else \
+            (1.0 - a) * self.ema + a * per_row
+        self.baseline = min(self.baseline, self.ema)
+        th = self.thresholds
+        p = self.pressure
+        target = sum(p >= x for x in th)
+        if target > self.level:
+            self.level += 1
+        elif self.level > 0 \
+                and p < th[self.level - 1] * self.config.brownout_recover:
+            self.level -= 1
+        last = self.level_trace[-1][1] if self.level_trace else 0
+        if self.level != last:
+            self.level_trace.append((self.n_windows, self.level))
+        return self.level
+
+
 class GNNServeEngine:
     """Virtual-time online inference engine over the shared data plane.
 
@@ -245,6 +386,16 @@ class GNNServeEngine:
         if hasattr(backstop, "resolve_shard_specs"):
             shard_specs = backstop.resolve_shard_specs(ssd)
         self.timeline = StorageTimeline(ssd, 1, shard_specs=shard_specs)
+        self.fault_injector = None
+        if cfg.fault_schedule is not None:
+            from repro.core.faults import FaultInjector
+            n_queues = len(shard_specs) if shard_specs else 1
+            self.fault_injector = FaultInjector(cfg.fault_schedule, n_queues)
+            self.timeline.injector = self.fault_injector
+        self.brownout = BrownoutController(cfg) if cfg.brownout else None
+        # node -> virtual time its row was last gathered (stale serving)
+        self._recent: dict[int, float] = {}
+        self._shed_tick = 0
         if topo is None and cfg.use_topology:
             topo = TieredTopologyStore.from_graph(
                 graph, admission=cfg.topo_admission,
@@ -280,19 +431,35 @@ class GNNServeEngine:
         so a request samples the same blocks whether it is served merged,
         per-request, or after a demotion; with a topology store the
         hop-page reads are priced and the modelled time returned."""
-        hit = self._sample_cache.get(req.rid)
+        fanouts = self._fanouts()
+        hit = self._sample_cache.get((req.rid, fanouts))
         if hit is not None:
             return hit
         rng = np.random.default_rng([self.config.seed, req.rid])
         if self.topo is not None:
             blocks = tiered_sample_blocks(self.graph, self.topo, req.seeds,
-                                          self.config.fanouts, rng)
+                                          fanouts, rng)
             out = (blocks, float(blocks.sample_time_s))
         else:
             out = (host_sample_blocks(self.graph, req.seeds,
-                                      self.config.fanouts, rng), 0.0)
-        self._sample_cache[req.rid] = out
+                                      fanouts, rng), 0.0)
+        self._sample_cache[(req.rid, fanouts)] = out
         return out
+
+    def _fanouts(self) -> tuple[int, ...]:
+        """Brownout level >= 1 shrinks the sampling fanout by
+        `fanout_scale ** level` — fewer neighbors per hop means fewer
+        unique rows per window, the cheapest pressure release (accuracy
+        degrades before latency does).  The sample memo is keyed by the
+        fanout it was drawn with, so a backlogged request re-samples
+        smaller when the ladder climbs while it queues — mitigation
+        reaches the very requests the brownout stranded — and the
+        fault-free path (level pinned at 0) never re-samples anything."""
+        if self.brownout is None or self.brownout.level < 1:
+            return tuple(self.config.fanouts)
+        scale = self.config.brownout_fanout_scale ** self.brownout.level
+        return tuple(max(1, int(round(f * scale)))
+                     for f in self.config.fanouts)
 
     def _forward_s(self, n_rows: int) -> float:
         """One batched forward launch over `n_rows` gathered rows — the
@@ -352,7 +519,8 @@ class GNNServeEngine:
             for req in decision.shed:
                 records.append(RequestRecord(
                     rid=req.rid, tenant=req.tenant, arrival_s=req.arrival_s,
-                    deadline_s=req.deadline_s, rejected=True))
+                    deadline_s=req.deadline_s, rejected=True,
+                    shed_reason="expired"))
             if not decision.staged:
                 continue
             # a staged request whose sampling would land after the oldest
@@ -376,6 +544,25 @@ class GNNServeEngine:
                     demoted.append(req)
             for req in reversed(demoted):    # arrival order preserved
                 pending.appendleft(req)
+            # level 3: counter-based load shedding — every shed_every'th
+            # staged request (deterministic, not sampled) is dropped before
+            # service so the survivors' window stays small enough to hold
+            # the victim p99.  The oldest request never sheds: its deadline
+            # is why the window opened.
+            if self.brownout is not None and self.brownout.level >= 3 \
+                    and len(staged) > 1:
+                keep = [staged[0]]
+                for req in staged[1:]:
+                    self._shed_tick += 1
+                    if self._shed_tick % self.config.brownout_shed_every == 0:
+                        records.append(RequestRecord(
+                            rid=req.rid, tenant=req.tenant,
+                            arrival_s=req.arrival_s,
+                            deadline_s=req.deadline_s, rejected=True,
+                            shed_reason="brownout"))
+                    else:
+                        keep.append(req)
+                staged = keep
             decision.staged = staged
             busy = self._execute(decision, records, windows)
             # close the quota loop once per served window: the controller
@@ -395,47 +582,85 @@ class GNNServeEngine:
 
     def _execute(self, decision, records, windows) -> float:
         staged = decision.staged
+        level = self.brownout.level if self.brownout is not None else 0
         samples = [self._sample(r) for r in staged]
         # service cannot start before the last staged sample lands —
         # sampling is admission-time GPU work overlapping window formation
         start = max([decision.start_s]
                     + [r.arrival_s + s for r, (_, s) in zip(staged, samples)])
         blocks = [b for b, _ in samples]
-        merged = merge_window([b.all_nodes for b in blocks])
-        self._stage_tenants(merged, staged)
 
+        # level >= 2: a request whose WHOLE neighborhood was gathered
+        # within the stale window is served from those rows directly —
+        # identical bytes (features are immutable), zero storage burst,
+        # staleness recorded on the record instead of latency on the tail
+        stale_age: list[float | None] = [None] * len(staged)
+        if self.config.merged and level >= 2 and self._recent:
+            win = self.config.brownout_stale_window_s
+            for i, blk in enumerate(blocks):
+                last = [self._recent.get(int(n)) for n in blk.all_nodes]
+                if last and all(ls is not None and start - ls <= win
+                                for ls in last):
+                    stale_age[i] = start - min(last)
+        fresh = [i for i, a in enumerate(stale_age) if a is None]
+
+        rows_by_idx: dict[int, np.ndarray] = {}
+        gathered_unique = None
         if len(staged) == 1 and not self.config.merged:
             # per-request baseline: one fold, one un-coalesced burst whose
             # overlap efficiency comes from this request's own storage
             # concurrency alone (no accumulator ramping across requests)
+            merged = merge_window([blocks[0].all_nodes])
+            self._stage_tenants(merged, staged)
             rows, report = self.store.gather(blocks[0].all_nodes)
-            rows_list = [rows]
+            rows_by_idx[0] = rows
             burst_s = self.timeline.price_batch(
                 report, outstanding=max(report.n_storage, 1))
             dedup = 1.0
-        else:
-            rows_list, _, wrep = self.store.gather_merged(merged)
+        elif fresh:
+            merged = merge_window([blocks[i].all_nodes for i in fresh])
+            self._stage_tenants(merged, [staged[i] for i in fresh])
+            fresh_rows_list, _, wrep = self.store.gather_merged(merged)
             burst_s = self.timeline.price_merged_burst(wrep)
             dedup = wrep.dedup_factor
+            rows_by_idx = dict(zip(fresh, fresh_rows_list))
+            gathered_unique = merged.unique_nodes
+        else:
+            # every staged request is served stale — no burst at all
+            burst_s, dedup = 0.0, 1.0
 
         total_rows = sum(len(b.all_nodes) for b in blocks)
+        fresh_rows = sum(len(blocks[i].all_nodes) for i in fresh)
         forward_total_s = self._forward_s(total_rows)
         t = start + burst_s + forward_total_s
-        for req, (blk, sample_s), rows in zip(staged, samples, rows_list):
+        for i, (req, (blk, sample_s)) in enumerate(zip(staged, samples)):
             n_rows = len(blk.all_nodes)
+            stale = stale_age[i] is not None
+            rows = rows_by_idx.get(i)
+            if rows is None:
+                rows = self.features[blk.all_nodes]
             rec = RequestRecord(
                 rid=req.rid, tenant=req.tenant, arrival_s=req.arrival_s,
                 deadline_s=req.deadline_s, start_s=start, completion_s=t,
                 queue_wait_s=start - req.arrival_s, sample_s=sample_s,
-                gather_s=burst_s * n_rows / max(total_rows, 1),
+                gather_s=(0.0 if stale
+                          else burst_s * n_rows / max(fresh_rows, 1)),
                 forward_s=forward_total_s * n_rows / max(total_rows, 1),
                 window_size=len(staged),
-                n_rows=n_rows, all_nodes=blk.all_nodes)
+                n_rows=n_rows, degraded_level=level, stale=stale,
+                staleness_s=stale_age[i] or 0.0, all_nodes=blk.all_nodes)
             if self.config.keep_features:
                 rec.features = rows
             if self.model is not None:
                 rec.logits = self._run_model(blk, rows)
             records.append(rec)
+        if self.brownout is not None:
+            if gathered_unique is not None:
+                for n in gathered_unique:
+                    self._recent[int(n)] = start
+            self.brownout.observe(
+                burst_s,
+                len(gathered_unique) if gathered_unique is not None else 0)
         service_s = t - start
         # the policy's estimate absorbs the sampling-completion push-out of
         # `start` past the batcher's intended open time, so close_by leaves
@@ -458,3 +683,9 @@ class GNNServeEngine:
         # restarts from the same initial demand estimate
         self.quota_controller = self._make_quota_controller()
         self._sample_cache.clear()
+        if self.fault_injector is not None:
+            self.fault_injector.reset()
+        if self.brownout is not None:
+            self.brownout.reset()
+        self._recent.clear()
+        self._shed_tick = 0

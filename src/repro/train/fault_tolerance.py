@@ -36,8 +36,12 @@ class StepWatchdog:
     re-issues prefetches; a flagged slow *compute* step on real hardware
     triggers the external orchestrator (restart-from-checkpoint)."""
 
-    def __init__(self, cfg: WatchdogConfig | None = None):
+    def __init__(self, cfg: WatchdogConfig | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        # `clock` is injectable so tests (and virtual-time harnesses) can
+        # feed deterministic step durations instead of wall time
         self.cfg = cfg or WatchdogConfig()
+        self.clock = clock
         self.history: list[float] = []
         self.flagged: list[tuple[int, float]] = []
         self._t0: float | None = None
@@ -45,11 +49,13 @@ class StepWatchdog:
 
     def start_step(self, step: int) -> None:
         self._step = step
-        self._t0 = time.monotonic()
+        self._t0 = self.clock()
 
     def end_step(self) -> bool:
         """Returns True if this step was a straggler."""
-        dt = time.monotonic() - self._t0
+        if self._t0 is None:
+            raise RuntimeError("end_step() without a matching start_step()")
+        dt = self.clock() - self._t0
         straggler = False
         if len(self.history) >= self.cfg.min_history:
             med = sorted(self.history)[len(self.history) // 2]

@@ -1,0 +1,78 @@
+"""StepWatchdog: injectable clock, straggler flagging against the rolling
+median, checkpoint cadence, and history bounds."""
+import pytest
+
+from repro.train.fault_tolerance import StepWatchdog, WatchdogConfig
+
+
+class FakeClock:
+    """Deterministic clock: each step takes whatever the test scripts."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _run_steps(wd, clock, durations, start=0):
+    flags = []
+    for i, dt in enumerate(durations, start):
+        wd.start_step(i)
+        clock.advance(dt)
+        flags.append(wd.end_step())
+    return flags
+
+
+def test_watchdog_flags_straggler_after_warmup():
+    clock = FakeClock()
+    wd = StepWatchdog(WatchdogConfig(step_timeout_factor=5.0,
+                                     min_history=4), clock=clock)
+    # warmup: nothing is flagged before min_history observations exist,
+    # even a step 100x the others
+    flags = _run_steps(wd, clock, [0.1, 0.1, 0.1, 10.0])
+    assert flags == [False] * 4
+    # median is now 0.1; a 5x+ step is a straggler, a 4x one is not
+    assert _run_steps(wd, clock, [0.4], start=4) == [False]
+    assert _run_steps(wd, clock, [0.6], start=5) == [True]
+    assert wd.flagged == [(5, pytest.approx(0.6))]
+    # upper median of [.1, .1, .1, .4, .6, 10]
+    assert wd.median_step_s == pytest.approx(0.4)
+
+
+def test_watchdog_median_tracks_drift():
+    """The threshold follows the ROLLING median — a uniformly slower phase
+    is a new normal, not an endless straggler alarm."""
+    clock = FakeClock()
+    wd = StepWatchdog(WatchdogConfig(step_timeout_factor=5.0, min_history=4,
+                                     max_step_history=8), clock=clock)
+    _run_steps(wd, clock, [0.1] * 8)
+    # 8 slow-but-steady steps push the old regime out of the window
+    flags = _run_steps(wd, clock, [0.45] * 8, start=8)
+    assert not any(flags)                   # 4.5x median, under the factor
+    assert wd.median_step_s == pytest.approx(0.45)
+    assert len(wd.history) == 8             # bounded
+
+
+def test_watchdog_end_without_start_raises():
+    wd = StepWatchdog(clock=FakeClock())
+    with pytest.raises(RuntimeError, match="start_step"):
+        wd.end_step()
+
+
+def test_watchdog_checkpoint_cadence():
+    wd = StepWatchdog(WatchdogConfig(checkpoint_every=50), clock=FakeClock())
+    assert not wd.should_checkpoint(0)      # step 0 never checkpoints
+    assert wd.should_checkpoint(50)
+    assert not wd.should_checkpoint(51)
+    assert wd.should_checkpoint(100)
+
+
+def test_watchdog_default_clock_is_wall_time():
+    wd = StepWatchdog()
+    wd.start_step(0)
+    assert wd.end_step() is False
+    assert wd.history and wd.history[0] >= 0.0

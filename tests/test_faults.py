@@ -1,0 +1,596 @@
+"""Fault-tolerant storage data plane: schedule/policy validation, burst
+re-pricing math (brownout, outage failover, retry ladder, hedged reads),
+replicated placement, plan-time failover routing, shard health monitoring,
+drain-driven rebalancing, the data-bit-identity invariant under arbitrary
+fault schedules, checkpoint/resume replay of recovery decisions, and the
+serve-plane brownout ladder with its shed/degrade accounting."""
+import numpy as np
+import pytest
+
+from repro.core import (BrownoutEvent, FailoverRouter, FaultInjector,
+                        FaultSchedule, FaultedBurstResult, FlakyReadsEvent,
+                        GIDSDataLoader, HedgePolicy, LoaderConfig,
+                        OutageEvent, ReplicatedPlacement, RetryPolicy,
+                        SAMSUNG_980PRO, ShardHealthMonitor,
+                        ShardedBurstResult, make_placement)
+from repro.core.sharding import AdaptivePlacement
+from repro.graph.synthetic import rmat_graph
+
+
+@pytest.fixture(scope="module")
+def graph_and_feats():
+    g = rmat_graph(10_000, 12, 16, seed=1)
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 16)).astype(np.float32)
+    return g, feats
+
+
+def _mk(g, feats, seed=7, **kw):
+    cfg = dict(batch_size=256, fanouts=(2,), data_plane="gids-merged-sharded",
+               cache_lines=512, window_depth=4, n_shards=4,
+               placement="degree", seed=seed)
+    cfg.update(kw)
+    return GIDSDataLoader(g, feats, LoaderConfig(**cfg))
+
+
+def _clean_burst(per_shard_s, rows, lines, bytes_per_row=64):
+    return ShardedBurstResult(
+        per_shard_s=tuple(per_shard_s), per_shard_rows=tuple(rows),
+        per_shard_lines=tuple(lines),
+        spec_names=(SAMSUNG_980PRO.name,) * len(rows),
+        ssd_bytes=int(sum(r * bytes_per_row for r in rows)))
+
+
+# -- schedule / policy validation ----------------------------------------------
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="interval"):
+        BrownoutEvent(shard=0, start=5, end=5, multiplier=2.0)
+    with pytest.raises(ValueError, match="interval"):
+        OutageEvent(shard=0, start=-1, end=3)
+    with pytest.raises(ValueError, match="shard must be >= 0"):
+        OutageEvent(shard=-1, start=0, end=3)
+    with pytest.raises(ValueError, match="never speeds a queue up"):
+        BrownoutEvent(shard=0, start=0, end=4, multiplier=0.5)
+    with pytest.raises(ValueError, match="use OutageEvent"):
+        FlakyReadsEvent(shard=0, start=0, end=4, fail_prob=1.0)
+    with pytest.raises(TypeError, match="unknown fault event"):
+        FaultSchedule(events=("not-an-event",))
+    with pytest.raises(ValueError, match="max_retries"):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff cap"):
+        RetryPolicy(backoff_base_s=1e-3, backoff_cap_s=1e-4)
+    with pytest.raises(ValueError, match="quantile"):
+        HedgePolicy(quantile=1.5)
+    with pytest.raises(ValueError, match="factor"):
+        HedgePolicy(factor=0.5)
+
+
+def test_injector_validation():
+    sched = FaultSchedule(events=(OutageEvent(shard=5, start=0, end=2),))
+    with pytest.raises(ValueError, match="targets shard 5"):
+        FaultInjector(sched, n_shards=4)
+    with pytest.raises(ValueError, match="replication 8 exceeds"):
+        FaultInjector(FaultSchedule(), n_shards=4, replication=8)
+
+
+# -- burst re-pricing math -----------------------------------------------------
+
+def test_quiet_burst_returns_clean_object():
+    """No active event -> the SAME clean result object (bit-identity)."""
+    inj = FaultInjector(FaultSchedule(
+        events=(BrownoutEvent(shard=0, start=10, end=20, multiplier=4.0),)),
+        n_shards=2)
+    clean = _clean_burst([1e-3, 2e-3], [100, 200], [50, 100])
+    out = inj.price_burst((SAMSUNG_980PRO,) * 2, clean, bytes_per_row=64)
+    assert out is clean
+    assert inj.burst == 1 and inj.n_faulted_bursts == 0
+
+
+def test_brownout_multiplies_shard_drain():
+    inj = FaultInjector(FaultSchedule(
+        events=(BrownoutEvent(shard=1, start=0, end=4, multiplier=10.0),),
+        hedge=None), n_shards=2)
+    clean = _clean_burst([1e-3, 2e-3], [100, 200], [50, 100])
+    out = inj.price_burst((SAMSUNG_980PRO,) * 2, clean, bytes_per_row=64)
+    assert isinstance(out, FaultedBurstResult)
+    assert out.per_shard_s[0] == clean.per_shard_s[0]
+    assert out.per_shard_s[1] == pytest.approx(10.0 * clean.per_shard_s[1])
+    # rows/lines — the data — are the clean burst's, untouched
+    assert out.per_shard_rows == clean.per_shard_rows
+    assert out.per_shard_lines == clean.per_shard_lines
+    assert out.clean_per_shard_s == clean.per_shard_s
+
+
+def test_outage_fails_over_to_replica():
+    inj = FaultInjector(FaultSchedule(
+        events=(OutageEvent(shard=0, start=0, end=2),), hedge=None),
+        n_shards=3, replication=2)
+    clean = _clean_burst([1e-3, 1e-3, 1e-3], [100, 100, 100], [50, 50, 50])
+    out = inj.price_burst((SAMSUNG_980PRO,) * 3, clean, bytes_per_row=64)
+    assert out.per_shard_s[0] == 0.0            # dead shard serves nothing
+    assert out.per_shard_s[1] > clean.per_shard_s[1]   # replica absorbed it
+    assert out.failed_over_lines[0] == 50
+    assert out.ssd_bytes > clean.ssd_bytes      # duplicate IOs are priced
+    assert inj.first_failover_burst == 0
+
+
+def test_outage_without_replica_ladders_to_deadline():
+    retry = RetryPolicy(max_retries=2, read_deadline_s=1e-3)
+    inj = FaultInjector(FaultSchedule(
+        events=(OutageEvent(shard=0, start=0, end=2),), retry=retry,
+        hedge=None), n_shards=2)
+    clean = _clean_burst([1e-3, 1e-3], [100, 100], [50, 50])
+    out = inj.price_burst((SAMSUNG_980PRO,) * 2, clean, bytes_per_row=64)
+    assert out.per_shard_s[0] == pytest.approx(
+        clean.per_shard_s[0] + retry.read_deadline_s * 3)
+
+
+def test_flaky_reads_price_retry_ladder_deterministically():
+    sched = FaultSchedule(
+        events=(FlakyReadsEvent(shard=0, start=0, end=8, fail_prob=0.3),),
+        hedge=None, seed=11)
+    clean = _clean_burst([1e-3, 1e-3], [400, 400], [200, 200])
+    inj = FaultInjector(sched, n_shards=2)
+    out1 = inj.price_burst((SAMSUNG_980PRO,) * 2, clean, bytes_per_row=64)
+    assert out1.retried_lines[0] > 0
+    assert out1.per_shard_s[0] > clean.per_shard_s[0]
+    # the draw is a pure function of (seed, burst, shard): replay matches
+    inj2 = FaultInjector(sched, n_shards=2)
+    out2 = inj2.price_burst((SAMSUNG_980PRO,) * 2, clean, bytes_per_row=64)
+    assert out1.per_shard_s == out2.per_shard_s
+    assert out1.retried_lines == out2.retried_lines
+
+
+def test_hedge_cuts_the_straggler():
+    inj = FaultInjector(FaultSchedule(
+        events=(BrownoutEvent(shard=2, start=0, end=4, multiplier=10.0),),
+        hedge=HedgePolicy(quantile=0.5, factor=2.0),
+        retry=RetryPolicy(read_deadline_s=1.0)), n_shards=4, replication=2)
+    clean = _clean_burst([1e-3] * 4, [100] * 4, [50] * 4)
+    out = inj.price_burst((SAMSUNG_980PRO,) * 4, clean, bytes_per_row=64)
+    assert out.hedged_shard == 2
+    assert out.hedge_replica == 3               # (2 + 1) % 4
+    assert out.hedged_lines > 0
+    assert out.hedge_saving_s > 0
+    assert out.per_shard_s[2] < 10.0 * clean.per_shard_s[2]
+    assert inj.n_hedged_bursts == 1 and inj.first_hedge_burst == 0
+
+
+def test_hedge_needs_replicas():
+    inj = FaultInjector(FaultSchedule(
+        events=(BrownoutEvent(shard=2, start=0, end=4, multiplier=10.0),)),
+        n_shards=4, replication=1)
+    clean = _clean_burst([1e-3] * 4, [100] * 4, [50] * 4)
+    out = inj.price_burst((SAMSUNG_980PRO,) * 4, clean, bytes_per_row=64)
+    assert out.hedged_shard == -1
+    assert out.per_shard_s[2] == pytest.approx(10.0 * clean.per_shard_s[2])
+
+
+def test_injector_state_roundtrip_and_mismatch():
+    sched = FaultSchedule(
+        events=(BrownoutEvent(shard=0, start=0, end=9, multiplier=3.0),),
+        seed=5)
+    inj = FaultInjector(sched, n_shards=2, replication=2)
+    clean = _clean_burst([1e-3, 1e-3], [100, 100], [50, 50])
+    for _ in range(3):
+        inj.price_burst((SAMSUNG_980PRO,) * 2, clean, bytes_per_row=64)
+    state = inj.state_dict()
+    fresh = FaultInjector(sched, n_shards=2, replication=2)
+    fresh.load_state_dict(state)
+    assert fresh.burst == 3
+    assert fresh.n_faulted_bursts == inj.n_faulted_bursts
+    other = FaultInjector(sched, n_shards=2)
+    with pytest.raises(ValueError, match="would diverge"):
+        other.load_state_dict(state)
+
+
+# -- replicated placement ------------------------------------------------------
+
+def test_replicated_placement_validation():
+    base = make_placement("hash", 4, num_nodes=100)
+    with pytest.raises(ValueError, match="hash placement"):
+        ReplicatedPlacement(base, replication_factor=1)
+    with pytest.raises(ValueError, match="distinct shards"):
+        ReplicatedPlacement(base, replication_factor=8)
+    single = make_placement("hash", 1, num_nodes=100)
+    with pytest.raises(ValueError, match="one shard"):
+        ReplicatedPlacement(single, replication_factor=2)
+
+
+def test_replicated_placement_replicas_distinct():
+    base = make_placement("degree", 4,
+                          degrees=np.random.default_rng(0)
+                          .integers(0, 50, 200))
+    pol = ReplicatedPlacement(base, replication_factor=3)
+    assert pol.name == "replicated(degree)x3"
+    ids = np.arange(200)
+    reps = pol.replicas_of(ids)
+    assert reps.shape == (200, 3)
+    np.testing.assert_array_equal(reps[:, 0], base.shard_of(ids))
+    np.testing.assert_array_equal(pol.shard_of(ids), base.shard_of(ids))
+    for j in range(3):      # chained declustering: distinct per node
+        for k in range(j + 1, 3):
+            assert (reps[:, j] != reps[:, k]).all()
+
+
+def test_replicated_placement_state_roundtrip_and_mismatch():
+    base = make_placement("hash", 4, num_nodes=100)
+    pol = ReplicatedPlacement(base, replication_factor=2)
+    state = pol.state_dict()
+    pol.load_state_dict(state)          # round-trips
+    other = ReplicatedPlacement(make_placement("hash", 4, num_nodes=100),
+                                replication_factor=3)
+    with pytest.raises(ValueError, match="never held the replica"):
+        other.load_state_dict(state)
+
+
+def test_replicated_placement_delegates_adaptive_seam():
+    base = AdaptivePlacement(4, np.random.default_rng(0).integers(0, 50, 80))
+    pol = ReplicatedPlacement(base, replication_factor=2)
+    # the adaptive attributes reach through the wrapper
+    assert pol.table is base.table
+    pol.touches.observe(np.arange(80))
+    pol.touches.fold()
+    new, moved = pol.plan_drain(0)
+    assert len(moved) > 0 and (new[moved] != 0).all()
+
+
+# -- failover router -----------------------------------------------------------
+
+def test_failover_router_requires_replicas():
+    base = make_placement("hash", 4, num_nodes=100)
+    with pytest.raises(ValueError, match="ReplicatedPlacement"):
+        FailoverRouter(base)
+
+
+def test_failover_router_routes_outage_reads_to_replica():
+    base = make_placement("hash", 4, num_nodes=400)
+    pol = ReplicatedPlacement(base, replication_factor=2)
+    inj = FaultInjector(FaultSchedule(
+        events=(OutageEvent(shard=1, start=0, end=10),)),
+        n_shards=4, replication=2)
+    router = FailoverRouter(pol, injector=inj)
+    ids = np.arange(400)
+    primary = pol.shard_of(ids)
+    routed = router.route(ids, primary)
+    assert not (routed == 1).any()              # nothing reads a dead shard
+    moved = routed != primary
+    assert moved.any() and (primary[moved] == 1).all()
+    np.testing.assert_array_equal(routed[moved], (primary[moved] + 1) % 4)
+    assert router.n_rerouted == int(moved.sum())
+
+
+def test_failover_router_healthy_plane_is_identity():
+    pol = ReplicatedPlacement(make_placement("hash", 4, num_nodes=100), 2)
+    router = FailoverRouter(pol)
+    primary = pol.shard_of(np.arange(100))
+    assert router.route(np.arange(100), primary) is primary
+
+
+# -- shard health monitor ------------------------------------------------------
+
+def test_health_monitor_flags_browning_shard():
+    mon = ShardHealthMonitor(4, alpha=0.5, degraded_factor=2.0, min_bursts=3)
+    slow = _clean_burst([1e-3, 1e-3, 1e-3, 8e-3], [100] * 4, [50] * 4)
+    for _ in range(4):
+        mon.observe(slow)
+    assert list(mon.degraded()) == [3]
+    assert mon.worst() == 3
+    assert mon.healthiest([2, 3]) == 2
+    assert mon.first_flag_burst == 3
+    state = mon.state_dict()
+    fresh = ShardHealthMonitor(4, alpha=0.5, degraded_factor=2.0,
+                               min_bursts=3)
+    fresh.load_state_dict(state)
+    assert list(fresh.degraded()) == [3]
+    with pytest.raises(ValueError):
+        ShardHealthMonitor(2).load_state_dict(state)
+
+
+def test_health_monitor_normalizes_by_rows():
+    """A shard that is slow only because it holds more rows is healthy."""
+    mon = ShardHealthMonitor(2, min_bursts=2, degraded_factor=2.5)
+    skew = _clean_burst([1e-3, 8e-3], [100, 800], [50, 400])
+    for _ in range(4):
+        mon.observe(skew)
+    assert len(mon.degraded()) == 0
+
+
+# -- loader integration: identity, recovery, checkpoint ------------------------
+
+SCHED_BROWNOUT = FaultSchedule(
+    events=(BrownoutEvent(shard=2, start=1, end=9, multiplier=10.0),))
+SCHED_CHAOS = FaultSchedule(
+    events=(BrownoutEvent(shard=2, start=1, end=9, multiplier=10.0),
+            OutageEvent(shard=0, start=4, end=7),
+            FlakyReadsEvent(shard=1, start=2, end=12, fail_prob=0.2)),
+    seed=3)
+
+
+def test_loader_fault_free_schedule_bit_identical(graph_and_feats):
+    """An EMPTY schedule prices (and gathers) bit-identically to no
+    schedule at all — the fault plane is invisible until a fault fires."""
+    g, feats = graph_and_feats
+    a = _mk(g, feats)
+    b = _mk(g, feats, fault_schedule=FaultSchedule())
+    for _ in range(8):
+        ba, bb = a.next_batch(), b.next_batch()
+        assert ba.prep_time_s == bb.prep_time_s
+        assert ba.exposed_prep_s == bb.exposed_prep_s
+        np.testing.assert_array_equal(ba.features, bb.features)
+
+
+def test_loader_faults_never_touch_data(graph_and_feats):
+    """Any schedule perturbs timing only: features and sampled blocks are
+    bit-identical to the fault-free loader, prep time is never cheaper."""
+    g, feats = graph_and_feats
+    clean = _mk(g, feats)
+    chaos = _mk(g, feats, fault_schedule=SCHED_CHAOS, replication_factor=2)
+    slower = 0
+    for _ in range(12):
+        bc, bf = clean.next_batch(), chaos.next_batch()
+        np.testing.assert_array_equal(bc.blocks.all_nodes,
+                                      bf.blocks.all_nodes)
+        np.testing.assert_array_equal(bc.features, bf.features)
+        slower += bf.prep_time_s > bc.prep_time_s
+    assert slower > 0                           # the chaos was priced
+    assert chaos.fault_injector.n_faulted_bursts > 0
+
+
+def test_loader_replication_requires_sharded_plane(graph_and_feats):
+    g, feats = graph_and_feats
+    with pytest.raises(ValueError, match="no replica queues"):
+        GIDSDataLoader(g, feats, LoaderConfig(
+            batch_size=128, fanouts=(2,), data_plane="gids-merged",
+            cache_lines=512, replication_factor=2))
+
+
+def test_loader_hedging_beats_naive_brownout(graph_and_feats):
+    """Hedged reads + plan-time failover recover a large share of what a
+    single-shard brownout costs an unreplicated plane."""
+    g, feats = graph_and_feats
+    naive = _mk(g, feats, fault_schedule=SCHED_BROWNOUT)
+    hedged = _mk(g, feats, fault_schedule=SCHED_BROWNOUT,
+                 replication_factor=2)
+    t_naive = sum(naive.next_batch().exposed_prep_s for _ in range(12))
+    t_hedged = sum(hedged.next_batch().exposed_prep_s for _ in range(12))
+    assert hedged.fault_injector.n_hedged_bursts \
+        + hedged.store.tiers[-1].router.n_rerouted > 0
+    assert t_naive > 1.3 * t_hedged
+
+
+def test_checkpoint_mid_brownout_replays_recovery(graph_and_feats):
+    """Resume from a checkpoint taken mid-schedule: the injector's burst
+    counter (the only state recovery decisions depend on) rides the
+    checkpoint, so two resumed loaders replay the SAME retry/hedge
+    decisions and prices, the schedule does not restart from burst 0, and
+    the data stream still matches the uninterrupted run bit-for-bit."""
+    g, feats = graph_and_feats
+    kw = dict(fault_schedule=SCHED_CHAOS, replication_factor=2)
+    full = _mk(g, feats, **kw)
+    ref = [full.next_batch() for _ in range(12)]
+
+    part = _mk(g, feats, **kw)
+    for _ in range(5):
+        part.next_batch()
+    state = part.state_dict()
+    r1, r2 = _mk(g, feats, **kw), _mk(g, feats, **kw)
+    r1.load_state_dict(state)
+    r2.load_state_dict(state)
+    # the schedule position survives the checkpoint — no restart to 0
+    assert r1.fault_injector.burst == part.fault_injector.burst
+    assert r1.health.state_dict()["bursts"] \
+        == part.health.state_dict()["bursts"]
+    for i in range(5, 12):
+        b1, b2 = r1.next_batch(), r2.next_batch()
+        # resumed loaders agree bit-for-bit: same prices, same recovery
+        assert b1.prep_time_s == b2.prep_time_s
+        np.testing.assert_array_equal(b1.features, b2.features)
+        # and the DATA matches the uninterrupted stream (identity holds
+        # across the checkpoint seam, whatever the fault timing)
+        np.testing.assert_array_equal(b1.blocks.all_nodes,
+                                      ref[i].blocks.all_nodes)
+        np.testing.assert_array_equal(b1.features, ref[i].features)
+    assert r1.fault_injector.state_dict() == r2.fault_injector.state_dict()
+
+
+def test_checkpoint_fault_state_requires_fault_plane(graph_and_feats):
+    g, feats = graph_and_feats
+    faulted = _mk(g, feats, fault_schedule=SCHED_CHAOS)
+    faulted.next_batch()
+    state = faulted.state_dict()
+    plain = _mk(g, feats)
+    with pytest.raises(ValueError, match="fault"):
+        plain.load_state_dict(state)
+
+
+# -- drain-driven rebalancing --------------------------------------------------
+
+def test_plan_drain_empties_the_hot_set():
+    pol = AdaptivePlacement(4, np.random.default_rng(0).integers(1, 50, 100))
+    pol.touches.observe(np.arange(100))     # everything equally hot
+    pol.touches.fold()
+    new, moved = pol.plan_drain(2)
+    assert (new != 2).all()                 # every hot on-2 row evacuated
+    assert len(moved) == int((pol.table == 2).sum())
+    with pytest.raises(ValueError, match="adaptive"):
+        pol.plan_drain(7)
+    with pytest.raises(ValueError, match="adaptive"):
+        AdaptivePlacement(1, np.arange(10)).plan_drain(0)
+
+
+def test_rebalancer_drains_degraded_shard(graph_and_feats):
+    """Sustained brownout -> monitor flags the shard -> the rebalancer's
+    next window emits a 'drain' migration off the sick queue."""
+    g, feats = graph_and_feats
+    dl = _mk(g, feats, placement="adaptive", rebalance_interval=4,
+             migration_horizon=64,
+             fault_schedule=FaultSchedule(events=(
+                 BrownoutEvent(shard=2, start=0, end=40, multiplier=25.0),)))
+    for _ in range(48):     # ~12 priced bursts: enough for the monitor's
+        dl.next_batch()     # min_bursts warmup AND a rebalance interval
+    reasons = {ev.reason for ev in dl.rebalancer.events}
+    assert "drain" in reasons
+    drain = next(ev for ev in dl.rebalancer.events if ev.reason == "drain")
+    assert drain.n_moved > 0
+
+
+# -- property: data identity under ANY schedule --------------------------------
+
+def test_features_identical_under_any_fault_schedule_property(
+        graph_and_feats):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    g, feats = graph_and_feats
+
+    def interval(max_burst=14):
+        return st.tuples(st.integers(0, max_burst - 1),
+                         st.integers(1, max_burst)).map(
+            lambda se: (min(se), max(min(se) + 1, max(se))))
+
+    events = st.lists(st.one_of(
+        st.builds(lambda s, iv, m: BrownoutEvent(s, iv[0], iv[1], m),
+                  st.integers(0, 3), interval(), st.floats(1.0, 30.0)),
+        st.builds(lambda s, iv: OutageEvent(s, iv[0], iv[1]),
+                  st.integers(0, 3), interval()),
+        st.builds(lambda s, iv, p: FlakyReadsEvent(s, iv[0], iv[1], p),
+                  st.integers(0, 3), interval(),
+                  st.floats(0.0, 0.6))), min_size=0, max_size=4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(events=events, seed=st.integers(0, 6),
+           placement=st.sampled_from(["hash", "degree"]),
+           replication=st.sampled_from([1, 2, 3]),
+           hedged=st.booleans())
+    def check(events, seed, placement, replication, hedged):
+        sched = FaultSchedule(
+            events=tuple(events), seed=seed,
+            hedge=HedgePolicy() if hedged else None)
+        clean = _mk(g, feats, placement=placement, seed=seed)
+        chaos = _mk(g, feats, placement=placement, seed=seed,
+                    fault_schedule=sched, replication_factor=replication)
+        for _ in range(6):
+            bc, bf = clean.next_batch(), chaos.next_batch()
+            np.testing.assert_array_equal(bc.blocks.all_nodes,
+                                          bf.blocks.all_nodes)
+            np.testing.assert_array_equal(bc.features, bf.features)
+            assert bf.prep_time_s >= bc.prep_time_s or not events
+
+    check()
+
+
+# -- serve plane: brownout ladder + shed/degrade accounting --------------------
+
+@pytest.fixture(scope="module")
+def serve_setup(graph_and_feats):
+    from repro.serve import TenantSpec, generate_stream
+    g, _ = graph_and_feats
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 512)).astype(np.float32)
+    reqs = generate_stream(
+        g.num_nodes, [TenantSpec(name="t0", deadline_s=3e-3, mean_seeds=8)],
+        offered_qps=500, n_requests=150, seed=3)
+    return g, feats, reqs
+
+
+def _serve(g, feats, reqs, **over):
+    from repro.serve import GNNServeConfig, GNNServeEngine
+    cfg = dict(seed=5, cache_lines=256)
+    cfg.update(over)
+    eng = GNNServeEngine(g, feats, GNNServeConfig(**cfg))
+    return eng.run(reqs), eng
+
+
+def test_brownout_controller_ladder():
+    from repro.serve import BrownoutController, GNNServeConfig
+    ctl = BrownoutController(GNNServeConfig(
+        brownout=True, brownout_degrade_at=2.0, brownout_stale_at=4.0,
+        brownout_shed_at=8.0, brownout_recover=0.7, brownout_alpha=1.0))
+    for _ in range(3):                          # establish the baseline
+        assert ctl.observe(1e-3, 1000) == 0
+    assert ctl.pressure == pytest.approx(1.0)
+    # 10x per-row pressure climbs ONE level per window, not all at once
+    assert ctl.observe(1e-2, 1000) == 1
+    assert ctl.observe(1e-2, 1000) == 2
+    assert ctl.observe(1e-2, 1000) == 3
+    assert ctl.observe(1e-2, 1000) == 3         # ladder saturates
+    # a stale-only window (nothing gathered) carries no signal
+    assert ctl.observe(0.0, 0) == 3
+    # recovery needs pressure BELOW recover * the threshold it climbed past
+    for _ in range(8):
+        ctl.observe(1e-3, 1000)
+    assert ctl.level == 0
+    assert ctl.level_trace[0] == (4, 1)
+
+
+def test_serve_fault_free_plane_is_bit_identical(serve_setup):
+    """A serve engine with the fault knobs at their defaults is the PR 7
+    engine: same records, same floats."""
+    g, feats, reqs = serve_setup
+    r0, _ = _serve(g, feats, reqs)
+    r1, _ = _serve(g, feats, reqs, fault_schedule=None, brownout=False)
+    assert len(r0.records) == len(r1.records)
+    for a, b in zip(r0.records, r1.records):
+        assert a.completion_s == b.completion_s
+        assert a.gather_s == b.gather_s
+        assert not a.stale and a.degraded_level == 0
+
+
+def test_serve_faults_never_touch_row_bytes(serve_setup):
+    """Brownout + controller change WHO is served and WHEN — never the
+    bytes of any served row (stale rows come from the same feature
+    matrix)."""
+    from repro.core import BrownoutEvent, FaultSchedule
+    g, feats, reqs = serve_setup
+    sched = FaultSchedule(events=(
+        BrownoutEvent(shard=0, start=3, end=10_000, multiplier=10.0),))
+    r, _ = _serve(g, feats, reqs, fault_schedule=sched, brownout=True,
+                  keep_features=True)
+    for rec in r.served:
+        np.testing.assert_array_equal(rec.features,
+                                      feats[rec.all_nodes])
+        if rec.stale:
+            assert rec.staleness_s > 0
+    assert r.n_stale_served > 0                 # the ladder reached level 2
+
+
+def test_serve_brownout_degrades_instead_of_missing(serve_setup):
+    from repro.core import BrownoutEvent, FaultSchedule
+    g, feats, reqs = serve_setup
+    sched = FaultSchedule(events=(
+        BrownoutEvent(shard=0, start=3, end=10_000, multiplier=10.0),))
+    r0, _ = _serve(g, feats, reqs)
+    rn, _ = _serve(g, feats, reqs, fault_schedule=sched)
+    rc, eng = _serve(g, feats, reqs, fault_schedule=sched, brownout=True)
+    assert eng.brownout.level_trace                 # the ladder moved
+    assert rc.n_degraded > 0
+    # the controller holds the survivor p99 under the un-mitigated one
+    assert rc.p99_s() < rn.p99_s()
+    assert rc.attainment() > rn.attainment()
+    assert rc.shed_fraction < 0.2
+
+
+def test_serve_result_shed_accounting(serve_setup):
+    """Satellite: shed / degraded / deadline-missed are DISTINCT buckets —
+    n_rejected splits by reason, served-but-late is never counted as
+    shed, and attainment covers offered load while goodput covers time."""
+    from repro.core import BrownoutEvent, FaultSchedule
+    g, feats, reqs = serve_setup
+    sched = FaultSchedule(events=(
+        BrownoutEvent(shard=0, start=3, end=10_000, multiplier=10.0),))
+    r, _ = _serve(g, feats, reqs, fault_schedule=sched, brownout=True)
+    assert r.n_rejected == r.n_shed_expired + r.n_shed_brownout
+    for rec in r.records:
+        if rec.rejected:
+            assert rec.shed_reason in ("expired", "brownout")
+            assert not rec.deadline_met         # shed produces no goodput
+        else:
+            assert rec.shed_reason is None
+    # served-but-late is its own bucket, disjoint from shed
+    assert r.n_deadline_missed == sum(
+        not rec.deadline_met for rec in r.served)
+    met = sum(rec.deadline_met for rec in r.records)
+    assert r.attainment() == pytest.approx(met / len(r.records))
+    assert r.goodput_qps() == pytest.approx(met / r.makespan_s)
+    assert r.n_stale_served <= r.n_degraded
