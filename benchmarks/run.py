@@ -1,12 +1,13 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows; `python -m benchmarks.run [--quick]`.  `--json [path]` is the CI
 # smoke mode: fig13 + fig14 + shard-scaling + fig7-sampling + serve-load +
-# adaptive + fault headline numbers as JSON (default BENCH_pr8.json) so the
-# perf trajectory is recorded per PR.  `--baseline PATH` compares the fresh
-# numbers against a committed earlier BENCH_*.json and exits non-zero if
-# the `gids` preset's e2e regressed — and, because every deterministic path
-# must stay bit-identical across the adaptive- and fault-plane PRs, the
-# gids numbers must match the baseline EXACTLY, not just within tolerance.
+# adaptive + fault + multi-host headline numbers as JSON (default
+# BENCH_pr9.json) so the perf trajectory is recorded per PR.  `--baseline
+# PATH` compares the fresh numbers against a committed earlier BENCH_*.json
+# and exits non-zero if the `gids` preset's e2e regressed — and, because
+# every deterministic path must stay bit-identical across the adaptive-,
+# fault-, and host-plane PRs, the gids numbers must match the baseline
+# EXACTLY, not just within tolerance.
 from __future__ import annotations
 
 import argparse
@@ -45,8 +46,8 @@ def check_baseline(payload: dict, baseline_path: str) -> None:
 
 def write_json_smoke(path: str, baseline: str | None = None) -> None:
     from benchmarks import (fig7_sampling, fig13_e2e, fig14_overlap,
-                            fig_adaptive, fig_faults, fig_serve_load,
-                            fig_shard_scaling)
+                            fig_adaptive, fig_faults, fig_hosts,
+                            fig_serve_load, fig_shard_scaling)
     payload = {
         "fig13_e2e": fig13_e2e.headline(),
         "fig14_overlap": fig14_overlap.headline(),
@@ -55,6 +56,7 @@ def write_json_smoke(path: str, baseline: str | None = None) -> None:
         "fig_serve_load": fig_serve_load.headline(),
         "fig_adaptive": fig_adaptive.headline(),
         "fig_faults": fig_faults.headline(),
+        "fig_hosts": fig_hosts.headline(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -134,6 +136,17 @@ def write_json_smoke(path: str, baseline: str | None = None) -> None:
             "within 1.5x of fault-free while shedding < 20% (got ratio "
             f"{faults['serve_ctl_p99_ratio']:.4f}x, shed "
             f"{faults['serve_shed_fraction']:.4f})")
+    hosts = payload["fig_hosts"]
+    if hosts["speedup_metis_co_vs_hash_indep_4hosts"] < 1.5:
+        raise SystemExit(
+            "HOST-PLACEMENT REGRESSION: metis-lite + co-partitioning must "
+            "beat hash + independent topology by >= 1.5x exposed prep at 4 "
+            "hosts (got "
+            f"{hosts['speedup_metis_co_vs_hash_indep_4hosts']:.4f}x)")
+    if not hosts["hosts1_bit_identical"]:
+        raise SystemExit(
+            "HOST-PLANE REGRESSION: the 1-host cluster must degenerate to "
+            "the single-host plane exactly — modelled prep floats diverged")
     if baseline:
         check_baseline(payload, baseline)
 
@@ -143,11 +156,12 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow E2E figures")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", nargs="?", const="BENCH_pr8.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr9.json",
                     default=None, metavar="PATH",
                     help="smoke mode: write fig13/fig14/shard-scaling/"
-                         "fig7-sampling/serve-load/adaptive/fault headline "
-                         "numbers to PATH (default BENCH_pr8.json) and exit")
+                         "fig7-sampling/serve-load/adaptive/fault/multi-host "
+                         "headline numbers to PATH (default BENCH_pr9.json) "
+                         "and exit")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="with --json: fail if the gids preset's e2e "
                          "regressed vs this earlier BENCH_*.json")
@@ -162,8 +176,8 @@ def main() -> None:
                             fig10_constant_buffer, fig11_window_buffering,
                             fig12_cache_size, fig13_e2e, fig14_overlap,
                             fig15_ladies, fig_adaptive, fig_faults,
-                            fig_serve_load, fig_shard_scaling, roofline,
-                            tables)
+                            fig_hosts, fig_serve_load, fig_shard_scaling,
+                            roofline, tables)
     suites = [
         ("tables", tables.main),
         ("fig3", fig3_request_rates.main),
@@ -180,6 +194,7 @@ def main() -> None:
         ("fig14_overlap", fig14_overlap.main),
         ("fig15", fig15_ladies.main),
         ("fig_shard_scaling", fig_shard_scaling.main),
+        ("fig_hosts", fig_hosts.main),
         ("roofline", roofline.main),
     ]
     if args.quick:

@@ -17,14 +17,17 @@ from .feature_store import (CoalescedReport, FeatureStore, GatherReport,
 from .feedback import (AmortizedCost, MigrationEvent, QuotaController,
                        RefreshEvent, ShardHealthMonitor, ShardRebalancer,
                        TopologyRefresher, TouchTable)
+from .hosts import (NIC_100GBE, NIC_400GBE, TPU_ICI, CoPartitionedPlacement,
+                    HostLinkSpec, HostShardTier, cut_edge_fraction,
+                    default_hosts, requester_hosts)
 from .pipeline import Batch, BatchPlan, GIDSDataLoader, LoaderConfig
 from .prefetch import PrefetchEngine, PrefetchStats
-from .sharding import (AdaptivePlacement, PlacementPolicy,
-                       ReplicatedPlacement, make_placement,
+from .sharding import (AdaptivePlacement, MetisLitePlacement,
+                       PlacementPolicy, ReplicatedPlacement, make_placement,
                        placement_names, register_placement)
 from .software_cache import CacheStats, WindowBufferedCache, run_trace
-from .storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO, SSDSpec,
-                          ShardedBurstResult, StorageTimeline,
+from .storage_sim import (INTEL_OPTANE, SAMSUNG_980PRO, HostBurstResult,
+                          SSDSpec, ShardedBurstResult, StorageTimeline,
                           coalesce_lines, coalesce_lines_by_shard,
                           model_burst, price_sharded_burst,
                           required_accesses, simulate_burst)
@@ -48,12 +51,17 @@ __all__ = [
     "AmortizedCost", "MigrationEvent", "QuotaController", "RefreshEvent",
     "ShardHealthMonitor", "ShardRebalancer", "TopologyRefresher",
     "TouchTable",
+    "NIC_100GBE", "NIC_400GBE", "TPU_ICI", "CoPartitionedPlacement",
+    "HostLinkSpec", "HostShardTier", "cut_edge_fraction", "default_hosts",
+    "requester_hosts",
     "Batch", "BatchPlan", "GIDSDataLoader", "LoaderConfig",
     "PrefetchEngine", "PrefetchStats",
-    "AdaptivePlacement", "PlacementPolicy", "ReplicatedPlacement",
+    "AdaptivePlacement", "MetisLitePlacement", "PlacementPolicy",
+    "ReplicatedPlacement",
     "make_placement", "placement_names", "register_placement",
     "CacheStats", "WindowBufferedCache", "run_trace", "INTEL_OPTANE",
-    "SAMSUNG_980PRO", "SSDSpec", "ShardedBurstResult", "StorageTimeline",
+    "SAMSUNG_980PRO", "HostBurstResult", "SSDSpec", "ShardedBurstResult",
+    "StorageTimeline",
     "coalesce_lines", "coalesce_lines_by_shard", "model_burst",
     "price_sharded_burst", "required_accesses", "simulate_burst",
     "ConstantBufferTier", "DeviceCacheTier", "GatherPlan", "KVSlotTier",

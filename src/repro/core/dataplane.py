@@ -73,6 +73,12 @@ class BuildContext:
     # around the placement policy) so failover/hedged reads have somewhere
     # to go; 1 = unreplicated, bit-identical to the bare policy
     replication_factor: int = 1
+    # multi-host plane knobs (core/hosts.py): shards become hosts with an
+    # interconnect each; co_partition drives features AND edge pages off
+    # one placement decision; host_link overrides the default 100GbE spec
+    n_hosts: int = 1
+    co_partition: bool = True
+    host_link: Any = None             # HostLinkSpec | per-host sequence
     # serve-engine knobs (KV slot pool)
     slots: int = 0
     bytes_per_slot: int = 0
@@ -82,7 +88,8 @@ class BuildContext:
 
     _KNOBS = ("cache_lines", "cache_ways", "window_depth", "cbuf_fraction",
               "cbuf_selection", "seed", "n_shards", "placement",
-              "replication_factor", "tenants", "tenant_quotas")
+              "replication_factor", "n_hosts", "co_partition", "host_link",
+              "tenants", "tenant_quotas")
 
     def absorb(self, config: Any) -> "BuildContext":
         for k in self._KNOBS:
@@ -173,13 +180,47 @@ def _make_sharded_storage(ctx: BuildContext, n_shards=None, placement=None,
         degrees = ctx.graph.degrees()
     policy = make_placement(placement, n_shards,
                             num_nodes=len(ctx.features), degrees=degrees,
-                            seed=ctx.seed)
+                            graph=ctx.graph, seed=ctx.seed)
     if ctx.replication_factor > 1:
         # k-way replication for the fault plane; validates loudly (k vs
         # n_shards) at build time rather than at first failover
         policy = ReplicatedPlacement(policy, ctx.replication_factor)
     specs = ctx.shard_specs if specs is None else specs
     return ShardedStorageTier(ctx.features, policy, specs=specs)
+
+
+@register_tier_kind("host_storage")
+def _make_host_storage(ctx: BuildContext, n_hosts=None, placement=None,
+                       co_partition=None, hosts=None) -> Tier:
+    """The storage backstop partitioned across a CLUSTER (core/hosts.py):
+    each shard is a host — interconnect + local SSD — and the placement
+    decision, co-partitioned by default, drives both the feature rows and
+    the CSR edge pages of every node.  Replication (if any) spreads copies
+    across hosts as failure domains."""
+    import numpy as np
+
+    from .hosts import HostShardTier
+    from .sharding import ReplicatedPlacement, make_placement
+    if ctx.features is None:
+        raise ValueError("host_storage tier needs features in the "
+                         "BuildContext")
+    n_hosts = ctx.n_hosts if n_hosts is None else n_hosts
+    placement = ctx.placement if placement is None else placement
+    co = ctx.co_partition if co_partition is None else co_partition
+    hosts = ctx.host_link if hosts is None else hosts
+    degrees = None
+    if ctx.graph is not None and hasattr(ctx.graph, "degrees"):
+        degrees = ctx.graph.degrees()
+    policy = make_placement(placement, n_hosts,
+                            num_nodes=len(ctx.features), degrees=degrees,
+                            graph=ctx.graph, seed=ctx.seed)
+    if ctx.replication_factor > 1:
+        # hosts are failure domains: replica j of a row must land on a
+        # DIFFERENT host, so a whole-host outage cannot lose data
+        policy = ReplicatedPlacement(policy, ctx.replication_factor,
+                                     failure_domains=np.arange(n_hosts))
+    return HostShardTier(ctx.features, policy, hosts=hosts,
+                         graph=ctx.graph, co_partition=co, seed=ctx.seed)
 
 
 @register_tier_kind("tenant_cache")
@@ -452,6 +493,30 @@ DataPlaneSpec.register(DataPlaneSpec(
                 "line coalescing is shard-local ((shard, line) keys), and "
                 "the window prices as per-shard bursts completing at the "
                 "max over shards (straggler telemetry included)."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="gids-hosts",
+    tiers=(tier("window_cache"), tier("constant_buffer"),
+           tier("host_storage")),
+    pricing="overlapped", lookahead=True,
+    description="GIDS over a multi-host cluster (BuildContext.n_hosts; "
+                "core/hosts.py): each shard is a host with its own link + "
+                "local SSD, one co-partitioned placement decision drives "
+                "features and CSR edge pages, and rows requested across "
+                "hosts pay the serving host's link transit on top of its "
+                "local drain (max-over-hosts completion)."))
+
+DataPlaneSpec.register(DataPlaneSpec(
+    name="gids-hosts-merged",
+    tiers=(tier("window_cache"), tier("constant_buffer"),
+           tier("host_storage")),
+    pricing="overlapped", lookahead=True, merge_execute=True,
+    description="Merged-window execution over the host cluster: two-level "
+                "coalescing — the window dedups per host ((shard, line) "
+                "keys), then each host's remote lines ship 4 KB-granular "
+                "over its link — priced as per-host bursts completing at "
+                "the max over hosts.  n_hosts=1 is bit-identical to "
+                "gids-merged."))
 
 DataPlaneSpec.register(DataPlaneSpec(
     name="gids-topo",

@@ -46,7 +46,12 @@ class GatherReport:
     On a sharded storage namespace `shard_rows` carries the per-shard split
     of this report's storage-bound requests (`n_shards` entries summing to
     `n_storage`); empty on an unsharded plane.  Per-shard pricing and the
-    straggler/imbalance telemetry key off it."""
+    straggler/imbalance telemetry key off it.
+
+    On a multi-host plane (core/hosts.py) `remote_rows` additionally splits
+    out, per SERVING shard, the storage rows requested by a different host
+    — the traffic that rides each host's link in
+    `StorageTimeline.price_host_burst`.  Empty everywhere else."""
 
     n_requests: int
     bytes_per_row: int
@@ -55,6 +60,7 @@ class GatherReport:
     tier_counts: tuple[int, ...]
     n_shards: int = 1
     shard_rows: tuple[int, ...] = ()
+    remote_rows: tuple[int, ...] = ()
 
     def _class_count(self, latency_class: str) -> int:
         return sum(n for c, n in zip(self.tier_classes, self.tier_counts)
@@ -89,16 +95,18 @@ class GatherReport:
     @classmethod
     def from_plan(cls, plan: GatherPlan, bytes_per_row: int) -> "GatherReport":
         ns = plan.n_shards
-        shard_rows = ()
+        shard_rows, remote_rows = (), ()
         if ns > 1:
             shard_rows = tuple(int(c) for c in plan.shard_counts())
+            if plan.remote is not None:
+                remote_rows = tuple(int(c) for c in plan.remote_counts())
         return cls(
             n_requests=len(plan.node_ids),
             bytes_per_row=bytes_per_row,
             tier_names=tuple(t.name for t in plan.tiers),
             tier_classes=tuple(t.latency_class for t in plan.tiers),
             tier_counts=tuple(int(c) for c in plan.counts()),
-            n_shards=ns, shard_rows=shard_rows,
+            n_shards=ns, shard_rows=shard_rows, remote_rows=remote_rows,
         )
 
 
@@ -129,6 +137,11 @@ class CoalescedReport(GatherReport):
                       n_storage_lines); empty on an unsharded plane.
                       Pairs with the inherited `shard_rows` to drive the
                       max-over-shards burst pricing
+    remote_lines:     host planes only — per serving host, the coalesced
+                      4 KB IOs requested by OTHER hosts: the second level
+                      of the two-level merge (dedup per host first, then
+                      line-granular link transit per host-local queue).
+                      Feeds `price_host_burst`'s link term
     """
 
     window_batches: int = 1
@@ -138,6 +151,7 @@ class CoalescedReport(GatherReport):
     n_storage_unique: int = 0
     n_storage_lines: int = 0
     shard_lines: tuple[int, ...] = ()
+    remote_lines: tuple[int, ...] = ()
 
     @property
     def dedup_factor(self) -> float:
@@ -264,6 +278,7 @@ class TieredFeatureStore:
         shard = plan.shard if plan.shard is not None \
             else np.where(storage_mask, 0, -1).astype(np.int16)
         shard_rows, shard_lines = (), ()
+        remote_rows, remote_lines = (), ()
         if n_shards > 1:
             shard_rows = tuple(int(c) for c in np.bincount(
                 shard[storage_mask], minlength=n_shards))
@@ -272,6 +287,17 @@ class TieredFeatureStore:
                 bytes_per_row, io_bytes)
             shard_lines = tuple(int(c) for c in per_shard)
             n_storage_lines = int(per_shard.sum())
+            if plan.remote is not None and plan.remote.any():
+                # two-level merge, level 2: of each host's deduplicated
+                # line set, the lines requested by OTHER hosts transit its
+                # link (level 1 — the (shard, line) dedup above — already
+                # collapsed duplicate remote rows into one line)
+                rm = storage_mask & plan.remote
+                remote_rows = tuple(int(c) for c in np.bincount(
+                    shard[rm], minlength=n_shards))
+                remote_lines = tuple(int(c) for c in coalesce_lines_by_shard(
+                    unique[rm], shard[rm], n_shards, bytes_per_row,
+                    io_bytes))
         else:
             n_storage_lines = coalesce_lines(unique[storage_mask],
                                              bytes_per_row, io_bytes)
@@ -283,6 +309,7 @@ class TieredFeatureStore:
             n_storage_unique=n_storage_unique,
             n_storage_lines=n_storage_lines,
             shard_lines=shard_lines,
+            remote_lines=remote_lines,
         )
         tier_meta = dict(
             bytes_per_row=bytes_per_row,
@@ -293,7 +320,7 @@ class TieredFeatureStore:
         window_report = CoalescedReport(
             n_requests=merged.n_unique,
             tier_counts=tuple(int(c) for c in plan.counts()),
-            shard_rows=shard_rows,
+            shard_rows=shard_rows, remote_rows=remote_rows,
             **tier_meta, **window_stats)
 
         rows_list, reports = [], []
@@ -302,15 +329,19 @@ class TieredFeatureStore:
             rows_list.append(rows[inv])
             counts = np.bincount(plan.assignment[inv],
                                  minlength=len(plan.tiers))
-            batch_shard_rows = ()
+            batch_shard_rows, batch_remote_rows = (), ()
             if n_shards > 1:
                 bsm = shard[inv] >= 0
                 batch_shard_rows = tuple(int(c) for c in np.bincount(
                     shard[inv][bsm], minlength=n_shards))
+                if plan.remote is not None:
+                    brm = bsm & plan.remote[inv]
+                    batch_remote_rows = tuple(int(c) for c in np.bincount(
+                        shard[inv][brm], minlength=n_shards))
             reports.append(CoalescedReport(
                 n_requests=len(inv),
                 tier_counts=tuple(int(c) for c in counts),
-                shard_rows=batch_shard_rows,
+                shard_rows=batch_shard_rows, remote_rows=batch_remote_rows,
                 **tier_meta, **window_stats))
         self.last_plan = plan
         return rows_list, reports, window_report

@@ -36,6 +36,13 @@ All three are *virtual-time* controllers: decisions are functions of priced
 telemetry, never the wall clock, so adaptive runs stay bit-reproducible —
 and bit-identical to their static twins until the first commit (the
 adaptive policies seed from the same static priors).
+
+On a multi-host plane (core/hosts.py) the same loop applies unchanged:
+`CoPartitionedPlacement.__getattr__` forwards the adaptive seam, and
+`StorageTimeline.price_migration` adds a link-transit term when
+`timeline.host_specs` is set — a cross-host row move pays the interconnect,
+not just the SSD queues, so the rebalancer's bet is priced against the real
+distributed cost.
 """
 from __future__ import annotations
 

@@ -51,6 +51,19 @@ tier's per-shard `SSDSpec`s into `StorageTimeline.shard_specs`, and
 imbalance).  Features, blocks, and per-tier counts are bit-identical to the
 unsharded plane — only the storage pricing and shard telemetry change.
 
+On a *multi-host* plane (`gids-hosts`, `gids-hosts-merged`; core/hosts.py)
+the backstop is a `HostShardTier`: the same shard vocabulary at host
+granularity.  Each shard is a host (`HostLinkSpec` — interconnect + local
+SSD), one co-partitioned placement decision drives the feature rows AND
+the CSR edge pages of every node, and each storage-bound request carries a
+remote bit (serving host != requesting host) through the `GatherPlan`.
+Pricing routes through `StorageTimeline.price_host_burst`: each host's
+local queue drain plus the link transit of the 4 KB lines other hosts
+requested from it, completing at the max over hosts.  Features, blocks,
+and per-tier counts are bit-identical to the single-host plane for ANY
+host count and placement — hosts change pricing and telemetry, never
+bytes — and `n_hosts=1` prices bit-identically too.
+
 On a *topology* plane (`DataPlaneSpec.topology`, presets `gids-topo` /
 `gids-topo-merged`) stage 1 itself is PRICED: sampling runs against a
 `TieredTopologyStore` (core/topology.py) whose CSR edge pages are placed
@@ -133,6 +146,17 @@ class LoaderConfig:
     # placement policy (core/sharding.py) decides node -> shard
     n_shards: int = 1
     placement: str = "hash"
+    # multi-host planes (gids-hosts / gids-hosts-merged; core/hosts.py):
+    # the storage backstop partitions across n_hosts HOSTS — each with its
+    # own interconnect link and local SSD — under the same placement
+    # registry ("metis-lite" adds min-cut partitioning over the CSR).
+    # co_partition=True (default) drives a node's feature rows AND its CSR
+    # edge pages off ONE placement decision; False stripes the adjacency
+    # independently (the double-network-hop baseline).  host_link overrides
+    # the 100GbE default (a HostLinkSpec, or one per host)
+    n_hosts: int = 1
+    co_partition: bool = True
+    host_link: "object | None" = None
     # topology plane (gids-topo / gids-topo-merged): fraction of the CSR
     # edge pages resident in GPU memory / pinned host memory (remainder is
     # storage-backed), and which registered admission policy
@@ -260,6 +284,11 @@ class GIDSDataLoader:
                     "sharded plane set n_shards (one queue per SSD) and "
                     "leave n_ssd=1")
             self.timeline.shard_specs = backstop.resolve_shard_specs(ssd)
+        # multi-host backstop (core/hosts.py): the timeline additionally
+        # needs each host's link spec — sharded bursts then price through
+        # price_host_burst, composing local drains with link transit
+        if hasattr(backstop, "resolve_hosts"):
+            self.timeline.host_specs = backstop.resolve_hosts(ssd)
         # topology plane: sampling reads a tiered adjacency store and is
         # priced per hop (plan_next becomes a priced stage).  The store owns
         # its own StorageTimeline — the edge-page namespace drains separate
@@ -273,12 +302,23 @@ class GIDSDataLoader:
                     "scores whole frontier columns, not page-local "
                     "adjacency reads, so its storage traffic is not "
                     "page-priceable")
+            if hasattr(backstop, "topology_page_shard") \
+                    and backstop.n_shards > 1:
+                # co-partitioned cluster: the feature backstop's OWN host
+                # table places the CSR edge pages — one placement decision
+                # drives both namespaces, not two independent stripes
+                topo_kwargs = dict(
+                    n_shards=backstop.n_shards,
+                    page_shard=backstop.topology_page_shard(),
+                    shard_specs=backstop.resolve_shard_specs(ssd))
+            else:
+                topo_kwargs = dict(n_shards=cfg.n_shards,
+                                   placement=cfg.placement)
             self.topo = TieredTopologyStore.from_graph(
                 graph, admission=cfg.topo_admission,
                 gpu_fraction=cfg.topo_gpu_fraction,
                 host_fraction=cfg.topo_host_fraction,
-                ssd=ssd, n_ssd=cfg.n_ssd, n_shards=cfg.n_shards,
-                placement=cfg.placement, seed=cfg.seed)
+                ssd=ssd, n_ssd=cfg.n_ssd, seed=cfg.seed, **topo_kwargs)
         # adaptive data plane: an adaptive placement/admission gets its
         # feedback controller (core/feedback.py).  Both tick once per priced
         # burst in _feedback_step; a static plane carries None and pays
@@ -316,6 +356,12 @@ class GIDSDataLoader:
                 cfg.fault_schedule, n_queue_shards,
                 replication=cfg.replication_factor)
             self.timeline.injector = self.fault_injector
+            if self.topo is not None:
+                # the topology namespace drains its own queues, so it gets
+                # its OWN injector (independent burst counter) over the
+                # same schedule: edge-page reads see brownouts/outages too
+                self.topo.timeline.injector = FaultInjector(
+                    cfg.fault_schedule, self.topo.n_shards)
         if n_queue_shards > 1 and (cfg.fault_schedule is not None
                                    or cfg.replication_factor > 1):
             self.health = ShardHealthMonitor(n_queue_shards)
@@ -553,6 +599,9 @@ class GIDSDataLoader:
         fault_state = {}
         if self.fault_injector is not None:
             fault_state["injector"] = self.fault_injector.state_dict()
+        if self.topo is not None and self.topo.timeline.injector is not None:
+            fault_state["topo_injector"] = \
+                self.topo.timeline.injector.state_dict()
         if self.health is not None:
             fault_state["monitor"] = self.health.state_dict()
         if fault_state:
@@ -584,6 +633,17 @@ class GIDSDataLoader:
             self.fault_injector.load_state_dict(fault_state["injector"])
         elif self.fault_injector is not None:
             self.fault_injector.reset()
+        topo_injector = None if self.topo is None \
+            else self.topo.timeline.injector
+        if "topo_injector" in fault_state:
+            if topo_injector is None:
+                raise ValueError(
+                    "checkpoint carries a topology-plane fault-injector "
+                    "state but this plane has none — resume with the same "
+                    "fault_schedule on the same topology preset")
+            topo_injector.load_state_dict(fault_state["topo_injector"])
+        elif topo_injector is not None:
+            topo_injector.reset()
         if "monitor" in fault_state:
             if self.health is None:
                 raise ValueError(

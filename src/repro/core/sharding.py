@@ -100,10 +100,11 @@ _PLACEMENTS: dict[str, PlacementFactory] = {}
 
 def register_placement(name: str) -> Callable[[PlacementFactory],
                                               PlacementFactory]:
-    """Register a factory ``(n_shards, *, num_nodes, degrees, seed) ->
-    PlacementPolicy`` under `name`.  The factory receives every context
+    """Register a factory ``(n_shards, *, num_nodes, degrees, graph, seed)
+    -> PlacementPolicy`` under `name`.  The factory receives every context
     keyword and ignores what it does not need, so new policies (locality-,
-    score-, or host-topology-aware) slot in without touching callers."""
+    score-, or host-topology-aware) slot in without touching callers —
+    `metis-lite` below consumes the full CSR via `graph`."""
     def deco(fn: PlacementFactory) -> PlacementFactory:
         _PLACEMENTS[name] = fn
         return fn
@@ -115,14 +116,15 @@ def placement_names() -> tuple[str, ...]:
 
 
 def make_placement(name: str, n_shards: int, *, num_nodes: int | None = None,
-                   degrees: np.ndarray | None = None,
+                   degrees: np.ndarray | None = None, graph=None,
                    seed: int = 0) -> PlacementPolicy:
     try:
         factory = _PLACEMENTS[name]
     except KeyError:
         raise KeyError(f"unknown placement policy {name!r}; registered: "
                        f"{placement_names()}") from None
-    return factory(n_shards, num_nodes=num_nodes, degrees=degrees, seed=seed)
+    return factory(n_shards, num_nodes=num_nodes, degrees=degrees,
+                   graph=graph, seed=seed)
 
 
 # -- the built-in policies -----------------------------------------------------
@@ -327,6 +329,169 @@ def _make_adaptive(n_shards: int, *, degrees=None, **_ctx
     return AdaptivePlacement(n_shards, degrees)
 
 
+class MetisLitePlacement(_PolicyBase):
+    """Greedy min-cut partitioning over the CSR — the distributed plane's
+    locality policy (a METIS stand-in: BFS-grown balanced partitions, no
+    external solver).
+
+    Partitions are grown one at a time.  Each starts from the highest-
+    degree unassigned seed and repeatedly absorbs the unassigned nodes
+    with positive *gain* — the count of already-absorbed nodes pointing at
+    them — best-gain-first (stable order), up to the balance target
+    ``ceil(n / n_shards)``; when the frontier dries up (disconnected
+    remainder) the next seed restarts it.  Growing along out-edges is what
+    makes the policy pay off under the requester model (core/hosts.py): a
+    node joins the partition holding most of its IN-neighbours, which is
+    exactly the host that will request its feature row.
+
+    Fully deterministic (argsort/argmax tie-breaks are positional), every
+    partition is capped at the balance target, and the assignment is a
+    materialized table that rides `state_dict` like `degree`'s."""
+
+    name = "metis-lite"
+
+    def __init__(self, n_shards: int, graph=None, indptr=None, indices=None,
+                 num_nodes: int | None = None):
+        super().__init__(n_shards)
+        if graph is not None:
+            indptr = getattr(graph, "indptr", indptr)
+            indices = getattr(graph, "indices", indices)
+        if indptr is None or indices is None:
+            raise ValueError(
+                "metis-lite placement needs the CSR adjacency — build the "
+                "plane with a graph in context (the loader passes it)")
+        indptr = np.asarray(indptr, np.int64)
+        indices = np.asarray(indices, np.int64)
+        n = len(indptr) - 1
+        if num_nodes is not None and int(num_nodes) != n:
+            raise ValueError(
+                f"metis-lite graph has {n} nodes but the namespace has "
+                f"{num_nodes} rows — co-partitioning needs one host table "
+                "covering both")
+        self.table = _grow_partitions(indptr, indices, self.n_shards)
+
+    def shard_of(self, node_ids: np.ndarray) -> np.ndarray:
+        return self.table[self._ids(node_ids)]
+
+    def state_dict(self) -> dict:
+        return {**super().state_dict(), "table": self.table.copy()}
+
+    def load_state_dict(self, state: dict) -> None:
+        super().load_state_dict(state)
+        table = np.asarray(state["table"], np.int16)
+        if table.shape != self.table.shape:
+            raise ValueError(
+                f"{self.name} placement table shape {table.shape} does not "
+                f"match namespace {self.table.shape}")
+        self.table = table.copy()
+
+
+def _flat_adjacency(indptr: np.ndarray, take: np.ndarray,
+                    indices: np.ndarray) -> np.ndarray:
+    """All of `take`'s neighbours in one flat gather (CSR slice concat)."""
+    counts = np.diff(indptr)[take]
+    total = int(counts.sum())
+    if not total:
+        return indices[:0]
+    flat = np.repeat(indptr[take] - (np.cumsum(counts) - counts),
+                     counts) + np.arange(total)
+    return indices[flat]
+
+
+def _grow_partitions(indptr: np.ndarray, indices: np.ndarray,
+                     k: int) -> np.ndarray:
+    """The metis-lite growth loop: k balanced partitions, (N,) int16.
+
+    Growth gain counts edges in BOTH directions (a candidate's edges into
+    the growing partition plus the partition's edges into the candidate —
+    the transpose CSR is built once), because the cut the multi-host plane
+    pays for is symmetric: a cross-host edge costs a remote topology page
+    on the sampling side and a remote feature row on the gather side
+    (`requester_hosts`, core/hosts.py).
+
+    Partitions are balanced by EDGE MASS (1 + in-degree + out-degree per
+    node — METIS vertex weights), not node count: neighbor sampling lands
+    on a node in proportion to its degree, so equal node counts on a
+    power-law graph would pile nearly all sampled traffic onto whichever
+    host drew the hub core and its SSD queue would straggle every burst.
+
+    All k partitions grow ROUND-ROBIN, one absorption chunk each per
+    round, from k distinct seeds.  Sequential growth would let partition
+    0 harvest the tightest cluster and leave the last partition a bin of
+    leftovers that requests everything remotely — interleaving keeps both
+    the cut and the remote-serving load spread across hosts."""
+    n = len(indptr) - 1
+    table = np.full(n, -1, np.int16)
+    if k <= 1 or n == 0:
+        table[:] = 0
+        return table
+    indptr = np.asarray(indptr, np.int64)
+    indices = np.asarray(indices, np.int64)
+    # transpose CSR: r_indices[r_indptr[u]:r_indptr[u+1]] = in-neighbours
+    outdeg = np.diff(indptr)
+    owner = np.repeat(np.arange(n, dtype=np.int64), outdeg)
+    order = np.argsort(indices, kind="stable")
+    r_indices = owner[order]
+    r_indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(np.bincount(indices, minlength=n), out=r_indptr[1:])
+    deg = outdeg + np.diff(r_indptr)  # total degree seeds the densest hub
+    w = 1 + deg  # per-node mass: expected sampled traffic, never zero
+    target = -(-int(w.sum()) // k)  # ceil: the mass cap per partition
+    gains = np.zeros((k, n), np.int64)  # per-partition: edges touching p
+    masses = np.zeros(k, np.int64)
+    active = True
+    while active:
+        active = False
+        for p in range(k):
+            if masses[p] >= target:
+                continue
+            gain = gains[p]
+            cand = np.nonzero((table == -1) & (gain > 0))[0]
+            if len(cand) == 0:
+                unassigned = np.nonzero(table == -1)[0]
+                if len(unassigned) == 0:
+                    continue
+                # (re)seed: densest unassigned node anchors the partition
+                take = unassigned[np.argmax(deg[unassigned])][None]
+            else:
+                # absorb majority-internal candidates in bulk; when the
+                # frontier is only weakly attached (gain 1-2 via stray
+                # cross-cluster edges), cross it a few best-ratio nodes at
+                # a time instead of flooding — raw gain > 0 would leak the
+                # partition through every rewired edge and shred the cut
+                ratio = gain[cand] / deg[cand]
+                strong = ratio >= 0.5
+                if strong.any():
+                    cand = cand[strong]
+                    order = np.argsort(-gain[cand], kind="stable")
+                else:
+                    order = np.argsort(-ratio, kind="stable")[:32]
+                fill = np.cumsum(w[cand[order]])
+                fit = fill <= target - masses[p]
+                fit[0] = True  # always absorb the best candidate
+                take = cand[order[fit]]
+            table[take] = p
+            masses[p] += int(w[take].sum())
+            np.add.at(gain, _flat_adjacency(indptr, take, indices), 1)
+            np.add.at(gain, _flat_adjacency(r_indptr, take, r_indices), 1)
+            active = True
+    leftover = np.nonzero(table == -1)[0]
+    if len(leftover):
+        # mass overshoot can exhaust later partitions' budgets: pack the
+        # remainder onto the lightest partitions deterministically
+        for v in leftover[np.argsort(-w[leftover], kind="stable")]:
+            dest = int(np.argmin(masses))
+            table[v] = dest
+            masses[dest] += w[v]
+    return table
+
+
+@register_placement("metis-lite")
+def _make_metis_lite(n_shards: int, *, graph=None, num_nodes=None, **_ctx
+                     ) -> MetisLitePlacement:
+    return MetisLitePlacement(n_shards, graph=graph, num_nodes=num_nodes)
+
+
 class ReplicatedPlacement:
     """k-way replication wrapped around ANY registered placement policy.
 
@@ -346,7 +511,8 @@ class ReplicatedPlacement:
     an adaptive base keeps its `table`/`touches`/`plan_rebalance` seam and
     the `ShardRebalancer` works unchanged."""
 
-    def __init__(self, base: PlacementPolicy, replication_factor: int):
+    def __init__(self, base: PlacementPolicy, replication_factor: int,
+                 failure_domains=None):
         k = int(replication_factor)
         name = getattr(base, "name", "placement")
         # fail loudly at construction: a bad replica map discovered at
@@ -369,24 +535,66 @@ class ReplicatedPlacement:
         self.replication_factor = k
         self.n_shards = base.n_shards
         self.name = f"replicated({name})x{k}"
+        # fault-aware spread: `failure_domains[s]` names the domain (host,
+        # rack, ...) shard s lives in, and replica j walks s+1, s+2, ...
+        # skipping shards whose domain is already used — so no two copies
+        # of a row share a domain and a whole-domain outage cannot lose
+        # data.  With None, or all-distinct domains (each HOST its own
+        # domain — the core/hosts.py plane), the walk degenerates to the
+        # chained-declustering formula above, bit-identically.
+        self.failure_domains = None
+        self._replica_map = None
+        if failure_domains is not None:
+            domains = np.asarray(failure_domains, np.int64)
+            if domains.shape != (self.n_shards,):
+                raise ValueError(
+                    f"{self.name} placement: failure_domains shape "
+                    f"{domains.shape} does not match {self.n_shards} shards")
+            if len(np.unique(domains)) < k:
+                raise ValueError(
+                    f"{self.name} placement: only "
+                    f"{len(np.unique(domains))} failure domain(s) for "
+                    f"replication factor {k} — copies of one row would "
+                    "share a domain and die together")
+            self.failure_domains = domains
+            rep = np.empty((self.n_shards, k), np.int64)
+            for s in range(self.n_shards):
+                rep[s, 0] = s
+                used = {int(domains[s])}
+                j, step = 1, 1
+                while j < k:
+                    t = (s + step) % self.n_shards
+                    if int(domains[t]) not in used:
+                        rep[s, j] = t
+                        used.add(int(domains[t]))
+                        j += 1
+                    step += 1
+            self._replica_map = rep
 
     def shard_of(self, node_ids: np.ndarray) -> np.ndarray:
         return self.base.shard_of(node_ids)
 
     def replica_shards(self, shard: int) -> tuple[int, ...]:
         """The replica queues for primary shard `shard` (excludes it)."""
+        if self._replica_map is not None:
+            return tuple(int(t) for t in self._replica_map[int(shard), 1:])
         return tuple((int(shard) + j) % self.n_shards
                      for j in range(1, self.replication_factor))
 
     def replicas_of(self, node_ids: np.ndarray) -> np.ndarray:
         """``(len(node_ids), k)`` shard matrix; column 0 is the primary."""
         primary = np.asarray(self.base.shard_of(node_ids), np.int64)
+        if self._replica_map is not None:
+            return self._replica_map[primary]
         offsets = np.arange(self.replication_factor, dtype=np.int64)
         return (primary[:, None] + offsets[None, :]) % self.n_shards
 
     def state_dict(self) -> dict:
+        domains = None if self.failure_domains is None \
+            else self.failure_domains.copy()
         return {"name": self.name, "n_shards": self.n_shards,
                 "replication_factor": self.replication_factor,
+                "failure_domains": domains,
                 "base": self.base.state_dict()}
 
     def load_state_dict(self, state: dict) -> None:
@@ -398,6 +606,15 @@ class ReplicatedPlacement:
                 f"{state.get('name')!r} (x{k}) does not match "
                 f"x{self.replication_factor} — failover would route reads "
                 "to shards that never held the replica")
+        saved = state.get("failure_domains", self.failure_domains)
+        ours = self.failure_domains
+        if (saved is None) != (ours is None) or (
+                ours is not None
+                and not np.array_equal(np.asarray(saved), ours)):
+            raise ValueError(
+                f"{self.name} placement: checkpoint failure domains do not "
+                "match — the replica map would route failover reads to "
+                "shards that never held the copy")
         self.base.load_state_dict(state["base"])
 
     def __getattr__(self, attr: str):

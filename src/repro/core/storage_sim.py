@@ -212,6 +212,29 @@ class ShardedBurstResult:
         return self.elapsed_s / mean if mean > 0 else 1.0
 
 
+@dataclasses.dataclass(frozen=True)
+class HostBurstResult(ShardedBurstResult):
+    """A sharded burst priced at HOST granularity (core/hosts.py): each
+    shard is a host whose drain composes its LOCAL storage queue with the
+    link transit of the 4 KB lines other hosts requested from it.
+    `per_shard_s` already includes the link term — `elapsed_s`, straggler
+    and imbalance telemetry therefore see network skew, not just device
+    skew.  `local_s`/`link_s` split each host's drain into the two
+    components, and `local_burst` keeps the pre-link result (including any
+    `FaultedBurstResult` retry/failover telemetry) intact."""
+
+    link_s: tuple[float, ...] = ()
+    local_s: tuple[float, ...] = ()
+    remote_lines: tuple[int, ...] = ()
+    local_burst: ShardedBurstResult | None = None
+
+    @property
+    def remote_fraction(self) -> float:
+        """Share of this burst's 4 KB lines that crossed a host link."""
+        lines = sum(self.per_shard_lines)
+        return sum(self.remote_lines) / lines if lines else 0.0
+
+
 def price_sharded_burst(specs, shard_rows, shard_lines, bytes_per_row: int,
                         io_bytes: int = IO_BYTES,
                         shard_outstanding=None) -> ShardedBurstResult:
@@ -294,6 +317,11 @@ class StorageTimeline:
         self.spec, self.n_ssd = spec, n_ssd
         self.shard_specs = tuple(shard_specs) if shard_specs else None
         self.last_shard_burst: ShardedBurstResult | None = None
+        # multi-host plane (core/hosts.py): when the loader wires a tuple of
+        # HostLinkSpec here, sharded bursts route through `price_host_burst`
+        # — each shard is a host and remote lines pay its link; None keeps
+        # every price on the single-host path
+        self.host_specs = None
         # fault plane (core/faults.py): when a FaultInjector is attached,
         # every priced storage burst ticks its schedule and faulted bursts
         # are re-priced with retries / failover / hedging; None (the
@@ -310,6 +338,58 @@ class StorageTimeline:
         specs = self.shard_specs or (self.spec,) * burst.n_shards
         return self.injector.price_burst(specs, burst, bytes_per_row,
                                          io_bytes)
+
+    def price_host_burst(self, shard_rows, shard_lines, bytes_per_row: int,
+                         io_bytes: int = IO_BYTES, shard_outstanding=None,
+                         remote_lines=None) -> HostBurstResult:
+        """Price one burst over a CLUSTER (core/hosts.py): shard h is a
+        host, whose drain composes its local storage burst with a link-
+        transit term, and the burst completes at the max over hosts.
+
+        Each host first drains its local queue exactly like
+        `price_sharded_burst` (same per-queue Eq. 2-3 efficiency, same line
+        cap, same fault adjustment), then ships the `remote_lines[h]` 4 KB
+        lines that OTHER hosts requested from it over its own link:
+
+            t_h = t_local_h + (rtt_h + remote_lines[h] * io / link_bw_h)
+
+        with the link term added only when remote lines exist — a host
+        serving purely local traffic prices bit-identically to the single-
+        host sharded path (float-for-float: `t + 0.0` is never computed).
+        A 1-host cluster therefore reproduces the PR 8 plane exactly, and
+        the metis-lite-vs-hash benchmark measures exactly the cross-host
+        line traffic the placement was supposed to remove."""
+        hosts = self.host_specs
+        if hosts is None:
+            raise ValueError(
+                "price_host_burst needs host_specs wired — only host-"
+                "storage planes (core/hosts.py) price over links")
+        specs = self.shard_specs or tuple(
+            (h.ssd if h.ssd is not None else self.spec) for h in hosts)
+        local = price_sharded_burst(specs, shard_rows, shard_lines,
+                                    bytes_per_row, io_bytes,
+                                    shard_outstanding)
+        local = self._fault_adjust(local, bytes_per_row, io_bytes)
+        if remote_lines is None or len(tuple(remote_lines)) == 0:
+            remote_lines = (0,) * local.n_shards
+        remote_lines = tuple(int(r) for r in remote_lines)
+        if not (len(hosts) == local.n_shards == len(remote_lines)):
+            raise ValueError(
+                f"host arity mismatch: {len(hosts)} hosts, "
+                f"{local.n_shards} queues, {len(remote_lines)} remote "
+                "line counts")
+        link_s = tuple(
+            (h.link_rtt_s + r * io_bytes / h.link_bw) if r > 0 else 0.0
+            for h, r in zip(hosts, remote_lines))
+        per_host_s = tuple(t if l == 0.0 else t + l
+                           for t, l in zip(local.per_shard_s, link_s))
+        return HostBurstResult(
+            per_shard_s=per_host_s, per_shard_rows=local.per_shard_rows,
+            per_shard_lines=local.per_shard_lines,
+            spec_names=tuple(h.name for h in hosts),
+            ssd_bytes=local.ssd_bytes, link_s=link_s,
+            local_s=local.per_shard_s, remote_lines=remote_lines,
+            local_burst=local)
 
     def price_batch(self, report, outstanding: int,
                     policy: str = "overlapped") -> float:
@@ -329,7 +409,8 @@ class StorageTimeline:
                 return self.gids_batch_time_sharded(
                     shard_rows=report.shard_rows, n_host=report.n_host_hits,
                     n_hbm=report.n_hbm_hits, feat_bytes=bpr,
-                    outstanding=outstanding)
+                    outstanding=outstanding,
+                    remote_rows=getattr(report, "remote_rows", ()))
             return self.gids_batch_time(
                 n_storage=report.n_storage, n_host=report.n_host_hits,
                 n_hbm=report.n_hbm_hits, feat_bytes=bpr,
@@ -380,9 +461,17 @@ class StorageTimeline:
             shard_lines = (report.shard_lines if
                            getattr(report, "shard_lines", ())
                            else report.shard_rows)
-            burst = price_sharded_burst(self.shard_specs, report.shard_rows,
-                                        shard_lines, bpr, io_bytes)
-            burst = self._fault_adjust(burst, bpr, io_bytes)
+            if self.host_specs is not None:
+                # host plane: the report's per-host remote line counts (the
+                # second coalescing level) ride each serving host's link
+                burst = self.price_host_burst(
+                    report.shard_rows, shard_lines, bpr, io_bytes,
+                    remote_lines=getattr(report, "remote_lines", ()))
+            else:
+                burst = price_sharded_burst(self.shard_specs,
+                                            report.shard_rows, shard_lines,
+                                            bpr, io_bytes)
+                burst = self._fault_adjust(burst, bpr, io_bytes)
             self.last_shard_burst = burst
             t_ssd, ssd_bytes = burst.elapsed_s, burst.ssd_bytes
         else:
@@ -437,10 +526,24 @@ class StorageTimeline:
             if self.shard_specs and shard_pages:
                 burst = price_sharded_burst(self.shard_specs, shard_pages,
                                             shard_pages, io_bytes, io_bytes)
+                # topology edge-page reads see brownouts/outages too: the
+                # same injector seam as the feature plane's merged burst
+                # (an empty schedule returns the burst untouched)
+                burst = self._fault_adjust(burst, io_bytes, io_bytes)
                 self.last_shard_burst = burst
                 t_sto = burst.elapsed_s
             else:
                 t_sto = model_burst(self.spec, n_sto, self.n_ssd).elapsed_s
+                if self.injector is not None:
+                    # unsharded topology namespace = one storage queue:
+                    # wrap the hop's page burst so the schedule prices it
+                    burst = self._fault_adjust(
+                        ShardedBurstResult((t_sto,), (n_sto,), (n_sto,),
+                                           (self.spec.name,),
+                                           n_sto * io_bytes),
+                        io_bytes, io_bytes)
+                    self.last_shard_burst = burst
+                    t_sto = burst.elapsed_s
         t_pcie = (n_host + n_sto) * io_bytes / PCIE_GEN4_BW
         return TOPO_HOP_LAUNCH_S + max(t_hbm, t_sto, t_pcie)
 
@@ -483,7 +586,16 @@ class StorageTimeline:
             specs, tuple(per_queue), tuple(per_queue * lines_per_row),
             bytes_per_row, io_bytes)
         t_pcie = 2 * len(src) * bytes_per_row / PCIE_GEN4_BW
-        return max(burst.elapsed_s, t_pcie)
+        t_link = 0.0
+        if self.host_specs is not None and len(self.host_specs) == n_shards:
+            # host plane: a moved row leaves its source host and enters its
+            # destination host over each one's link — per_queue already
+            # counts both endpoints, and the slowest link gates the move
+            t_link = max(
+                (h.link_rtt_s + int(q) * bytes_per_row / h.link_bw
+                 for h, q in zip(self.host_specs, per_queue) if q > 0),
+                default=0.0)
+        return max(burst.elapsed_s, t_pcie, t_link)
 
     def gids_batch_time(self, n_storage: int, n_host: int, n_hbm: int,
                         feat_bytes: int, outstanding: int) -> float:
@@ -510,14 +622,19 @@ class StorageTimeline:
         return max(t_ssd, t_host, t_hbm, t_pcie)
 
     def gids_batch_time_sharded(self, shard_rows, n_host: int, n_hbm: int,
-                                feat_bytes: int, outstanding: int) -> float:
+                                feat_bytes: int, outstanding: int,
+                                remote_rows=()) -> float:
         """GIDS batch pricing over a sharded namespace: the accumulator's
         maintained outstanding count splits across shard queues in
         proportion to each shard's share of the batch's storage rows, each
         shard drains at its own spec with the efficiency of ITS queue alone,
         and the storage term is the slowest shard's drain.  Host/HBM links
         and the PCIe ingress cap match `gids_batch_time` exactly, so a
-        1-shard plane prices identically to the unsharded one."""
+        1-shard plane prices identically to the unsharded one.
+
+        On a host plane (`host_specs` wired) `remote_rows[h]` counts the
+        batch rows host h serves to OTHER hosts; they ship line-granular
+        over h's link via `price_host_burst`."""
         shard_rows = tuple(int(r) for r in shard_rows)
         total = sum(shard_rows)
         shard_out = tuple(
@@ -526,11 +643,20 @@ class StorageTimeline:
         specs = self.shard_specs or (self.spec,) * len(shard_rows)
         # per-batch pricing is row-granular (no merged-window coalescing):
         # lines = rows keeps the line cap at exactly the row bytes
-        burst = price_sharded_burst(
-            specs, shard_rows,
-            tuple(-(-r * feat_bytes // IO_BYTES) for r in shard_rows),
-            feat_bytes, shard_outstanding=shard_out)
-        burst = self._fault_adjust(burst, feat_bytes)
+        shard_lines = tuple(-(-r * feat_bytes // IO_BYTES)
+                            for r in shard_rows)
+        if self.host_specs is not None:
+            remote_lines = tuple(
+                -(-int(r) * feat_bytes // IO_BYTES) for r in remote_rows) \
+                if remote_rows else None
+            burst = self.price_host_burst(
+                shard_rows, shard_lines, feat_bytes,
+                shard_outstanding=shard_out, remote_lines=remote_lines)
+        else:
+            burst = price_sharded_burst(specs, shard_rows, shard_lines,
+                                        feat_bytes,
+                                        shard_outstanding=shard_out)
+            burst = self._fault_adjust(burst, feat_bytes)
         self.last_shard_burst = burst
         t_host = n_host * feat_bytes / HOST_DRAM_BW if n_host else 0.0
         t_hbm = n_hbm * feat_bytes / HBM_BW if n_hbm else 0.0

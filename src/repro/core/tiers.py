@@ -613,12 +613,20 @@ class GatherPlan:
     decision of a `ShardedStorageTier`, 0 for a single-queue storage tier,
     and -1 iff the serving tier is not storage-class (`shard_consistent`
     pins that invariant).  Shard ids drive shard-local 4 KB-line coalescing
-    and the max-over-shards burst pricing."""
+    and the max-over-shards burst pricing.
+
+    `remote[i]` (host planes only — core/hosts.py) marks requests whose
+    serving host differs from the host that REQUESTED them; those rows'
+    lines additionally transit the serving host's link in
+    `StorageTimeline.price_host_burst`.  None on single-host planes —
+    remote-ness is a pricing/telemetry annotation, never a routing one, so
+    gathered bytes cannot depend on it."""
 
     node_ids: np.ndarray
     assignment: np.ndarray          # (B,) int8 index into `tiers`
     tiers: tuple
     shard: np.ndarray | None = None  # (B,) int16; -1 = not storage-bound
+    remote: np.ndarray | None = None  # (B,) bool; True = crosses a host link
 
     def counts(self) -> np.ndarray:
         return np.bincount(self.assignment, minlength=len(self.tiers))
@@ -657,6 +665,14 @@ class GatherPlan:
             return np.zeros(self.n_shards, np.int64)
         sm = self.shard >= 0
         return np.bincount(self.shard[sm], minlength=self.n_shards)
+
+    def remote_counts(self) -> np.ndarray:
+        """Cross-host storage requests per SERVING shard, (n_shards,) —
+        the rows each host ships over its link (zeros off host planes)."""
+        if self.shard is None or self.remote is None:
+            return np.zeros(self.n_shards, np.int64)
+        rm = self.remote & (self.shard >= 0)
+        return np.bincount(self.shard[rm], minlength=self.n_shards)
 
     def kernel_slots(self, tier_index: int = 0) -> np.ndarray:
         """Slot array for `ops.tiered_gather`: requests served by the device
@@ -710,6 +726,7 @@ def build_plan(tiers: Sequence[Tier], node_ids: np.ndarray,
     # storage-bound requests carry the serving tier's shard decision; a
     # single-queue storage tier is shard 0, redirected requests stay -1
     shard = np.full(n, -1, np.int16)
+    remote = None
     for ti, tier in enumerate(tiers):
         if tier.latency_class != "storage":
             continue
@@ -718,10 +735,16 @@ def build_plan(tiers: Sequence[Tier], node_ids: np.ndarray,
             continue
         if hasattr(tier, "shard_of"):
             shard[m] = tier.shard_of(node_ids[m])
+            if hasattr(tier, "remote_mask"):
+                # host-level backstop: stamp which requests the serving
+                # host ships over its link (requester != server)
+                if remote is None:
+                    remote = np.zeros(n, bool)
+                remote[m] = tier.remote_mask(node_ids[m], shard[m])
         else:
             shard[m] = 0
     return GatherPlan(node_ids=node_ids, assignment=assignment,
-                      tiers=tuple(tiers), shard=shard)
+                      tiers=tuple(tiers), shard=shard, remote=remote)
 
 
 def build_plan_merged(tiers: Sequence[Tier], unique_nodes: np.ndarray,

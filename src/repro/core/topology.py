@@ -293,6 +293,7 @@ class TieredTopologyStore:
                    page_bytes: int = IO_BYTES, ssd: SSDSpec = INTEL_OPTANE,
                    n_ssd: int = 1, n_shards: int = 1,
                    placement: str = "hash", shard_specs=None,
+                   page_shard: np.ndarray | None = None,
                    seed: int = 0) -> "TieredTopologyStore":
         """Budgeted build: `gpu_fraction` / `host_fraction` of the edge pages
         go to the HBM / pinned-host tiers (clipped to a partition), placed by
@@ -300,7 +301,12 @@ class TieredTopologyStore:
         With `n_shards > 1` the storage pages stripe across SSD queues via
         the placement registry shared with the feature plane
         (core/sharding.py) — the `degree` placement reuses the admission
-        page scores as its hotness signal."""
+        page scores as its hotness signal.
+
+        An explicit `page_shard` overrides the placement registry: the
+        co-partitioned host plane (core/hosts.py) passes the feature tier's
+        own per-page host assignment here, so ONE placement decision drives
+        both namespaces instead of two independent stripes."""
         page_words, n_pages = _page_geometry(graph.indices, page_bytes)
         gpu_pages = int(np.clip(round(gpu_fraction * n_pages), 0, n_pages))
         host_pages = int(np.clip(round(host_fraction * n_pages), 0,
@@ -316,13 +322,20 @@ class TieredTopologyStore:
         assignment = make_admission(admission, n_pages, gpu_pages=gpu_pages,
                                     host_pages=host_pages, page_score=score,
                                     seed=seed)
-        page_shard = None
-        if n_shards > 1:
-            if n_ssd > 1:
+        if n_shards > 1 and n_ssd > 1:
+            raise ValueError(
+                f"n_ssd={n_ssd} with a {n_shards}-shard topology store: "
+                "per-shard queues and the pooled multiplier would model "
+                "the same devices twice — set n_shards only")
+        if page_shard is not None:
+            page_shard = np.asarray(page_shard, np.int16)
+            if page_shard.shape != (n_pages,):
                 raise ValueError(
-                    f"n_ssd={n_ssd} with a {n_shards}-shard topology store: "
-                    "per-shard queues and the pooled multiplier would model "
-                    "the same devices twice — set n_shards only")
+                    f"page_shard shape {page_shard.shape} does not match "
+                    f"{n_pages} edge pages")
+            if shard_specs is None and n_shards > 1:
+                shard_specs = (ssd,) * n_shards
+        elif n_shards > 1:
             pol = make_placement(placement, n_shards, num_nodes=n_pages,
                                  degrees=score, seed=seed)
             page_shard = np.asarray(pol.shard_of(np.arange(n_pages)),

@@ -1,0 +1,441 @@
+"""Multi-host distributed data plane: link-priced host bursts, the
+co-partitioned placement (one decision for features AND edge pages),
+metis-lite min-cut growth, requester-model remote accounting, the
+n_hosts=1 degeneracy (bit-identical to the single-host plane), topology
+fault injection, host-level failure domains for replica spread, and
+checkpoint round-trips of the whole host stack."""
+import numpy as np
+import pytest
+
+from repro.core import (BrownoutEvent, CoPartitionedPlacement, FaultSchedule,
+                        GIDSDataLoader, HostBurstResult, HostLinkSpec,
+                        HostShardTier, LoaderConfig, NIC_100GBE, NIC_400GBE,
+                        OutageEvent, ReplicatedPlacement, SAMSUNG_980PRO,
+                        StorageTimeline, cut_edge_fraction, default_hosts,
+                        make_placement, price_sharded_burst, requester_hosts)
+from repro.core.hosts import independent_hosts
+from repro.core.sharding import MetisLitePlacement, _grow_partitions
+from repro.core.storage_sim import IO_BYTES
+from repro.graph.synthetic import clustered_graph, rmat_graph
+
+
+@pytest.fixture(scope="module")
+def graph_and_feats():
+    g = clustered_graph(8_000, 10, 16, communities=16, intra=0.9, seed=1)
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, 16)).astype(np.float32)
+    return g, feats
+
+
+def _mk(g, feats, plane="gids-hosts-merged", **kw):
+    cfg = dict(batch_size=128, fanouts=(4, 3), data_plane=plane,
+               cache_lines=128, window_depth=2, seed=3)
+    cfg.update(kw)
+    return GIDSDataLoader(g, feats, LoaderConfig(**cfg), ssd=SAMSUNG_980PRO)
+
+
+def _batches(dl, n=6):
+    return [b for _, b in zip(range(n), dl)]
+
+
+def _blocks_equal(a, b):
+    return (np.array_equal(a.seeds, b.seeds)
+            and np.array_equal(a.all_nodes, b.all_nodes)
+            and all(np.array_equal(x, y)
+                    for x, y in zip(a.hop_nodes, b.hop_nodes)))
+
+
+# -- host specs ----------------------------------------------------------------
+
+def test_default_hosts_and_with_ssd():
+    hosts = default_hosts(3)
+    assert len(hosts) == 3
+    assert all(h.link_bw == NIC_100GBE.link_bw for h in hosts)
+    assert len({h.name for h in hosts}) == 3
+    assert hosts[0].ssd is None
+    filled = hosts[0].with_ssd(SAMSUNG_980PRO)
+    assert filled.ssd is SAMSUNG_980PRO and hosts[0].ssd is None
+
+
+def test_host_tier_spec_arity_validation(graph_and_feats):
+    g, feats = graph_and_feats
+    pol = make_placement("hash", 4, num_nodes=g.num_nodes)
+    with pytest.raises(ValueError, match="host specs"):
+        HostShardTier(feats, pol, hosts=default_hosts(3), graph=g)
+
+
+# -- price_host_burst ----------------------------------------------------------
+
+def test_price_host_burst_needs_host_specs():
+    tl = StorageTimeline(SAMSUNG_980PRO)
+    with pytest.raises(ValueError, match="host_specs"):
+        tl.price_host_burst((10, 10), (5, 5), 64)
+
+
+def test_zero_remote_prices_identical_to_sharded_burst():
+    tl = StorageTimeline(SAMSUNG_980PRO,
+                         shard_specs=(SAMSUNG_980PRO, SAMSUNG_980PRO))
+    tl.host_specs = tuple(h.with_ssd(SAMSUNG_980PRO)
+                          for h in default_hosts(2))
+    rows, lines = (100, 140), (40, 55)
+    host = tl.price_host_burst(rows, lines, 64, remote_lines=(0, 0))
+    plain = price_sharded_burst((SAMSUNG_980PRO,) * 2, rows, lines, 64)
+    assert isinstance(host, HostBurstResult)
+    assert host.per_shard_s == plain.per_shard_s  # bit-equal, not approx
+    assert host.elapsed_s == plain.elapsed_s
+    assert host.link_s == (0.0, 0.0)
+    assert host.remote_fraction == 0.0
+
+
+def test_link_term_math_and_straggler():
+    link = HostLinkSpec("test-link", link_bw=1e9, link_rtt_s=5e-6,
+                        ssd=SAMSUNG_980PRO)
+    tl = StorageTimeline(SAMSUNG_980PRO,
+                         shard_specs=(SAMSUNG_980PRO, SAMSUNG_980PRO))
+    tl.host_specs = (link, link)
+    rows, lines, remote = (100, 100), (40, 40), (0, 30)
+    burst = tl.price_host_burst(rows, lines, 64, remote_lines=remote)
+    expected_link = 5e-6 + 30 * IO_BYTES / 1e9
+    assert burst.link_s[0] == 0.0
+    assert burst.link_s[1] == pytest.approx(expected_link)
+    # the host serving remote lines is the straggler and sets elapsed
+    assert burst.per_shard_s[1] == burst.local_s[1] + burst.link_s[1]
+    assert burst.straggler == 1
+    assert burst.elapsed_s == max(burst.per_shard_s)
+    assert burst.remote_fraction == pytest.approx(30 / 80)
+    # the pre-link result is preserved for fault/retry telemetry
+    assert burst.local_burst is not None
+    assert burst.local_burst.per_shard_s == burst.local_s
+
+
+def test_faster_link_drains_faster():
+    tl = StorageTimeline(SAMSUNG_980PRO,
+                         shard_specs=(SAMSUNG_980PRO, SAMSUNG_980PRO))
+    rows, lines, remote = (200, 200), (80, 80), (50, 50)
+    times = {}
+    for link in (NIC_100GBE, NIC_400GBE):
+        tl.host_specs = tuple(h.with_ssd(SAMSUNG_980PRO)
+                              for h in default_hosts(2, link=link))
+        times[link.name] = tl.price_host_burst(
+            rows, lines, 64, remote_lines=remote).elapsed_s
+    assert times[NIC_400GBE.name] < times[NIC_100GBE.name]
+
+
+# -- metis-lite placement ------------------------------------------------------
+
+def test_metis_lite_needs_graph():
+    with pytest.raises(ValueError, match="CSR adjacency"):
+        MetisLitePlacement(4, num_nodes=100)
+
+
+def test_metis_lite_balance_and_cut(graph_and_feats):
+    g, _ = graph_and_feats
+    pol = MetisLitePlacement(4, graph=g)
+    tab = pol.shard_of(np.arange(g.num_nodes))
+    assert set(np.unique(tab)) <= set(range(4))
+    # balanced by edge mass (sampling-load proxy), not node count
+    indeg = np.bincount(g.indices, minlength=g.num_nodes)
+    w = 1 + indeg + np.diff(g.indptr)
+    masses = np.bincount(tab, weights=w, minlength=4)
+    assert masses.max() <= 1.2 * masses.min()
+    cut_metis = cut_edge_fraction(g.indptr, g.indices, tab)
+    hash_tab = make_placement("hash", 4, num_nodes=g.num_nodes).shard_of(
+        np.arange(g.num_nodes))
+    cut_hash = cut_edge_fraction(g.indptr, g.indices, hash_tab)
+    # the gate property: grown partitions find the community structure
+    assert cut_metis < 0.5 * cut_hash
+
+
+def test_metis_lite_deterministic_and_state_roundtrip(graph_and_feats):
+    g, _ = graph_and_feats
+    a = MetisLitePlacement(4, graph=g)
+    b = MetisLitePlacement(4, graph=g)
+    ids = np.arange(g.num_nodes)
+    assert np.array_equal(a.shard_of(ids), b.shard_of(ids))
+    fresh = MetisLitePlacement(4, indptr=g.indptr, indices=g.indices)
+    fresh.load_state_dict(a.state_dict())
+    assert np.array_equal(fresh.shard_of(ids), a.shard_of(ids))
+
+
+def test_grow_partitions_degenerate_cases():
+    tab = _grow_partitions(np.array([0, 0, 0]), np.array([], np.int64), 1)
+    assert np.array_equal(tab, [0, 0])
+    # isolated nodes still all get assigned
+    tab = _grow_partitions(np.zeros(9, np.int64), np.array([], np.int64), 4)
+    assert (tab >= 0).all() and (tab < 4).all()
+
+
+# -- co-partitioned placement --------------------------------------------------
+
+def test_co_partition_agreement_and_fallthrough(graph_and_feats):
+    g, _ = graph_and_feats
+    base = MetisLitePlacement(4, graph=g)
+    co = CoPartitionedPlacement(base)
+    ids = np.arange(g.num_nodes)
+    assert np.array_equal(co.shard_of(ids), co.topology_host_of(ids))
+    assert co.n_shards == 4 and "metis-lite" in co.name
+    # fallthrough to the base policy's state
+    assert np.array_equal(co.table, base.table)
+    st = co.state_dict()
+    fresh = CoPartitionedPlacement(
+        MetisLitePlacement(4, indptr=g.indptr, indices=g.indices))
+    fresh.load_state_dict(st)
+    assert np.array_equal(fresh.shard_of(ids), co.shard_of(ids))
+    with pytest.raises(ValueError, match="does not match"):
+        CoPartitionedPlacement(make_placement(
+            "hash", 4, num_nodes=g.num_nodes)).load_state_dict(st)
+
+
+def test_page_host_follows_first_edge_owner(graph_and_feats):
+    g, _ = graph_and_feats
+    co = CoPartitionedPlacement(MetisLitePlacement(4, graph=g))
+    page_words = IO_BYTES // g.indices.dtype.itemsize
+    pages = co.page_host_of(g.indptr, len(g.indices), page_words)
+    n_pages = -(-len(g.indices) // page_words)
+    assert pages.shape == (n_pages,)
+    first_owner = np.searchsorted(
+        np.asarray(g.indptr, np.int64),
+        np.arange(n_pages, dtype=np.int64) * page_words, side="right") - 1
+    assert np.array_equal(pages, co.shard_of(first_owner))
+
+
+def test_requester_ties_break_to_own_host():
+    # 0 -> 2, 1 -> 2: node 2's in-vote ties between hosts 0 and 1; node 3
+    # has no in-edges at all — both stay with their own adjacency host
+    indptr = np.array([0, 1, 2, 2, 2], np.int64)
+    indices = np.array([2, 2], np.int64)
+    topo = np.array([0, 1, 1, 2], np.int16)
+    req = requester_hosts(indptr, indices, topo, 3)
+    assert req[2] == 1 and req[3] == 2
+    # a one-host cluster degenerates to the identity
+    assert np.array_equal(requester_hosts(indptr, indices, topo, 1), topo)
+
+
+def test_independent_hosts_decorrelated_from_hash():
+    n = 4096
+    topo = independent_hosts(n, 4, seed=0)
+    feat = make_placement("hash", 4, num_nodes=n).shard_of(np.arange(n))
+    assert set(np.unique(topo)) == set(range(4))
+    agree = np.mean(topo == feat)
+    assert 0.15 < agree < 0.35  # ~1/4 if truly decorrelated
+    assert not np.array_equal(independent_hosts(n, 4, seed=1), topo)
+
+
+# -- the host tier -------------------------------------------------------------
+
+def test_host_tier_tables_and_telemetry(graph_and_feats):
+    g, feats = graph_and_feats
+    pol = MetisLitePlacement(4, graph=g)
+    tier = HostShardTier(feats, pol, graph=g)
+    ids = np.arange(g.num_nodes)
+    assert tier.n_hosts == 4 and tier.co_partition
+    assert np.array_equal(tier.topo_host_of(ids), tier.placement.shard_of(ids))
+    assert 0.0 < tier.cut_edge_fraction() < 0.5
+    assert 0.0 <= tier.remote_fraction() < 0.5
+    # remote mask: rows served by their requester's host are local
+    req = tier.requester_of(ids)
+    assert not tier.remote_mask(ids, req).any()
+    assert tier.remote_mask(ids, (req + 1) % 4).all()
+    # page assignment rides the SAME host table
+    pages = tier.topology_page_shard()
+    page_words = IO_BYTES // g.indices.dtype.itemsize
+    assert pages.shape == (-(-len(g.indices) // page_words),)
+    specs = tier.resolve_hosts(SAMSUNG_980PRO)
+    assert all(h.ssd is SAMSUNG_980PRO for h in specs)
+    assert tier.resolve_shard_specs(SAMSUNG_980PRO) == (SAMSUNG_980PRO,) * 4
+
+
+def test_independent_tier_decouples_namespaces(graph_and_feats):
+    g, feats = graph_and_feats
+    pol = make_placement("hash", 4, num_nodes=g.num_nodes)
+    tier = HostShardTier(feats, pol, graph=g, co_partition=False)
+    ids = np.arange(g.num_nodes)
+    assert not tier.co_partition
+    assert not np.array_equal(tier.topo_host_of(ids),
+                              tier.placement.shard_of(ids))
+
+
+# -- the loader: bit-identity and the placement payoff -------------------------
+
+def test_one_host_plane_identical_to_single_host(graph_and_feats):
+    g, feats = graph_and_feats
+    ref = _batches(_mk(g, feats, plane="gids-merged"))
+    one = _batches(_mk(g, feats, n_hosts=1))
+    for a, b in zip(ref, one):
+        assert np.array_equal(a.features, b.features)
+        assert _blocks_equal(a.blocks, b.blocks)
+        assert a.exposed_prep_s == b.exposed_prep_s  # modelled time too
+        assert a.prep_time_s == b.prep_time_s
+
+
+def test_features_bit_identical_across_host_counts(graph_and_feats):
+    g, feats = graph_and_feats
+    ref = _batches(_mk(g, feats, plane="gids-merged"))
+    for n_hosts in (2, 4):
+        for placement in ("hash", "metis-lite"):
+            for co in (True, False):
+                got = _batches(_mk(g, feats, n_hosts=n_hosts,
+                                   placement=placement, co_partition=co))
+                for a, b in zip(ref, got):
+                    assert np.array_equal(a.features, b.features)
+                    assert _blocks_equal(a.blocks, b.blocks)
+
+
+def test_min_cut_co_partition_beats_hash_independent(graph_and_feats):
+    g, feats = graph_and_feats
+    win = _batches(_mk(g, feats, n_hosts=4, placement="metis-lite",
+                       co_partition=True), n=10)
+    lose = _batches(_mk(g, feats, n_hosts=4, placement="hash",
+                        co_partition=False), n=10)
+    t_win = np.mean([b.exposed_prep_s for b in win[4:]])
+    t_lose = np.mean([b.exposed_prep_s for b in lose[4:]])
+    assert t_win < t_lose
+
+
+def test_host_plane_wires_timeline_and_reports(graph_and_feats):
+    g, feats = graph_and_feats
+    dl = _mk(g, feats, n_hosts=4, placement="metis-lite")
+    assert dl.timeline.host_specs is not None
+    assert len(dl.timeline.host_specs) == 4
+    _batches(dl)
+    burst = dl.timeline.last_shard_burst
+    assert isinstance(burst, HostBurstResult)
+    assert len(burst.link_s) == 4
+    assert burst.remote_fraction > 0.0
+
+
+# -- satellite: topology fault injection ---------------------------------------
+
+def test_empty_schedule_bit_invisible_on_topology_path(graph_and_feats):
+    g, feats = graph_and_feats
+    kw = dict(plane="gids-topo-merged", n_shards=4, placement="hash")
+    clean = _batches(_mk(g, feats, **kw))
+    empty = _batches(_mk(g, feats, fault_schedule=FaultSchedule(events=()),
+                         **kw))
+    for a, b in zip(clean, empty):
+        assert np.array_equal(a.features, b.features)
+        assert a.exposed_prep_s == b.exposed_prep_s
+        assert a.sample_time_s == b.sample_time_s
+
+
+def test_topology_brownout_slows_sampling_not_data(graph_and_feats):
+    g, feats = graph_and_feats
+    kw = dict(plane="gids-topo-merged", n_shards=4, placement="hash")
+    clean = _batches(_mk(g, feats, **kw))
+    sched = FaultSchedule(events=(
+        BrownoutEvent(shard=0, start=0, end=1000, multiplier=8.0),))
+    slow = _batches(_mk(g, feats, fault_schedule=sched, **kw))
+    for a, b in zip(clean, slow):
+        assert np.array_equal(a.features, b.features)
+        assert _blocks_equal(a.blocks, b.blocks)
+    assert sum(b.sample_time_s for b in slow) \
+        > sum(b.sample_time_s for b in clean)
+
+
+def test_unsharded_topology_brownout_also_priced(graph_and_feats):
+    g, feats = graph_and_feats
+    kw = dict(plane="gids-topo-merged", n_shards=1, placement="range")
+    clean = _batches(_mk(g, feats, **kw))
+    sched = FaultSchedule(events=(
+        BrownoutEvent(shard=0, start=0, end=1000, multiplier=8.0),))
+    slow = _batches(_mk(g, feats, fault_schedule=sched, **kw))
+    for a, b in zip(clean, slow):
+        assert np.array_equal(a.features, b.features)
+    assert sum(b.sample_time_s for b in slow) \
+        > sum(b.sample_time_s for b in clean)
+
+
+# -- satellite: host-level failure domains -------------------------------------
+
+def test_replica_spread_across_hosts(graph_and_feats):
+    g, _ = graph_and_feats
+    base = MetisLitePlacement(4, graph=g)
+    pol = ReplicatedPlacement(base, 2, failure_domains=np.arange(4))
+    reps = pol.replicas_of(np.arange(g.num_nodes))
+    # every row's copies live on DISTINCT hosts (= failure domains)
+    assert (reps[:, 0] != reps[:, 1]).all()
+    # distinct-domain case matches chained declustering bit-for-bit
+    plain = ReplicatedPlacement(MetisLitePlacement(4, graph=g), 2)
+    assert np.array_equal(reps, plain.replicas_of(np.arange(g.num_nodes)))
+
+
+def test_failure_domain_validation(graph_and_feats):
+    g, _ = graph_and_feats
+    base = MetisLitePlacement(4, graph=g)
+    with pytest.raises(ValueError, match="failure domain"):
+        ReplicatedPlacement(base, 3, failure_domains=np.array([0, 0, 1, 1]))
+    # two domains support two-way replication; copies land across domains
+    pol = ReplicatedPlacement(base, 2,
+                              failure_domains=np.array([0, 0, 1, 1]))
+    reps = pol.replicas_of(np.arange(g.num_nodes))
+    domains = np.array([0, 0, 1, 1])
+    assert (domains[reps[:, 0]] != domains[reps[:, 1]]).all()
+
+
+def test_whole_host_outage_fails_over_without_data_loss(graph_and_feats):
+    g, feats = graph_and_feats
+    kw = dict(n_hosts=4, placement="metis-lite", replication_factor=2)
+    clean = _batches(_mk(g, feats, **kw))
+    sched = FaultSchedule(events=(OutageEvent(shard=1, start=0, end=100),))
+    faulted = _batches(_mk(g, feats, fault_schedule=sched, **kw))
+    for a, b in zip(clean, faulted):
+        assert np.array_equal(a.features, b.features)  # no data loss
+        assert _blocks_equal(a.blocks, b.blocks)
+
+
+def test_failure_domains_state_roundtrip(graph_and_feats):
+    g, _ = graph_and_feats
+    pol = ReplicatedPlacement(MetisLitePlacement(4, graph=g), 2,
+                              failure_domains=np.arange(4))
+    st = pol.state_dict()
+    fresh = ReplicatedPlacement(
+        MetisLitePlacement(4, indptr=g.indptr, indices=g.indices), 2,
+        failure_domains=np.arange(4))
+    fresh.load_state_dict(st)
+    ids = np.arange(g.num_nodes)
+    assert np.array_equal(fresh.replicas_of(ids), pol.replicas_of(ids))
+    mismatched = ReplicatedPlacement(
+        MetisLitePlacement(4, indptr=g.indptr, indices=g.indices), 2,
+        failure_domains=np.array([0, 1, 0, 1]))
+    with pytest.raises(ValueError, match="failure domains"):
+        mismatched.load_state_dict(st)
+
+
+# -- checkpoint round-trip -----------------------------------------------------
+
+def test_host_plane_checkpoint_roundtrip(graph_and_feats):
+    g, feats = graph_and_feats
+    kw = dict(n_hosts=4, placement="metis-lite")
+    ref = _batches(_mk(g, feats, **kw), n=8)
+    part = _mk(g, feats, **kw)
+    _batches(part, n=4)
+    state = part.state_dict()
+    r1, r2 = _mk(g, feats, **kw), _mk(g, feats, **kw)
+    r1.load_state_dict(state)
+    r2.load_state_dict(state)
+    for i, (x, y) in enumerate(zip(_batches(r1, n=4), _batches(r2, n=4))):
+        # resumed loaders agree bit-for-bit, prices included
+        assert np.array_equal(x.features, y.features)
+        assert x.exposed_prep_s == y.exposed_prep_s
+        # and the data matches the uninterrupted stream
+        assert np.array_equal(x.features, ref[4 + i].features)
+
+
+def test_topology_injector_checkpoint_roundtrip(graph_and_feats):
+    g, feats = graph_and_feats
+    sched = FaultSchedule(events=(
+        BrownoutEvent(shard=0, start=2, end=1000, multiplier=4.0),))
+    kw = dict(plane="gids-topo-merged", n_shards=4, placement="hash",
+              fault_schedule=sched)
+    part = _mk(g, feats, **kw)
+    _batches(part, n=4)
+    state = part.state_dict()
+    assert "topo_injector" in state["fault_state"]
+    r1, r2 = _mk(g, feats, **kw), _mk(g, feats, **kw)
+    r1.load_state_dict(state)
+    r2.load_state_dict(state)
+    assert r1.topo.timeline.injector.burst == part.topo.timeline.injector.burst
+    for x, y in zip(_batches(r1, n=4), _batches(r2, n=4)):
+        assert np.array_equal(x.features, y.features)
+        assert x.sample_time_s == y.sample_time_s
+        assert x.exposed_prep_s == y.exposed_prep_s

@@ -1,0 +1,90 @@
+"""Property tests for the multi-host plane: for ANY graph, host count,
+placement policy, and co-partitioning choice, the distributed plane's
+features and sampled blocks are bit-identical to the single-host plane —
+hosts change modelled time and telemetry, never data — and under
+`CoPartitionedPlacement` the feature host and topology host agree for
+every node."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (CoPartitionedPlacement, GIDSDataLoader, LoaderConfig,
+                        SAMSUNG_980PRO, make_placement)
+from repro.graph.synthetic import clustered_graph, rmat_graph
+
+SETTINGS = settings(max_examples=15, deadline=None,
+                    suppress_health_check=(HealthCheck.too_slow,))
+
+
+def _graph(kind, n, seed):
+    if kind == "clustered":
+        return clustered_graph(n, 6, 8, communities=8, intra=0.85, seed=seed)
+    return rmat_graph(n, 6, 8, seed=seed)
+
+
+def _features(n, seed):
+    return np.random.default_rng(seed).standard_normal(
+        (n, 8)).astype(np.float32)
+
+
+def _run(g, feats, plane, n_batches=4, **kw):
+    cfg = LoaderConfig(batch_size=48, fanouts=(3, 2), data_plane=plane,
+                       cache_lines=64, window_depth=2, seed=11, **kw)
+    dl = GIDSDataLoader(g, feats, cfg, ssd=SAMSUNG_980PRO)
+    return [dl.next_batch() for _ in range(n_batches)], dl
+
+
+@SETTINGS
+@given(kind=st.sampled_from(["clustered", "rmat"]),
+       n=st.integers(min_value=300, max_value=900),
+       gseed=st.integers(min_value=0, max_value=7),
+       n_hosts=st.integers(min_value=1, max_value=4),
+       placement=st.sampled_from(["hash", "metis-lite", "degree"]),
+       co=st.booleans())
+def test_host_plane_data_bit_identical_to_single_host(
+        kind, n, gseed, n_hosts, placement, co):
+    g = _graph(kind, n, gseed)
+    feats = _features(g.num_nodes, gseed)
+    ref, _ = _run(g, feats, "gids-merged")
+    got, _ = _run(g, feats, "gids-hosts-merged", n_hosts=n_hosts,
+                  placement=placement, co_partition=co)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.features, b.features)
+        np.testing.assert_array_equal(a.blocks.seeds, b.blocks.seeds)
+        np.testing.assert_array_equal(a.blocks.all_nodes, b.blocks.all_nodes)
+        for ha, hb in zip(a.blocks.hop_nodes, b.blocks.hop_nodes):
+            np.testing.assert_array_equal(ha, hb)
+
+
+@SETTINGS
+@given(kind=st.sampled_from(["clustered", "rmat"]),
+       n=st.integers(min_value=300, max_value=900),
+       gseed=st.integers(min_value=0, max_value=7),
+       n_hosts=st.integers(min_value=2, max_value=5),
+       placement=st.sampled_from(["hash", "metis-lite", "degree", "range"]))
+def test_co_partitioned_hosts_agree_per_node(kind, n, gseed, n_hosts,
+                                             placement):
+    g = _graph(kind, n, gseed)
+    pol = CoPartitionedPlacement(make_placement(
+        placement, n_hosts, num_nodes=g.num_nodes, graph=g,
+        degrees=np.diff(g.indptr)))
+    ids = np.arange(g.num_nodes)
+    np.testing.assert_array_equal(pol.shard_of(ids),
+                                  pol.topology_host_of(ids))
+
+
+@SETTINGS
+@given(n=st.integers(min_value=300, max_value=900),
+       gseed=st.integers(min_value=0, max_value=7),
+       n_hosts=st.integers(min_value=2, max_value=4))
+def test_loader_tier_agreement_under_co_partition(n, gseed, n_hosts):
+    g = _graph("clustered", n, gseed)
+    feats = _features(g.num_nodes, gseed)
+    _, dl = _run(g, feats, "gids-hosts-merged", n_hosts=n_hosts,
+                 placement="metis-lite", co_partition=True)
+    tier = dl.plane.store.tiers[-1]
+    ids = np.arange(g.num_nodes)
+    np.testing.assert_array_equal(tier.placement.shard_of(ids),
+                                  tier.topo_host_of(ids))
