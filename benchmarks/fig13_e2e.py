@@ -42,7 +42,8 @@ def train_step_time(g, fanouts, batch):
         step(params, feats, hi[0], hi[1], hi[2], y)), iters=3)
 
 
-def e2e(dataset, ssd, mode, t_train, fits_in_memory, iters=10, warmup=2):
+def e2e(dataset, ssd, mode, t_train, fits_in_memory, iters=10, warmup=2,
+        tracer=None):
     g = dataset.materialize()
     feats = np.zeros((g.num_nodes, 1), np.float32)
     dl = GIDSDataLoader(
@@ -50,7 +51,7 @@ def e2e(dataset, ssd, mode, t_train, fits_in_memory, iters=10, warmup=2):
         LoaderConfig(batch_size=512, fanouts=(10, 5), data_plane=mode,
                      cache_lines=1 << 13, window_depth=8,
                      cbuf_fraction=0.1 if mode.startswith("gids") else 0.0),
-        ssd=ssd)
+        ssd=ssd, tracer=tracer)
     dl.store.feature_dim = dataset.feature_dim
     preps, last_report = [], None
     for _ in range(iters):
@@ -80,11 +81,17 @@ def headline(t_train: float = 0.005, iters: int = 24) -> dict:
     the merged plane's first (cold, amortized) window so every plane is
     measured at steady state."""
     from repro.graph.datasets import DatasetSpec
+    from repro.obs import Tracer
     ds = DatasetSpec("smoke", 20_000, 240_000, 64, exec_nodes=20_000)
     out, reports = {}, {}
     for m in ("mmap", "bam", "gids", "gids-async", "gids-merged"):
+        # the gids run executes with a LIVE tracer: the exact-equality
+        # baseline gate in run.py then proves tracing is bit-invisible on
+        # the very numbers the PR trajectory records
+        tracer = Tracer() if m == "gids" else None
         t, prep, rep = e2e(ds, SAMSUNG_980PRO, m, t_train,
-                           fits_in_memory=False, iters=iters, warmup=8)
+                           fits_in_memory=False, iters=iters, warmup=8,
+                           tracer=tracer)
         out[f"{m}_e2e_s"] = t
         out[f"{m}_exposed_prep_us"] = prep * 1e6
         reports[m] = rep

@@ -75,7 +75,7 @@ def sweep(num_nodes: int = 20_000, iters: int = 16, warmup: int = 6) -> dict:
                     for br, bs in zip(ref_batches, batches):
                         assert br.exposed_prep_s == bs.exposed_prep_s
                 tier = dl.plane.store.tiers[-1]
-                burst = dl.timeline.last_shard_burst
+                burst = dl.timeline.shard_burst
                 points.append({
                     "placement": placement, "co_partition": co,
                     "n_hosts": n, "exposed_prep_s": prep,

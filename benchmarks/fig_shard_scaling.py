@@ -62,7 +62,7 @@ def sweep(num_nodes: int = 20_000, iters: int = 16, warmup: int = 6) -> dict:
             for br, bs in zip(ref_batches, batches):
                 np.testing.assert_array_equal(br.features, bs.features)
                 assert br.report.tier_counts == bs.report.tier_counts
-            burst = dl.timeline.last_shard_burst
+            burst = dl.timeline.shard_burst
             points.append({
                 "placement": placement, "n_shards": n,
                 "exposed_prep_s": prep,
@@ -91,7 +91,7 @@ def sweep(num_nodes: int = 20_000, iters: int = 16, warmup: int = 6) -> dict:
                                INTEL_OPTANE)
     for _ in range(iters):
         dl.next_batch()
-    het = dl.timeline.last_shard_burst
+    het = dl.timeline.shard_burst
     return {"points": points, "hetero": {
         "straggler": het.straggler, "straggler_spec": het.straggler_spec,
         "imbalance": het.imbalance}}

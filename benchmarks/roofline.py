@@ -1,5 +1,9 @@
 """Aggregate experiments/dryrun/*.json into the §Roofline table
-(markdown + CSV under experiments/)."""
+(markdown + CSV under experiments/), plus the data-plane stage roofline:
+the per-stage split of priced prep time (sample / gather / feedback) read
+from the observability plane's MetricsRegistry — the `stage_s.*` counters
+the traced pipeline accumulates — instead of re-deriving it by walking
+batches and reports."""
 from __future__ import annotations
 
 import json
@@ -46,8 +50,56 @@ def fmt_table(recs, mesh: str) -> str:
     return "\n".join(lines)
 
 
+def data_plane_stage_split(iters: int = 16) -> dict:
+    """Per-stage priced-seconds split of the merged topo plane, consumed
+    from the metrics registry of a traced run.  The split is exactly what
+    the pricing charged (the counters are incremented with the same floats
+    the batches carry), so ``prep == sample + gather + feedback`` holds to
+    float eps, and the ``modelled_vs_measured`` series bounds how far the
+    model's virtual clock sits from the simulation's wall clock."""
+    import numpy as np
+
+    from repro.core import GIDSDataLoader, LoaderConfig
+    from repro.graph.synthetic import rmat_graph
+    from repro.obs import Tracer
+
+    g = rmat_graph(20_000, 12, 32, seed=1)
+    feats = np.zeros((g.num_nodes, 32), np.float32)
+    tracer = Tracer()
+    dl = GIDSDataLoader(g, feats, LoaderConfig(
+        batch_size=256, fanouts=(10, 5), data_plane="gids-topo-merged",
+        cache_lines=4096, window_depth=4, seed=3), tracer=tracer)
+    for _ in range(iters):
+        dl.next_batch()
+
+    m = tracer.metrics
+    stages = {name: m.counter(f"stage_s.{name}").value
+              for name in ("sample", "gather", "feedback", "prep")}
+    n = m.counter("pipeline.batches").value or 1.0
+    out = {f"{k}_s": v for k, v in stages.items()}
+    out["n_batches"] = n
+    out["split_residual_s"] = stages["prep"] - (
+        stages["sample"] + stages["gather"] + stages["feedback"])
+    gaps = [p["gap_s"]
+            for name in m.names() if name.startswith("modelled_vs_measured.")
+            for p in m.series(name).points]
+    out["max_abs_model_gap_s"] = max((abs(x) for x in gaps), default=0.0)
+    return out
+
+
 def main():
+    sp = data_plane_stage_split()
+    n = sp["n_batches"]
+    for stage in ("sample", "gather", "feedback"):
+        share = (sp[f"{stage}_s"] / sp["prep_s"]) if sp["prep_s"] else 0.0
+        row(f"roofline_dataplane_{stage}", sp[f"{stage}_s"] / n * 1e6,
+            f"share={share:.3f}")
+    row("roofline_dataplane_prep", sp["prep_s"] / n * 1e6,
+        f"residual={sp['split_residual_s']:.3e}s_"
+        f"model_gap={sp['max_abs_model_gap_s']:.3e}s")
+
     recs = load_records()
+    OUT.mkdir(parents=True, exist_ok=True)
     ok = [r for r in recs if r.get("status") == "OK"]
     skip = [r for r in recs if str(r.get("status", "")).startswith("SKIP")]
     fail = [r for r in recs if str(r.get("status", "")).startswith("FAIL")]

@@ -1,13 +1,16 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows; `python -m benchmarks.run [--quick]`.  `--json [path]` is the CI
 # smoke mode: fig13 + fig14 + shard-scaling + fig7-sampling + serve-load +
-# adaptive + fault + multi-host headline numbers as JSON (default
-# BENCH_pr9.json) so the perf trajectory is recorded per PR.  `--baseline
+# adaptive + fault + multi-host + trace headline numbers as JSON (default
+# BENCH_pr10.json) so the perf trajectory is recorded per PR.  `--baseline
 # PATH` compares the fresh numbers against a committed earlier BENCH_*.json
 # and exits non-zero if the `gids` preset's e2e regressed — and, because
 # every deterministic path must stay bit-identical across the adaptive-,
-# fault-, and host-plane PRs, the gids numbers must match the baseline
-# EXACTLY, not just within tolerance.
+# fault-, host-plane, and observability PRs, the gids numbers must match
+# the baseline EXACTLY, not just within tolerance (the fig13 gids run now
+# executes with an ENABLED tracer, so the exact-equality gate doubles as
+# the tracing bit-invisibility gate).  `--trace` additionally exports the
+# Perfetto trace-event artifact and the metrics snapshot.
 from __future__ import annotations
 
 import argparse
@@ -44,10 +47,11 @@ def check_baseline(payload: dict, baseline_path: str) -> None:
               f"{ref:.6f}{unit} ({baseline_path})", flush=True)
 
 
-def write_json_smoke(path: str, baseline: str | None = None) -> None:
+def write_json_smoke(path: str, baseline: str | None = None,
+                     trace: bool = False) -> None:
     from benchmarks import (fig7_sampling, fig13_e2e, fig14_overlap,
                             fig_adaptive, fig_faults, fig_hosts,
-                            fig_serve_load, fig_shard_scaling)
+                            fig_serve_load, fig_shard_scaling, fig_trace)
     payload = {
         "fig13_e2e": fig13_e2e.headline(),
         "fig14_overlap": fig14_overlap.headline(),
@@ -57,6 +61,8 @@ def write_json_smoke(path: str, baseline: str | None = None) -> None:
         "fig_adaptive": fig_adaptive.headline(),
         "fig_faults": fig_faults.headline(),
         "fig_hosts": fig_hosts.headline(),
+        "fig_trace": (fig_trace.export() if trace
+                      else fig_trace.headline()),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -147,6 +153,22 @@ def write_json_smoke(path: str, baseline: str | None = None) -> None:
         raise SystemExit(
             "HOST-PLANE REGRESSION: the 1-host cluster must degenerate to "
             "the single-host plane exactly — modelled prep floats diverged")
+    obs = payload["fig_trace"]
+    if not obs["tracer_bit_invisible"]:
+        raise SystemExit(
+            "OBSERVABILITY REGRESSION: an enabled tracer changed a priced "
+            "float, a sampled block, or a gathered byte — tracing must be "
+            "bit-invisible")
+    if not obs["spans_reconciled"]:
+        raise SystemExit(
+            "OBSERVABILITY REGRESSION: batch span trees no longer sum to "
+            "Batch.prep_time_s (max reconcile error "
+            f"{obs['max_reconcile_error']:.3e})")
+    if not obs["trace_valid"]:
+        raise SystemExit(
+            "OBSERVABILITY REGRESSION: exported trace failed schema "
+            f"validation ({obs['n_trace_problems']} problems) — spans must "
+            "be well-formed, nested, and monotone per track")
     if baseline:
         check_baseline(payload, baseline)
 
@@ -156,19 +178,24 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow E2E figures")
     ap.add_argument("--only", default=None)
-    ap.add_argument("--json", nargs="?", const="BENCH_pr9.json",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr10.json",
                     default=None, metavar="PATH",
                     help="smoke mode: write fig13/fig14/shard-scaling/"
-                         "fig7-sampling/serve-load/adaptive/fault/multi-host "
-                         "headline numbers to PATH (default BENCH_pr9.json) "
-                         "and exit")
+                         "fig7-sampling/serve-load/adaptive/fault/multi-host/"
+                         "trace headline numbers to PATH (default "
+                         "BENCH_pr10.json) and exit")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="with --json: fail if the gids preset's e2e "
                          "regressed vs this earlier BENCH_*.json")
+    ap.add_argument("--trace", action="store_true",
+                    help="with --json: also export the Perfetto trace "
+                         "(trace.json) and metrics snapshot (metrics.json) "
+                         "artifacts from a traced merged-window run")
     args = ap.parse_args()
 
     if args.json:
-        write_json_smoke(args.json, baseline=args.baseline)
+        write_json_smoke(args.json, baseline=args.baseline,
+                         trace=args.trace)
         return
 
     from benchmarks import (fig3_request_rates, fig7_sampling,
@@ -177,7 +204,7 @@ def main() -> None:
                             fig12_cache_size, fig13_e2e, fig14_overlap,
                             fig15_ladies, fig_adaptive, fig_faults,
                             fig_hosts, fig_serve_load, fig_shard_scaling,
-                            roofline, tables)
+                            fig_trace, roofline, tables)
     suites = [
         ("tables", tables.main),
         ("fig3", fig3_request_rates.main),
@@ -195,6 +222,7 @@ def main() -> None:
         ("fig15", fig15_ladies.main),
         ("fig_shard_scaling", fig_shard_scaling.main),
         ("fig_hosts", fig_hosts.main),
+        ("fig_trace", fig_trace.main),
         ("roofline", roofline.main),
     ]
     if args.quick:

@@ -44,6 +44,13 @@ a community-structured graph, printing per-host traffic (local rows vs
 remote 4KB lines over the wire) and the cut-edge ratio that explains the
 gap.
 
+The last section turns on the observability plane (src/repro/obs/): the
+same distributed loader runs 8 batches with a live `Tracer`, exports a
+Perfetto-loadable Chrome trace (trace.json), and prints the top-3 spans
+by priced time plus the modelled-vs-measured gap per pipeline stage from
+the `MetricsRegistry` — with tracing guaranteed bit-invisible to every
+number printed above.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
@@ -102,7 +109,7 @@ for placement in ("hash", "degree"):
         ssd=SAMSUNG_980PRO)
     prep = [loader.next_batch().prep_time_s for _ in range(10)]
     r = loader.store.last_plan
-    burst = loader.timeline.last_shard_burst
+    burst = loader.timeline.shard_burst
     print(f"[gids-sharded/{placement:6s}] prep {np.mean(prep)*1e3:6.2f} "
           f"ms/iter | rows/shard {r.shard_counts().tolist()} | "
           f"straggler shard {burst.straggler} "
@@ -133,7 +140,7 @@ for placement in ("degree", "adaptive"):
         loader.train_ids = hot_sets[epoch]
         for _ in range(32):
             prep += loader.next_batch().exposed_prep_s
-            imb_trace.append(loader.timeline.last_shard_burst.imbalance)
+            imb_trace.append(loader.timeline.shard_burst.imbalance)
     print(f"[rotation/{placement:8s}] exposed prep {prep*1e3:6.2f} ms "
           f"over 2 epochs | queue imbalance at epoch ends "
           f"{imb_trace[31]:.2f}, {imb_trace[63]:.2f}")
@@ -306,7 +313,7 @@ for placement, co in (("hash", False), ("metis-lite", True)):
         cache_lines=256, window_depth=4, seed=3), ssd=SAMSUNG_980PRO)
     prep = [loader.next_batch().exposed_prep_s for _ in range(10)]
     tier = loader.plane.store.tiers[-1]
-    burst = loader.timeline.last_shard_burst
+    burst = loader.timeline.shard_burst
     rows = loader.store.last_plan.shard_counts().tolist()
     mode = "co-partitioned" if co else "independent topo"
     print(f"[gids-hosts/{placement:10s}] exposed prep "
@@ -316,3 +323,48 @@ for placement, co in (("hash", False), ("metis-lite", True)):
     print(f"  per-host rows {rows} | remote lines over the wire "
           f"{list(burst.remote_lines)} | straggler host "
           f"{burst.straggler} (imbalance {burst.imbalance:.2f})")
+
+# -- observability plane: the whole pipeline as a span tree -------------------
+# Pass a Tracer and every priced stage becomes a nested span — plan_next
+# (per-hop sampling, edge-page reads), execute (merged gather, per-shard
+# storage drains, fault recovery sub-events) — in both virtual (priced)
+# and wall-clock time, with a MetricsRegistry accumulating counters/
+# histograms alongside.  Tracing is bit-invisible: the traced loader
+# below prices the exact same floats as the untraced ones above.  The
+# export is Chrome trace-event JSON — open trace.json in
+# https://ui.perfetto.dev and every batch, window, shard, and hop is a
+# track you can scrub.
+from repro.obs import Tracer
+
+tracer = Tracer()
+loader = GIDSDataLoader(cg, cg_feats, LoaderConfig(
+    batch_size=256, fanouts=(6, 4), data_plane="gids-hosts-merged",
+    n_hosts=4, placement="metis-lite", co_partition=True,
+    cache_lines=256, window_depth=4, seed=3),
+    ssd=SAMSUNG_980PRO, tracer=tracer)
+for _ in range(8):
+    loader.next_batch()
+tracer.write("trace.json")
+
+spans = sorted(
+    ((sp.name, sp.dur, sp.args) for root in tracer.roots()
+     for sp in root.walk() if sp.dur),
+    key=lambda s: -s[1])
+print(f"\n[obs] 8 traced batches -> trace.json "
+      f"({len(tracer.chrome_events())} events; load in ui.perfetto.dev)")
+print("  top-3 spans by priced time:")
+for name, dur, args in spans[:3]:
+    tags = " ".join(f"{k}={v}" for k, v in sorted(args.items())
+                    if isinstance(v, (int, str)))
+    print(f"    {name:14s} {dur*1e6:8.2f} us  {tags}")
+print("  modelled vs measured, per stage (virtual clock vs wall clock):")
+m = tracer.metrics
+for name in m.names():
+    if not name.startswith("modelled_vs_measured."):
+        continue
+    pts = m.series(name).points
+    modelled = sum(p["modelled_s"] for p in pts)
+    measured = sum(p["measured_s"] for p in pts)
+    print(f"    {name.split('.', 1)[1]:14s} modelled {modelled*1e6:8.2f} us"
+          f" | simulated in {measured*1e6:8.2f} us wall"
+          f" ({len(pts)} spans)")

@@ -201,6 +201,35 @@ class FaultedBurstResult(ShardedBurstResult):
     hedged_lines: int = 0
     hedge_saving_s: float = 0.0
 
+    def recovery_events(self) -> list[tuple[str, int, dict]]:
+        """The burst's recovery actions as ``(kind, shard, args)`` rows —
+        the tracer renders them as fault sub-events on the shard's track,
+        and the metrics registry counts them.  ``recovery_s`` in the args
+        is each shard's effective-minus-clean drain: the time the fault
+        actually added on that queue after recovery."""
+        events: list[tuple[str, int, dict]] = []
+
+        def extra_s(shard: int) -> float:
+            if shard < len(self.clean_per_shard_s):
+                return max(0.0, self.per_shard_s[shard]
+                           - self.clean_per_shard_s[shard])
+            return 0.0
+
+        for shard, lines in enumerate(self.retried_lines):
+            if lines:
+                events.append(("retry", shard, {
+                    "lines": int(lines), "recovery_s": extra_s(shard)}))
+        for shard, lines in enumerate(self.failed_over_lines):
+            if lines:
+                events.append(("failover", shard, {
+                    "lines": int(lines), "recovery_s": extra_s(shard)}))
+        if self.hedged_shard >= 0:
+            events.append(("hedge", int(self.hedged_shard), {
+                "lines": int(self.hedged_lines),
+                "replica": int(self.hedge_replica),
+                "saving_s": float(self.hedge_saving_s)}))
+        return events
+
 
 class FaultInjector:
     """Mutable fault-plane run state: ticks the schedule once per priced

@@ -50,6 +50,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import NULL_TRACER
+
 
 class TouchTable:
     """Mutable, checkpointed EMA of measured per-entry touches.
@@ -283,7 +285,7 @@ class ShardRebalancer:
     `ShardedStorageTier`: every priced burst the loader records the batch's
     touched nodes (`observe`) and ticks `step()`; every `interval` bursts
     the touch table folds and, if the most recent burst's measured queue
-    imbalance (`StorageTimeline.last_shard_burst`) exceeds `threshold`, the
+    imbalance (`StorageTimeline.shard_burst`) exceeds `threshold`, the
     policy proposes re-striping the measured-hot nodes round-robin.  The
     proposal commits ONLY when
 
@@ -323,6 +325,9 @@ class ShardRebalancer:
         # it for fault-enabled planes), a degraded shard triggers a DRAIN —
         # evacuate its measured-hot rows — ahead of the imbalance trigger
         self.monitor = None
+        # observability plane: commits emit instant events + commit-cost
+        # counters; the shared no-op tracer records nothing
+        self.tracer = NULL_TRACER
 
     def observe(self, node_ids: np.ndarray,
                 counts: np.ndarray | None = None) -> None:
@@ -344,7 +349,7 @@ class ShardRebalancer:
         if self._cooldown > 0:
             self._cooldown -= 1
             return
-        burst = self.timeline.last_shard_burst
+        burst = self.timeline.shard_burst
         if burst is None:
             return
         # health-driven drain first: a browning-out queue is a stronger
@@ -378,6 +383,14 @@ class ShardRebalancer:
             burst=self._bursts, n_moved=int(len(moved)), cost_s=float(cost),
             imbalance_before=float(burst.imbalance),
             predicted_saving_s=float(saving), reason=reason))
+        self.tracer.instant(
+            "migration", track="controller", cat="controller",
+            burst=self._bursts, n_moved=int(len(moved)),
+            cost_s=float(cost), imbalance_before=float(burst.imbalance),
+            reason=reason)
+        self.tracer.metrics.counter("controller.migrations").inc()
+        self.tracer.metrics.counter("controller.migration_cost_s").inc(
+            float(cost))
 
     @property
     def n_migrations(self) -> int:
@@ -427,6 +440,7 @@ class TopologyRefresher:
         self.cooldown = int(cooldown)
         self.debt = AmortizedCost(horizon)
         self.events: list[RefreshEvent] = []
+        self.tracer = NULL_TRACER
         self._bursts = 0
         self._cooldown = 0
 
@@ -453,6 +467,13 @@ class TopologyRefresher:
         self.events.append(RefreshEvent(
             burst=self._bursts, n_moved=int(n_moved), cost_s=float(cost),
             predicted_saving_s=float(saving)))
+        self.tracer.instant(
+            "topo_refresh", track="controller", cat="controller",
+            burst=self._bursts, n_moved=int(n_moved), cost_s=float(cost),
+            predicted_saving_s=float(saving))
+        self.tracer.metrics.counter("controller.refreshes").inc()
+        self.tracer.metrics.counter("controller.refresh_cost_s").inc(
+            float(cost))
 
     @property
     def n_refreshes(self) -> int:
@@ -493,6 +514,7 @@ class QuotaController:
         self.events: list[tuple[int, tuple[float, ...]]] = []
         self._windows = 0
         self._snap = self._counters()
+        self.tracer = NULL_TRACER
 
     def _counters(self) -> list[tuple[int, int]]:
         return [(c.stats.hits, c.stats.accesses)
@@ -523,6 +545,10 @@ class QuotaController:
         quotas = tuple(float(q) for q in target)
         self.tier.repartition(quotas)
         self.events.append((self._windows, quotas))
+        self.tracer.instant(
+            "quota_repartition", track="controller", cat="controller",
+            window=self._windows, quotas=list(quotas))
+        self.tracer.metrics.counter("controller.repartitions").inc()
         return True
 
     @property

@@ -328,6 +328,18 @@ class HostShardTier(ShardedStorageTier):
         primary = np.asarray(self.placement.shard_of(np.arange(n)), np.int16)
         return float(np.mean(self._requester != primary))
 
+    def record_metrics(self, registry) -> None:
+        """Fold the cluster's static placement telemetry into a
+        MetricsRegistry (repro.obs): host count, the placement's expected
+        cross-host request share, and the edge-cut fraction the metis-lite
+        partitioner minimizes.  Per-burst realized traffic lands in the
+        registry separately via `StorageTimeline._note_burst`."""
+        registry.gauge("hosts.n_hosts").set(self.n_hosts)
+        registry.gauge("hosts.placement_remote_fraction").set(
+            self.remote_fraction())
+        registry.gauge("hosts.cut_edge_fraction").set(
+            self.cut_edge_fraction())
+
     # -- checkpoint ------------------------------------------------------------
     def state_dict(self) -> dict:
         return {**super().state_dict(), "co_partition": self.co_partition}

@@ -47,7 +47,7 @@ carries its shard id through the `GatherPlan`, 4 KB-line coalescing is
 shard-local, and pricing completes each burst at the MAX over per-shard
 queue drains (`storage_sim.price_sharded_burst` — the loader wires the
 tier's per-shard `SSDSpec`s into `StorageTimeline.shard_specs`, and
-`timeline.last_shard_burst` reports the straggler shard and queue
+`timeline.shard_burst` reports the straggler shard and queue
 imbalance).  Features, blocks, and per-tier counts are bit-identical to the
 unsharded plane — only the storage pricing and shard telemetry change.
 
@@ -110,6 +110,7 @@ from typing import Iterator, Sequence
 import numpy as np
 
 from repro.graph.csr import CSRGraph
+from repro.obs import NULL_TRACER, attach_burst_spans
 from repro.sampling.neighbor import host_sample_blocks, SampledBlocks
 from repro.sampling.ladies import ladies_sample_blocks
 from .accumulator import DynamicAccessAccumulator, AccumulatorConfig
@@ -257,7 +258,8 @@ class GIDSDataLoader:
     def __init__(self, graph: CSRGraph, features: np.ndarray,
                  config: LoaderConfig | None = None,
                  ssd: SSDSpec = INTEL_OPTANE,
-                 train_ids: np.ndarray | None = None):
+                 train_ids: np.ndarray | None = None,
+                 tracer=None):
         self.graph = graph
         self.config = cfg = config or LoaderConfig()
         self.rng = np.random.default_rng(cfg.seed)
@@ -380,6 +382,27 @@ class GIDSDataLoader:
         self._requests_per_iter = 0
         self.prefetch = (PrefetchEngine(self, self.plane.prefetch_depth)
                          if self.plane.prefetch_depth > 0 else None)
+        # observability plane (repro.obs): off by default through the shared
+        # no-op tracer.  An enabled tracer observes stage timings, builds
+        # per-batch span trees, and receives burst/controller telemetry in
+        # its MetricsRegistry — but never feeds back into sampling or
+        # pricing, so features, blocks, and every priced float are
+        # bit-identical either way.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._batch_index = 0
+        self._window_index = 0
+        if self.tracer.enabled:
+            self.timeline.metrics = self.tracer.metrics
+            if self.topo is not None:
+                self.topo.timeline.metrics = self.tracer.metrics
+            if self.rebalancer is not None:
+                self.rebalancer.tracer = self.tracer
+            if self.topo_refresher is not None:
+                self.topo_refresher.tracer = self.tracer
+            if hasattr(backstop, "record_metrics"):
+                # static cluster telemetry (cut fraction, expected remote
+                # share) — computed once, it never changes without a commit
+                backstop.record_metrics(self.tracer.metrics)
 
     # -- sampling -------------------------------------------------------------
     def _sample_one(self) -> SampledBlocks:
@@ -392,7 +415,8 @@ class GIDSDataLoader:
                 # host sampler, plus per-hop priced TopologyGatherReports
                 from repro.sampling.tiered import tiered_sample_blocks
                 return tiered_sample_blocks(self.graph, self.topo, seeds,
-                                            cfg.fanouts, self.rng)
+                                            cfg.fanouts, self.rng,
+                                            tracer=self.tracer)
             return host_sample_blocks(self.graph, seeds, cfg.fanouts, self.rng)
         elif cfg.sampler == "ladies":
             return ladies_sample_blocks(self.graph, seeds,
@@ -443,25 +467,34 @@ class GIDSDataLoader:
     def plan_next(self) -> BatchPlan:
         """Stage 1: sampling + admit-side staging.  Refills the lookahead
         (sampling ahead, window admits), pops the next batch's blocks."""
-        depth = self._refill_lookahead()
-        snap, blocks = self._lookahead.popleft()
-        self._win_idx = max(0, self._win_idx - 1)
-        self._requests_per_iter = blocks.num_requests
+        with self.tracer.stage("plan_next") as sp:
+            depth = self._refill_lookahead()
+            snap, blocks = self._lookahead.popleft()
+            self._win_idx = max(0, self._win_idx - 1)
+            self._requests_per_iter = blocks.num_requests
+            sp.modelled(float(getattr(blocks, "sample_time_s", 0.0)))
         return BatchPlan(blocks=blocks, merge_depth=depth, snapshot=snap)
 
     def execute(self, plan: BatchPlan) -> Batch:
         """Stage 2: data movement + pricing.  Folds the tier stack over the
         plan's nodes, gathers the rows, prices the tier split."""
         blocks = plan.blocks
-        rows, report = self.store.gather(blocks.all_nodes)
-        self.accumulator.update(report.n_requests, report.redirected)
+        with self.tracer.stage("execute") as sp:
+            rows, report = self.store.gather(blocks.all_nodes)
+            self.accumulator.update(report.n_requests, report.redirected)
 
-        outstanding = self.accumulator.outstanding(blocks.num_requests)
-        t = self.plane.price(self.timeline, report, outstanding)
-        t += self._feedback_step(blocks.all_nodes, None)
-        # a topology plane priced the sampling stage when the blocks were
-        # drawn (plan_next); prep now covers the full Fig. 1 path
-        sample_s = float(getattr(blocks, "sample_time_s", 0.0))
+            outstanding = self.accumulator.outstanding(blocks.num_requests)
+            prev_burst = self.timeline.shard_burst
+            gather_s = self.plane.price(self.timeline, report, outstanding)
+            charge = self._feedback_step(blocks.all_nodes, None)
+            t = gather_s + charge
+            # a topology plane priced the sampling stage when the blocks were
+            # drawn (plan_next); prep now covers the full Fig. 1 path
+            sample_s = float(getattr(blocks, "sample_time_s", 0.0))
+            sp.modelled(t + sample_s)
+            if self.tracer.enabled:
+                self._trace_batch(blocks, report, gather_s, charge,
+                                  t + sample_s, prev_burst)
         return Batch(blocks=blocks, features=rows, report=report,
                      prep_time_s=t + sample_s, merge_depth=plan.merge_depth,
                      sample_time_s=sample_s)
@@ -476,16 +509,109 @@ class GIDSDataLoader:
         without touching a thing."""
         charge = 0.0
         if self.health is not None \
-                and self.timeline.last_shard_burst is not None:
+                and self.timeline.shard_burst is not None:
             # the monitor sees every priced burst's per-shard drains —
             # detection is a function of priced telemetry, nothing else
-            self.health.observe(self.timeline.last_shard_burst)
+            self.health.observe(self.timeline.shard_burst)
         if self.rebalancer is not None:
             self.rebalancer.observe(node_ids, counts)
             charge += self.rebalancer.step()
         if self.topo_refresher is not None:
             charge += self.topo_refresher.step()
         return charge
+
+    # -- span-tree construction (enabled tracer only) --------------------------
+    def _trace_hops(self, root, blocks) -> None:
+        for r in getattr(blocks, "hop_reports", ()):
+            hbm, host, sto = r.pages_by_tier
+            root.child(f"sample/hop{r.hop}", float(r.time_s), cat="sample",
+                       edge_reads=r.n_edge_reads, frontier=r.n_frontier,
+                       pages_hbm=hbm, pages_host=host, pages_storage=sto)
+
+    def _trace_batch(self, blocks, report, gather_s: float, charge: float,
+                     prep_s: float, prev_burst, window: int | None = None
+                     ) -> None:
+        """One per-batch virtual span tree: root duration is exactly
+        `Batch.prep_time_s`, sequential children partition it into the
+        per-hop sampling, the priced gather, and any feedback charge;
+        per-shard/per-host drains (and fault recovery sub-events) overlay
+        the gather span on their own tracks."""
+        tr = self.tracer
+        args = {"index": self._batch_index, "requests": report.n_requests}
+        if window is not None:
+            args["window"] = window
+        root = tr.batch("batch", track="pipeline", **args)
+        self._trace_hops(root, blocks)
+        g = root.child("gather", float(gather_s), cat="gather",
+                       n_storage=report.n_storage,
+                       n_host=report.n_host_hits, n_hbm=report.n_hbm_hits)
+        burst = self.timeline.shard_burst
+        if burst is not None and burst is not prev_burst:
+            attach_burst_spans(g, burst)
+        if charge:
+            root.child("feedback", float(charge), cat="feedback")
+        root.close(float(prep_s))
+        self._record_batch_metrics(blocks, gather_s, charge, prep_s)
+        self._batch_index += 1
+
+    def _trace_window(self, plans, window_report, gather_s: float,
+                      charge: float, burst_s: float, prev_burst) -> None:
+        """A merged window's spans: one window-level span (merged gather +
+        feedback, on its own track) whose duration is the window's total
+        priced burst, plus one batch tree per plan whose gather child is the
+        batch's amortized share of that burst."""
+        tr = self.tracer
+        win = tr.batch("window", track="window", cat="window",
+                       index=self._window_index, batches=len(plans),
+                       requests=window_report.window_requests,
+                       unique=window_report.n_unique)
+        g = win.child("merged_gather", float(gather_s), cat="gather",
+                      n_storage=window_report.n_storage,
+                      n_lines=window_report.n_storage_lines,
+                      n_host=window_report.n_host_hits,
+                      n_hbm=window_report.n_hbm_hits)
+        burst = self.timeline.shard_burst
+        if burst is not None and burst is not prev_burst:
+            attach_burst_spans(g, burst)
+        if charge:
+            win.child("feedback", float(charge), cat="feedback")
+        win.close(float(burst_s))
+        m = tr.metrics
+        if window_report.n_unique:
+            m.histogram("merged.dedup_factor").observe(
+                window_report.window_requests / window_report.n_unique)
+        if window_report.n_storage_lines:
+            m.histogram("merged.coalesce_factor").observe(
+                window_report.n_storage_unique
+                / window_report.n_storage_lines)
+        prep = burst_s / len(plans)
+        for p in plans:
+            sample_s = float(getattr(p.blocks, "sample_time_s", 0.0))
+            root = tr.batch("batch", track="pipeline",
+                            index=self._batch_index,
+                            window=self._window_index)
+            self._trace_hops(root, p.blocks)
+            root.child("gather_share", float(prep), cat="gather",
+                       window=self._window_index)
+            root.close(float(prep + sample_s))
+            self._record_batch_metrics(p.blocks, prep, 0.0, prep + sample_s)
+            self._batch_index += 1
+        self._window_index += 1
+
+    def _record_batch_metrics(self, blocks, gather_s: float, charge: float,
+                              prep_s: float) -> None:
+        """Fold one batch's per-stage priced seconds and the tier stack's
+        cumulative hit telemetry into the registry (benchmarks/roofline.py
+        decomposes the Fig. 1 prep path from exactly these counters)."""
+        from .tiers import record_tier_metrics
+        m = self.tracer.metrics
+        m.counter("pipeline.batches").inc()
+        m.counter("stage_s.sample").inc(
+            float(getattr(blocks, "sample_time_s", 0.0)))
+        m.counter("stage_s.gather").inc(float(gather_s))
+        m.counter("stage_s.feedback").inc(float(charge))
+        m.counter("stage_s.prep").inc(float(prep_s))
+        record_tier_metrics(self.store.tiers, m)
 
     # -- merged-window execution ------------------------------------------------
     def plan_window(self) -> list[BatchPlan]:
@@ -510,36 +636,44 @@ class GIDSDataLoader:
         Features are bit-identical to `execute()` run per plan; the reports
         (tier telemetry) and modelled times differ — that difference IS the
         modelled speedup of the §3.2 merge."""
-        merged = self.accumulator.merge(
-            [p.blocks.all_nodes for p in plans])
-        # retire the consumed window entries and stage the NEXT window's
-        # into the freed slots: the one merged access then consumes this
-        # window's reuse reservations (multiplicity decrements) while its
-        # fills pin lines the upcoming window will reuse
-        self.store.retire_window(len(plans))
-        self._sync_window()
-        rows_list, reports, window_report = self.store.gather_merged(merged)
-        # one telemetry update per window: the merged burst's unique split
-        # (what actually reached storage), not per-batch raw counts
-        self.accumulator.update(window_report.n_requests,
-                                window_report.redirected)
-        burst_s = self.timeline.price_merged_burst(window_report)
-        # the window is one priced burst, so it is one feedback tick: the
-        # unique request set (with window multiplicity) is what the plane
-        # measured, and any migration charge amortizes across the window's
-        # batches exactly like the burst itself
-        burst_s += self._feedback_step(merged.unique_nodes,
-                                       merged.batch_multiplicity())
-        prep = burst_s / len(plans)
-        # each batch's own priced sampling time rides on top of its
-        # amortized share of the window's feature burst
-        out = []
-        for p, rows, rep in zip(plans, rows_list, reports):
-            sample_s = float(getattr(p.blocks, "sample_time_s", 0.0))
-            out.append(Batch(blocks=p.blocks, features=rows, report=rep,
-                             prep_time_s=prep + sample_s,
-                             merge_depth=len(plans),
-                             sample_time_s=sample_s))
+        with self.tracer.stage("execute_window", n_plans=len(plans)) as sp:
+            merged = self.accumulator.merge(
+                [p.blocks.all_nodes for p in plans])
+            # retire the consumed window entries and stage the NEXT window's
+            # into the freed slots: the one merged access then consumes this
+            # window's reuse reservations (multiplicity decrements) while its
+            # fills pin lines the upcoming window will reuse
+            self.store.retire_window(len(plans))
+            self._sync_window()
+            rows_list, reports, window_report = \
+                self.store.gather_merged(merged)
+            # one telemetry update per window: the merged burst's unique
+            # split (what actually reached storage), not per-batch raw counts
+            self.accumulator.update(window_report.n_requests,
+                                    window_report.redirected)
+            prev_burst = self.timeline.shard_burst
+            gather_s = self.timeline.price_merged_burst(window_report)
+            # the window is one priced burst, so it is one feedback tick:
+            # the unique request set (with window multiplicity) is what the
+            # plane measured, and any migration charge amortizes across the
+            # window's batches exactly like the burst itself
+            charge = self._feedback_step(merged.unique_nodes,
+                                         merged.batch_multiplicity())
+            burst_s = gather_s + charge
+            sp.modelled(burst_s)
+            if self.tracer.enabled:
+                self._trace_window(plans, window_report, gather_s, charge,
+                                   burst_s, prev_burst)
+            prep = burst_s / len(plans)
+            # each batch's own priced sampling time rides on top of its
+            # amortized share of the window's feature burst
+            out = []
+            for p, rows, rep in zip(plans, rows_list, reports):
+                sample_s = float(getattr(p.blocks, "sample_time_s", 0.0))
+                out.append(Batch(blocks=p.blocks, features=rows, report=rep,
+                                 prep_time_s=prep + sample_s,
+                                 merge_depth=len(plans),
+                                 sample_time_s=sample_s))
         return out
 
     # -- iteration -------------------------------------------------------------
@@ -653,3 +787,11 @@ class GIDSDataLoader:
         elif self.health is not None:
             self.health.reset()
         self.accumulator.reset_telemetry()
+        # telemetry is epoch-local: a resumed run must never report the
+        # pre-restore run's last burst (or its spans / registry contents)
+        # as its own — pricing state above already reset, so clearing the
+        # observers cannot change any priced float
+        self.timeline.reset_telemetry()
+        if self.topo is not None:
+            self.topo.timeline.reset_telemetry()
+        self.tracer.reset()

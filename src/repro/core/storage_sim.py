@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import warnings
 
 import numpy as np
 
@@ -309,14 +310,21 @@ class StorageTimeline:
     With `shard_specs` set (the loader wires it from a `ShardedStorageTier`
     backstop) the storage portion is priced per shard — each shard drains
     its own queue at its own device and the batch completes at the max over
-    shards — and `last_shard_burst` keeps the most recent per-shard drain
+    shards — and `shard_burst` keeps the most recent per-shard drain
     telemetry (`ShardedBurstResult`: straggler shard, queue imbalance).
+    With a `MetricsRegistry` attached on `metrics` (the tracer wires one),
+    every priced burst also folds its telemetry into the registry —
+    observation only, never feeding back into pricing.
     """
 
     def __init__(self, spec: SSDSpec, n_ssd: int = 1, shard_specs=None):
         self.spec, self.n_ssd = spec, n_ssd
         self.shard_specs = tuple(shard_specs) if shard_specs else None
-        self.last_shard_burst: ShardedBurstResult | None = None
+        self._last_shard_burst: ShardedBurstResult | None = None
+        # observability plane (repro.obs): an attached MetricsRegistry
+        # receives per-burst telemetry via `_note_burst`; None records
+        # nothing (the default, and the zero-cost no-op tracer path)
+        self.metrics = None
         # multi-host plane (core/hosts.py): when the loader wires a tuple of
         # HostLinkSpec here, sharded bursts route through `price_host_burst`
         # — each shard is a host and remote lines pay its link; None keeps
@@ -327,6 +335,75 @@ class StorageTimeline:
         # are re-priced with retries / failover / hedging; None (the
         # default) leaves every price bit-identical to the fault-free plane
         self.injector = None
+
+    # -- burst telemetry ---------------------------------------------------
+    @property
+    def shard_burst(self) -> ShardedBurstResult | None:
+        """Most recent per-shard drain telemetry (supported accessor)."""
+        return self._last_shard_burst
+
+    @property
+    def host_burst(self) -> "HostBurstResult | None":
+        """The last burst, iff it was priced at host granularity."""
+        burst = self._last_shard_burst
+        return burst if isinstance(burst, HostBurstResult) else None
+
+    @property
+    def last_shard_burst(self) -> ShardedBurstResult | None:
+        warnings.warn(
+            "StorageTimeline.last_shard_burst is deprecated; read "
+            "shard_burst, or the per-burst telemetry in the attached "
+            "MetricsRegistry (repro.obs)", DeprecationWarning, stacklevel=2)
+        return self._last_shard_burst
+
+    @last_shard_burst.setter
+    def last_shard_burst(self, burst) -> None:
+        warnings.warn(
+            "StorageTimeline.last_shard_burst is deprecated; burst "
+            "telemetry is recorded by the pricing paths themselves",
+            DeprecationWarning, stacklevel=2)
+        self._last_shard_burst = burst
+
+    @property
+    def last_host_burst(self) -> "HostBurstResult | None":
+        warnings.warn(
+            "StorageTimeline.last_host_burst is deprecated; read "
+            "host_burst, or the hosts.* metrics in the attached "
+            "MetricsRegistry (repro.obs)", DeprecationWarning, stacklevel=2)
+        return self.host_burst
+
+    def reset_telemetry(self) -> None:
+        """Drop cross-burst telemetry (checkpoint restore calls this so a
+        resumed run never reports the pre-restore epoch's last burst)."""
+        self._last_shard_burst = None
+
+    def _note_burst(self, burst: ShardedBurstResult) -> None:
+        """Record one priced burst: keeps the `shard_burst` accessor fresh
+        and, when a registry is attached, folds imbalance / remote-traffic /
+        fault-recovery telemetry into it.  Observation only — pricing never
+        reads anything written here."""
+        self._last_shard_burst = burst
+        m = self.metrics
+        if m is None:
+            return
+        m.counter("storage.bursts").inc()
+        m.counter("storage.ssd_bytes").inc(burst.ssd_bytes)
+        m.histogram("storage.imbalance").observe(burst.imbalance)
+        m.gauge("storage.last_straggler").set(burst.straggler)
+        if isinstance(burst, HostBurstResult):
+            m.histogram("hosts.remote_fraction").observe(
+                burst.remote_fraction)
+            m.counter("hosts.remote_lines").inc(sum(burst.remote_lines))
+            m.counter("hosts.link_s").inc(sum(burst.link_s))
+        fault_src = getattr(burst, "local_burst", None) or burst
+        recovery = getattr(fault_src, "recovery_events", None)
+        if callable(recovery):
+            for kind, shard, args in recovery():
+                m.counter(f"faults.{kind}_events").inc()
+                if "lines" in args:
+                    m.counter(f"faults.{kind}_lines").inc(args["lines"])
+                if "saving_s" in args:
+                    m.counter("faults.hedge_saving_s").inc(args["saving_s"])
 
     def _fault_adjust(self, burst: ShardedBurstResult,
                       bytes_per_row: int,
@@ -472,7 +549,7 @@ class StorageTimeline:
                                             report.shard_rows, shard_lines,
                                             bpr, io_bytes)
                 burst = self._fault_adjust(burst, bpr, io_bytes)
-            self.last_shard_burst = burst
+            self._note_burst(burst)
             t_ssd, ssd_bytes = burst.elapsed_s, burst.ssd_bytes
         else:
             lines = getattr(report, "n_storage_lines", n_rows)
@@ -490,7 +567,7 @@ class StorageTimeline:
                     ShardedBurstResult((t_ssd,), (n_rows,), (int(lines),),
                                        (self.spec.name,), int(ssd_bytes)),
                     bpr, io_bytes)
-                self.last_shard_burst = burst
+                self._note_burst(burst)
                 t_ssd, ssd_bytes = burst.elapsed_s, burst.ssd_bytes
         n_host, n_hbm = report.n_host_hits, report.n_hbm_hits
         t_host = n_host * bpr / HOST_DRAM_BW if n_host else 0.0
@@ -530,7 +607,7 @@ class StorageTimeline:
                 # same injector seam as the feature plane's merged burst
                 # (an empty schedule returns the burst untouched)
                 burst = self._fault_adjust(burst, io_bytes, io_bytes)
-                self.last_shard_burst = burst
+                self._note_burst(burst)
                 t_sto = burst.elapsed_s
             else:
                 t_sto = model_burst(self.spec, n_sto, self.n_ssd).elapsed_s
@@ -542,7 +619,7 @@ class StorageTimeline:
                                            (self.spec.name,),
                                            n_sto * io_bytes),
                         io_bytes, io_bytes)
-                    self.last_shard_burst = burst
+                    self._note_burst(burst)
                     t_sto = burst.elapsed_s
         t_pcie = (n_host + n_sto) * io_bytes / PCIE_GEN4_BW
         return TOPO_HOP_LAUNCH_S + max(t_hbm, t_sto, t_pcie)
@@ -613,7 +690,7 @@ class StorageTimeline:
                                    (self.spec.name,),
                                    int(n_storage * feat_bytes)),
                 feat_bytes)
-            self.last_shard_burst = burst
+            self._note_burst(burst)
             t_ssd = burst.elapsed_s
         t_host = n_host * feat_bytes / HOST_DRAM_BW if n_host else 0.0
         t_hbm = n_hbm * feat_bytes / HBM_BW if n_hbm else 0.0
@@ -657,7 +734,7 @@ class StorageTimeline:
                                         feat_bytes,
                                         shard_outstanding=shard_out)
             burst = self._fault_adjust(burst, feat_bytes)
-        self.last_shard_burst = burst
+        self._note_burst(burst)
         t_host = n_host * feat_bytes / HOST_DRAM_BW if n_host else 0.0
         t_hbm = n_hbm * feat_bytes / HBM_BW if n_hbm else 0.0
         t_pcie = (total + n_host) * feat_bytes / PCIE_GEN4_BW

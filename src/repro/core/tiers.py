@@ -752,3 +752,23 @@ def build_plan_merged(tiers: Sequence[Tier], unique_nodes: np.ndarray,
     """Dedup-aware fold for a merged window — `build_plan` over the unique
     set with the window multiplicity.  Same partition guarantee."""
     return build_plan(tiers, unique_nodes, multiplicity=multiplicity)
+
+
+def record_tier_metrics(tiers: Sequence[Tier], registry) -> None:
+    """Fold the tier stack's cumulative cache telemetry into a
+    MetricsRegistry (repro.obs): one ``tier.<name>.hit_ratio`` gauge per
+    cache-bearing tier, per-tenant gauges for a partitioned tier.  The
+    registry replaces ad-hoc ``loader.store.cache.stats`` spelunking —
+    observation only, nothing here feeds back into probe or admission."""
+    for tier in tiers:
+        name = getattr(tier, "name", type(tier).__name__)
+        stats = getattr(getattr(tier, "cache", None), "stats", None)
+        if stats is not None and stats.accesses:
+            registry.gauge(f"tier.{name}.hit_ratio").set(stats.hit_ratio)
+            registry.gauge(f"tier.{name}.accesses").set(stats.accesses)
+            registry.gauge(f"tier.{name}.evictions").set(stats.evictions)
+        ratios = getattr(tier, "hit_ratios", None)
+        if callable(ratios):
+            for tenant, ratio in enumerate(ratios()):
+                registry.gauge(
+                    f"tier.{name}.tenant{tenant}.hit_ratio").set(ratio)

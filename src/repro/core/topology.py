@@ -385,8 +385,19 @@ class TieredTopologyStore:
             hop=hop, n_frontier=int(n_frontier), n_edge_reads=len(pos),
             pages_by_tier=pages_by_tier, reads_by_tier=reads_by_tier,
             shard_pages=shard_pages)
-        return dataclasses.replace(
+        report = dataclasses.replace(
             report, time_s=self.timeline.price_topology_hop(report))
+        m = self.timeline.metrics
+        if m is not None:
+            # observability plane: per-hop edge-page telemetry (cumulative
+            # counters the per-tier hit-ratio gauges are derived from)
+            m.counter("topo.hops").inc()
+            m.counter("topo.edge_reads").inc(report.n_edge_reads)
+            for tier_name, count in zip(("hbm", "host", "storage"),
+                                        pages_by_tier):
+                m.counter(f"topo.pages_{tier_name}").inc(count)
+            m.counter("topo.sample_s").inc(report.time_s)
+        return report
 
     # -- online re-admission (the adaptive policy's refresh loop) --------------
     def plan_refresh(self):

@@ -40,7 +40,13 @@ class TieredSampledBlocks(SampledBlocks):
 
 def tiered_sample_blocks(graph: CSRGraph, topo: TieredTopologyStore,
                          seeds: np.ndarray, fanouts: Sequence[int],
-                         rng: np.random.Generator) -> TieredSampledBlocks:
+                         rng: np.random.Generator,
+                         tracer=None) -> TieredSampledBlocks:
+    """`tracer` (repro.obs) wall-clocks the whole sampling sweep and
+    attaches the summed priced hop time — observation only, the sampled
+    blocks and the per-hop reports are identical with or without it."""
+    if tracer is None:
+        from repro.obs import NULL_TRACER as tracer  # noqa: N811
     reports: list[TopologyGatherReport] = []
 
     def price_hop(hop: int, read_pos: np.ndarray, n_frontier: int) -> None:
@@ -50,9 +56,12 @@ def tiered_sample_blocks(graph: CSRGraph, topo: TieredTopologyStore,
         reports.append(topo.hop_report(read_pos, hop=hop,
                                        n_frontier=n_frontier))
 
-    hop_nodes, all_nodes, n_req = run_sample_hops(graph, seeds, fanouts,
-                                                  rng, hop_cb=price_hop)
+    with tracer.stage("sample", cat="sample", seeds=len(seeds)) as sp:
+        hop_nodes, all_nodes, n_req = run_sample_hops(graph, seeds, fanouts,
+                                                      rng, hop_cb=price_hop)
+        sample_time_s = float(sum(r.time_s for r in reports))
+        sp.modelled(sample_time_s)
     return TieredSampledBlocks(
         seeds=seeds, hop_nodes=hop_nodes, all_nodes=all_nodes,
         num_requests=n_req, hop_reports=reports,
-        sample_time_s=float(sum(r.time_s for r in reports)))
+        sample_time_s=sample_time_s)

@@ -47,8 +47,9 @@ from repro.core.accumulator import (DeadlineWindowConfig,
                                     DeadlineWindowPolicy, merge_window)
 from repro.core.dataplane import DataPlane, DataPlaneSpec
 from repro.core.storage_sim import SAMSUNG_980PRO, SSDSpec, StorageTimeline
-from repro.core.tiers import TenantCacheTier
+from repro.core.tiers import TenantCacheTier, record_tier_metrics
 from repro.core.topology import TieredTopologyStore
+from repro.obs import NULL_TRACER, attach_burst_spans
 from repro.sampling.neighbor import host_sample_blocks
 from repro.sampling.tiered import tiered_sample_blocks
 
@@ -368,11 +369,14 @@ class GNNServeEngine:
                  ssd: SSDSpec = SAMSUNG_980PRO,
                  plane: DataPlane | None = None,
                  topo: TieredTopologyStore | None = None,
-                 model=None, params=None):
+                 model=None, params=None, tracer=None):
         self.graph = graph
         self.features = np.asarray(features)
         self.config = cfg = config or GNNServeConfig()
         self.ssd = ssd
+        # observation only — an enabled tracer records spans/metrics but the
+        # priced results are bit-identical to a NULL_TRACER run
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         if plane is None:
             plane = DataPlaneSpec.resolve(cfg.data_plane).build(
                 graph, self.features,
@@ -414,15 +418,21 @@ class GNNServeEngine:
             None)
         self.quota_controller = self._make_quota_controller()
         self._sample_cache: dict = {}
+        if self.tracer.enabled:
+            self.timeline.metrics = self.tracer.metrics
+            if self.topo is not None:
+                self.topo.timeline.metrics = self.tracer.metrics
 
     def _make_quota_controller(self):
         if not (self.config.adaptive_quotas and self._tenant_tier is not None
                 and self._tenant_tier.tenants > 1):
             return None
         from repro.core.feedback import QuotaController
-        return QuotaController(self._tenant_tier,
-                               interval=self.config.quota_interval,
-                               floor=self.config.quota_floor)
+        qc = QuotaController(self._tenant_tier,
+                             interval=self.config.quota_interval,
+                             floor=self.config.quota_floor)
+        qc.tracer = self.tracer
+        return qc
 
     # -- stages ----------------------------------------------------------------
     def _sample(self, req: ServeRequest):
@@ -492,6 +502,21 @@ class GNNServeEngine:
 
     # -- main loop -------------------------------------------------------------
     def run(self, requests: Sequence[ServeRequest]) -> ServeResult:
+        """Serve an arrival-time-stamped stream to completion — see `_run`
+        for the scheduling rules.  With an enabled tracer the run is
+        wall-clocked as one ``serve_run`` stage (modelled time = the priced
+        makespan), every retired request gets a virtual span on its
+        tenant's track, and the serve counters land in the registry."""
+        with self.tracer.stage("serve_run", cat="serve",
+                               n_requests=len(requests)) as sp:
+            result = self._run(requests)
+            sp.modelled(result.makespan_s)
+        if self.tracer.enabled:
+            self._trace_requests(result)
+            self._record_serve_metrics(result)
+        return result
+
+    def _run(self, requests: Sequence[ServeRequest]) -> ServeResult:
         """Serve an arrival-time-stamped stream to completion.
 
         Windows are TENANT-PURE: each tenant has its own pending queue and
@@ -583,6 +608,8 @@ class GNNServeEngine:
     def _execute(self, decision, records, windows) -> float:
         staged = decision.staged
         level = self.brownout.level if self.brownout is not None else 0
+        prev_burst = (self.timeline.shard_burst if self.tracer.enabled
+                      else None)
         samples = [self._sample(r) for r in staged]
         # service cannot start before the last staged sample lands —
         # sampling is admission-time GPU work overlapping window formation
@@ -658,9 +685,13 @@ class GNNServeEngine:
             if gathered_unique is not None:
                 for n in gathered_unique:
                     self._recent[int(n)] = start
-            self.brownout.observe(
+            new_level = self.brownout.observe(
                 burst_s,
                 len(gathered_unique) if gathered_unique is not None else 0)
+            if new_level != level:
+                self.tracer.instant(
+                    "brownout", track="controller", cat="controller", t0=t,
+                    level=new_level, pressure=float(self.brownout.pressure))
         service_s = t - start
         # the policy's estimate absorbs the sampling-completion push-out of
         # `start` past the batcher's intended open time, so close_by leaves
@@ -670,7 +701,89 @@ class GNNServeEngine:
             start_s=start, n_requests=len(staged), burst_s=burst_s,
             service_s=service_s, dedup_factor=dedup,
             hit_cap=decision.hit_cap))
+        if self.tracer.enabled:
+            self._trace_window(windows[-1], len(windows) - 1, level,
+                               forward_total_s, dedup, prev_burst)
         return t
+
+    # -- observability ---------------------------------------------------------
+    def _trace_window(self, w: WindowTrace, index: int, level: int,
+                      forward_total_s: float, dedup: float,
+                      prev_burst) -> None:
+        """Virtual span for one served window on the ``windows`` track:
+        gather burst (with per-shard / fault overlays when the serve
+        timeline produced a fresh sharded burst) then the batched forward.
+        Window starts are monotone in service order, so the track lays out
+        without any cursor fixups."""
+        root = self.tracer.batch(
+            "serve_window", track="windows", cat="window", t0=w.start_s,
+            index=index, n_requests=w.n_requests, level=level,
+            hit_cap=w.hit_cap)
+        g = root.child("gather", w.burst_s, cat="gather",
+                       dedup_factor=float(dedup))
+        burst = self.timeline.shard_burst
+        if burst is not None and burst is not prev_burst:
+            attach_burst_spans(g, burst)
+        root.child("forward", forward_total_s, cat="forward")
+        root.close(w.service_s)
+        m = self.tracer.metrics
+        m.histogram("serve.window_size").observe(w.n_requests)
+        m.histogram("serve.dedup_factor").observe(float(dedup))
+        m.counter("serve.burst_s").inc(w.burst_s)
+        m.counter("serve.forward_s").inc(forward_total_s)
+
+    def _trace_requests(self, result: ServeResult) -> None:
+        """One virtual span per retired request on its tenant's track,
+        emitted AFTER the run in arrival order (demotion can serve requests
+        out of arrival order, and track starts must be monotone).  The
+        sequential children — queue wait, the window's gather burst, the
+        window's batched forward — partition the end-to-end latency; the
+        request's own shares ride along as annotations and its sampling
+        overlays the queue wait as a parallel child."""
+        window_of = {}
+        for w in result.windows:
+            window_of.setdefault(w.start_s, w)
+        for rec in sorted(result.records,
+                          key=lambda r: (r.arrival_s, r.rid)):
+            track = f"tenant{rec.tenant}"
+            if rec.rejected:
+                self.tracer.instant("shed", track=track, cat="serve",
+                                    t0=rec.arrival_s, rid=rec.rid,
+                                    reason=rec.shed_reason)
+                continue
+            w = window_of.get(rec.start_s)
+            burst_s = w.burst_s if w is not None else 0.0
+            forward_s = (w.service_s - w.burst_s if w is not None
+                         else rec.forward_s)
+            root = self.tracer.batch(
+                "request", track=track, cat="request", t0=rec.arrival_s,
+                rid=rec.rid, tenant=rec.tenant, window_size=rec.window_size,
+                n_rows=rec.n_rows, level=rec.degraded_level, stale=rec.stale,
+                deadline_met=rec.deadline_met)
+            root.child("queue_wait", rec.queue_wait_s, cat="serve")
+            root.child("gather", burst_s, cat="gather",
+                       share_s=rec.gather_s)
+            root.child("forward", forward_s, cat="forward",
+                       share_s=rec.forward_s)
+            if rec.sample_s > 0.0:
+                root.child("sample", rec.sample_s, cat="sample",
+                           parallel=True)
+            root.close(rec.latency_s)
+
+    def _record_serve_metrics(self, result: ServeResult) -> None:
+        m = self.tracer.metrics
+        m.counter("serve.requests").inc(len(result.records))
+        m.counter("serve.windows").inc(len(result.windows))
+        m.counter("serve.shed_expired").inc(result.n_shed_expired)
+        m.counter("serve.shed_brownout").inc(result.n_shed_brownout)
+        m.counter("serve.deadline_missed").inc(result.n_deadline_missed)
+        m.counter("serve.stale_served").inc(result.n_stale_served)
+        m.gauge("serve.attainment").set(result.attainment())
+        for rec in result.served:
+            m.histogram("serve.latency_s").observe(rec.latency_s)
+        for t, ratio in result.tenant_hit_ratios.items():
+            m.gauge(f"serve.tenant{t}.hit_ratio").set(ratio)
+        record_tier_metrics(self.store.tiers, m)
 
     def reset(self) -> None:
         """Fresh caches, fresh RNG, fresh service estimate — a reset engine
@@ -689,3 +802,7 @@ class GNNServeEngine:
             self.brownout.reset()
         self._recent.clear()
         self._shed_tick = 0
+        # telemetry restarts with the replay: stale spans/metrics from the
+        # previous stream would otherwise leak into the next export
+        self.tracer.reset()
+        self.timeline.reset_telemetry()

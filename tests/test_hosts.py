@@ -298,7 +298,7 @@ def test_host_plane_wires_timeline_and_reports(graph_and_feats):
     assert dl.timeline.host_specs is not None
     assert len(dl.timeline.host_specs) == 4
     _batches(dl)
-    burst = dl.timeline.last_shard_burst
+    burst = dl.timeline.shard_burst
     assert isinstance(burst, HostBurstResult)
     assert len(burst.link_s) == 4
     assert burst.remote_fraction > 0.0

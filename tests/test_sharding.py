@@ -247,7 +247,7 @@ def test_loader_surfaces_straggler_telemetry(graph_and_feats):
     dl = _mk(g, feats, "gids-merged-sharded", n_shards=4)
     for _ in range(6):
         b = dl.next_batch()
-    burst = dl.timeline.last_shard_burst
+    burst = dl.timeline.shard_burst
     assert burst is not None and burst.n_shards == 4
     assert 0 <= burst.straggler < 4
     assert burst.imbalance >= 1.0

@@ -203,7 +203,7 @@ def test_topo_sharded_pages_and_pricing(graph):
     assert len(r4.shard_pages) == 4
     assert sum(r4.shard_pages) == r4.n_storage_ios
     assert r4.time_s <= r1.time_s + 1e-12
-    assert topo4.timeline.last_shard_burst is not None
+    assert topo4.timeline.shard_burst is not None
 
 
 def test_topo_sharded_rejects_double_device_modelling(graph):
